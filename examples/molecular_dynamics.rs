@@ -1,0 +1,52 @@
+//! Experiment 1 end-to-end: normal-mode analysis on the synthetic MD
+//! workload (paper §3.1), using the paper's inverse-pencil trick — solve
+//! `B x = μ A x` for the *largest* μ, recover the low-frequency modes as
+//! ω_i = sqrt(1/μ_i).
+//!
+//! ```bash
+//! cargo run --release --example molecular_dynamics -- [n] [s]
+//! ```
+
+use gsyeig::solver::accuracy::Accuracy;
+use gsyeig::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant};
+use gsyeig::workloads::MdWorkload;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(600);
+    let mut workload = MdWorkload::with_n(n);
+    if let Some(s) = args.get(2).and_then(|a| a.parse().ok()) {
+        workload.s = s;
+    }
+    let s = workload.s;
+    println!("MD/NMA workload: n = {n} internal coordinates, {s} lowest modes (≈1%)\n");
+
+    let (inverse_problem, which, _) = workload.solver_problem();
+    let (forward_problem, truth) = workload.problem();
+
+    // the paper's choice for this application: Krylov on the inverse pencil
+    let cfg = SolverConfig::new(Variant::KE, s, which);
+    let solver = GsyeigSolver::native(cfg);
+    let t0 = std::time::Instant::now();
+    let sol = solver.solve(inverse_problem);
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("variant KE on the inverse pencil (B, A), largest end:");
+    for (stage, d) in sol.stages.stages() {
+        println!("  {stage:>6}: {:8.3}s", d.as_secs_f64());
+    }
+    println!("  total : {wall:8.3}s   Lanczos matvecs: {}\n", sol.matvecs);
+
+    // recover vibrational frequencies: λ = 1/μ, ω = sqrt(λ)
+    println!("{:>6} {:>14} {:>14} {:>12}", "mode", "λ computed", "λ true", "ω = sqrt λ");
+    for i in 0..s {
+        let lam = 1.0 / sol.eigenvalues[i];
+        println!("{:>6} {:>14.8} {:>14.8} {:>12.6}", i, lam, truth[i], lam.sqrt());
+        assert!((lam - truth[i]).abs() / truth[i] < 1e-6, "mode {i} off");
+    }
+
+    // accuracy in the inverse metric the solver worked in
+    let acc = Accuracy::measure(&forward_problem.b, &forward_problem.a, &sol.eigenvalues, &sol.x);
+    println!("\nresidual {:.2E}   A-orthogonality {:.2E}", acc.residual, acc.orthogonality);
+    println!("low-frequency modes recovered ✓");
+}

@@ -1,0 +1,84 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) graphs -> HLO text artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the text
+through ``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU
+client.  HLO *text* (not a serialized proto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Outputs, per graph g and size n:
+    artifacts/<g>_n<n>.hlo.txt
+plus a TSV manifest (``artifacts/manifest.tsv``) the Rust registry parses
+(no JSON dependency on the Rust side):
+
+    name<TAB>n<TAB>file<TAB>in_shapes(semicolon-sep)<TAB>out_arity
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --sizes 256,1000,1724
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_str(spec) -> str:
+    return "x".join(str(d) for d in spec.shape) if spec.shape else "scalar"
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--sizes",
+        default="256,1000,1724",
+        help="comma-separated problem sizes n to lower each graph for",
+    )
+    p.add_argument(
+        "--graphs",
+        default=",".join(model.GRAPHS),
+        help="comma-separated subset of graphs to lower",
+    )
+    args = p.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    names = [g for g in args.graphs.split(",") if g]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_rows = []
+    for name in names:
+        fn, shapes_of = model.GRAPHS[name]
+        for n in sizes:
+            specs = shapes_of(n)
+            text = to_hlo_text(fn, specs)
+            fname = f"{name}_n{n}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            n_out = len(jax.eval_shape(fn, *specs))
+            ins = ";".join(shape_str(s) for s in specs)
+            manifest_rows.append(f"{name}\t{n}\t{fname}\t{ins}\t{n_out}")
+            print(f"lowered {name:<24s} n={n:<6d} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"wrote manifest with {len(manifest_rows)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

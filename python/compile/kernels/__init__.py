@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the GSYEIG stack.
+
+Each kernel is written for TPU-style tiling (MXU-aligned 128x128 blocks,
+VMEM-resident operands) but lowered with ``interpret=True`` so the HLO can
+execute on the CPU PJRT client used by the Rust runtime.  ``ref.py`` holds the
+pure-jnp oracles the pytest suite checks against.
+"""
+
+from . import gemm, ref, symv
+
+__all__ = ["gemm", "ref", "symv"]

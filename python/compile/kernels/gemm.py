@@ -1,0 +1,70 @@
+"""Tiled matrix-matrix product (DGEMM analog) as a Pallas kernel.
+
+The BLAS-3 backbone of the transform stages (GS2 panels, the back-transforms
+TD3/TT4, the Q1*Q2 accumulation of variant TT).  On a TPU the (i, j, k) grid
+streams MXU-shaped tiles with the k axis innermost so each (i, j) output tile
+is accumulated in VMEM; lowered here with ``interpret=True``.
+
+VMEM footprint per grid step (BM=BN=BK=128, f64):
+  A tile + B tile + C tile = 3 * 128*128*8 B = 384 KiB  << 16 MiB,
+leaving headroom for double-buffering both input streams.  MXU utilisation
+estimate for the f64->f32x2 path is recorded in EXPERIMENTS.md section Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def gemm(a, b, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """C = A @ B; shapes must divide into the tile grid."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(a, b)
+
+
+def gemm_padded(a, b, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """gemm for arbitrary shapes: zero-pad to the tile grid, crop the result."""
+    m, k = a.shape
+    _, n = b.shape
+    mp = _next_multiple(m, bm)
+    np_ = _next_multiple(n, bn)
+    kp = _next_multiple(k, bk)
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    c = gemm(a, b, bm=min(bm, mp), bn=min(bn, np_), bk=min(bk, kp))
+    return c[:m, :n]
+
+
+def _next_multiple(n: int, b: int) -> int:
+    return ((n + b - 1) // b) * b

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model graphs.
+
+These are the ground truth the pytest suite (and hypothesis sweeps) compare
+against.  They intentionally use nothing but ``jnp`` primitives so they lower
+to straightforward HLO with no Pallas involvement.
+"""
+
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+
+def symv_ref(a, x):
+    """y = A @ x for symmetric A (dense storage)."""
+    return a @ x
+
+
+def gemm_ref(a, b):
+    """C = A @ B."""
+    return a @ b
+
+
+def cholesky_ref(b):
+    """Upper factor U with B = U^T U (LAPACK uplo='U' convention)."""
+    return jnp.linalg.cholesky(b).T
+
+
+def build_c_ref(a, u):
+    """C = U^{-T} A U^{-1} (GS2, two-triangular-solve construction)."""
+    w = solve_triangular(u, a, trans="T", lower=False)  # U^T W = A
+    c = solve_triangular(u, w.T, trans="T", lower=False)  # U^T C^T = W^T
+    return 0.5 * (c + c.T)
+
+
+def matvec_explicit_ref(c, w):
+    """z = C w (KE1)."""
+    return c @ w
+
+
+def matvec_implicit_ref(a, u, w):
+    """z = U^{-T} (A (U^{-1} w)) (KI1-3)."""
+    w1 = solve_triangular(u, w, lower=False)          # U w1 = w
+    w2 = a @ w1                                        # symv
+    return solve_triangular(u, w2, trans="T", lower=False)
+
+
+def back_transform_ref(u, y):
+    """X = U^{-1} Y (BT1)."""
+    return solve_triangular(u, y, lower=False)

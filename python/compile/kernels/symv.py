@@ -1,0 +1,93 @@
+"""Tiled symmetric matrix-vector product (DSYMV analog) as a Pallas kernel.
+
+This is the hot-spot of the Krylov-subspace variants (operations KE1 and KI2
+in the paper): one ``z := C w`` per Lanczos iteration, 2n^2 flops, memory
+bound.  On a real TPU the kernel streams MXU-aligned (BM x BK) tiles of the
+symmetric matrix HBM->VMEM while the (BK,1) slice of the vector stays
+VMEM-resident; the BlockSpec below expresses exactly that schedule.  On this
+testbed it is lowered with ``interpret=True`` (see DESIGN.md
+section Hardware-Adaptation).
+
+The matrix is held in full dense storage: the GPU libraries the paper
+benchmarks (CUBLAS DSYMV) also read the full square array, and full storage
+keeps the HBM->VMEM tile schedule regular (no triangular index arithmetic in
+the inner loop, which would defeat the MXU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile.  VMEM footprint per step:
+#   A tile  BM*BK*8B = 128*128*8 = 128 KiB
+#   x tile  BK*8B, y tile BM*8B  (negligible)
+# comfortably below the ~16 MiB VMEM budget, leaving room for
+# double-buffering the A stream.
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+
+
+def _symv_kernel(a_ref, x_ref, o_ref):
+    """One (i, k) grid step: o[i] += A[i, k] @ x[k].
+
+    The k axis is the fastest-varying grid dimension, so each output tile is
+    initialised on its first visit and accumulated in place afterwards —
+    the canonical Pallas reduction idiom.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ x_ref[...]
+
+
+def symv(a, x, *, bm: int = DEFAULT_BM, bk: int = DEFAULT_BK):
+    """y = A @ x with A (n, n) symmetric, x (n,).  n must divide into tiles."""
+    n = a.shape[0]
+    assert a.shape == (n, n) and x.shape == (n,), (a.shape, x.shape)
+    bm = min(bm, n)
+    bk = min(bk, n)
+    assert n % bm == 0 and n % bk == 0, (n, bm, bk)
+    x2 = x.reshape(n, 1)
+    grid = (n // bm, n // bk)
+    out = pl.pallas_call(
+        _symv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, 1), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), a.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(a, x2)
+    return out.reshape(n)
+
+
+def symv_padded(a, x, *, bm: int = DEFAULT_BM, bk: int = DEFAULT_BK):
+    """symv for arbitrary n: zero-pads to the tile grid, then crops.
+
+    Zero padding is exact for a mat-vec (padded rows/cols contribute 0), so
+    this is what the L2 graphs use for the paper's non-round problem sizes
+    (n = 9 997, 17 243, and our scaled 1 000 / 1 724).
+    """
+    n = a.shape[0]
+    npad = _next_multiple(n, max(bm, bk))
+    if npad != n:
+        a = jnp.pad(a, ((0, npad - n), (0, npad - n)))
+        x = jnp.pad(x, (0, npad - n))
+    y = symv(a, x, bm=min(bm, npad), bk=min(bk, npad))
+    return y[:n]
+
+
+def _next_multiple(n: int, b: int) -> int:
+    return ((n + b - 1) // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def symv_jit(a, x, *, bm: int = DEFAULT_BM, bk: int = DEFAULT_BK):
+    return symv_padded(a, x, bm=bm, bk=bk)

@@ -1,0 +1,244 @@
+"""Layer-2 JAX compute graphs for the GSYEIG solver stages.
+
+Each function here is one *stage* of the paper's Table 1/5 pipeline, written
+as a pure jax function (calling the Layer-1 Pallas kernels for the mat-vec /
+matmul hot-spots) and AOT-lowered by ``aot.py`` to HLO text the Rust runtime
+executes through PJRT.  These graphs play the role the MAGMA/CUBLAS GPU
+kernels play in Section 5 of the paper: the accelerated implementations of
+GS1, GS2, KE1, KI1-3 and BT1.
+
+Everything is float64 (the paper's experiments are double precision).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import symv as symv_kernel
+from .kernels import gemm as gemm_kernel
+
+jax.config.update("jax_enable_x64", True)
+
+
+# --------------------------------------------------------------------------
+# In-graph triangular solve.
+#
+# jax.scipy.linalg.solve_triangular lowers to a `lapack_dtrsm_ffi`
+# custom-call on CPU, which the Rust runtime's xla_extension 0.5.1 cannot
+# execute (same story as jnp.linalg.cholesky).  This is a from-scratch
+# row-substitution solve as a lax.fori_loop of masked vector-matrix
+# products — pure HLO (while + dynamic slices + dots), runs everywhere.
+# 2n²·k flops for an (n, k) right-hand side, like DTRSM.
+# --------------------------------------------------------------------------
+def solve_upper(u, b, trans=False):
+    """X with U X = B (trans=False) or Uᵀ X = B (trans=True); U upper."""
+    u = jnp.asarray(u)  # dynamic indexing below needs jax arrays even when
+    b = jnp.asarray(b)  # callers (tests) pass plain numpy
+    vec = b.ndim == 1
+    if vec:
+        b = b[:, None]
+    n = u.shape[0]
+    idx = jnp.arange(n)
+
+    def body(t, x):
+        j = (n - 1 - t) if not trans else t
+        if not trans:
+            # row j of U, entries right of the diagonal
+            row = jnp.where(idx > j, u[j, :], 0.0)
+        else:
+            # column j of U above the diagonal = row j of Uᵀ left of it
+            row = jnp.where(idx < j, u[:, j], 0.0)
+        xj = (b[j, :] - row @ x) / u[j, j]
+        return x.at[j, :].set(xj)
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+    return x[:, 0] if vec else x
+
+# Fixed column-panel width for the back-transform artifact (BT1 / TD3 have a
+# free dimension s; the Rust runtime loops 64-wide panels, padding the last).
+PANEL = 64
+
+
+# --------------------------------------------------------------------------
+# Stage GS1:  B = U^T U  (DPOTRF analog, MAGMA_DPOTRF role)
+#
+# NOTE: jnp.linalg.cholesky lowers to a TYPED_FFI LAPACK custom-call on CPU,
+# which the Rust runtime's xla_extension 0.5.1 cannot execute.  We therefore
+# lower a from-scratch Cholesky: a fori-loop of masked rank-1 updates at the
+# base-case size, wrapped in the standard 2x2 blocked recursion
+#   U11 = chol(B11); U12 = U11^{-T} B12; U22 = chol(B22 − U12ᵀ U12)
+# unrolled at trace time into pure matmuls — the same Level-3 reformulation
+# MAGMA's GPU DPOTRF uses.
+# --------------------------------------------------------------------------
+def _cholesky_upper_base(b):
+    """Unblocked upper Cholesky via fori_loop (pure HLO)."""
+    n = b.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, a):
+        ajj = jnp.sqrt(a[j, j])
+        row = a[j, :] / ajj
+        # row j of U: zeros left of the diagonal
+        rowj = jnp.where(idx >= j, row, 0.0)
+        mask = (idx > j).astype(a.dtype)
+        upd = jnp.outer(rowj * mask, rowj * mask)
+        a = a - upd
+        return a.at[j, :].set(rowj)
+
+    u = jax.lax.fori_loop(0, n, body, jnp.asarray(b))
+    return jnp.triu(u)
+
+
+def _cholesky_upper(b, base=64):
+    n = b.shape[0]
+    if n <= base:
+        return _cholesky_upper_base(b)
+    m = n // 2
+    b = jnp.asarray(b)
+    u11 = _cholesky_upper(b[:m, :m], base)
+    # U12 = U11^{-T} B12  via the blocked inverse (all matmuls)
+    v11 = _inv_upper(u11)
+    u12 = v11.T @ b[:m, m:]
+    u22 = _cholesky_upper(b[m:, m:] - u12.T @ u12, base)
+    top = jnp.concatenate([u11, u12], axis=1)
+    bot = jnp.concatenate([jnp.zeros((n - m, m), dtype=b.dtype), u22], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def cholesky(b):
+    """Upper Cholesky factor: B = U^T U."""
+    return (_cholesky_upper(b),)
+
+
+# --------------------------------------------------------------------------
+# Blocked triangular inversion: U⁻¹ by the standard 2x2 recursion
+#   [[U11, U12], [0, U22]]⁻¹ = [[V11, -V11 U12 V22], [0, V22]]
+# unrolled at trace time into pure matmuls (n³/3 flops, all Level-3 — the
+# accelerator-friendly reformulation of DTRSM that GPU libraries also use),
+# with a small fori-loop substitution at the base case.
+# --------------------------------------------------------------------------
+def _inv_upper(u, base=64):
+    n = u.shape[0]
+    if n <= base:
+        return solve_upper(u, jnp.eye(n, dtype=u.dtype))
+    m = n // 2
+    v11 = _inv_upper(u[:m, :m], base)
+    v22 = _inv_upper(u[m:, m:], base)
+    v12 = -v11 @ (u[:m, m:] @ v22)
+    top = jnp.concatenate([v11, v12], axis=1)
+    bot = jnp.concatenate([jnp.zeros((n - m, m), dtype=u.dtype), v22], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
+# --------------------------------------------------------------------------
+# Stage GS2:  C := U^{-T} A U^{-1}  (two-DTRSM construction, the variant the
+# paper found faster than DSYGST; MAGMA_DTRSM role).  On the accelerator the
+# triangular solves become one blocked inversion plus two Pallas gemms —
+# all MXU-shaped tiles.
+# --------------------------------------------------------------------------
+def build_c(a, u):
+    v = _inv_upper(jnp.asarray(u))
+    av = gemm_kernel.gemm_padded(jnp.asarray(a), v)   # A V      (Pallas)
+    c = gemm_kernel.gemm_padded(v.T, av)              # Vᵀ(A V)  (Pallas)
+    return (0.5 * (c + c.T),)
+
+
+# --------------------------------------------------------------------------
+# Stage KE1:  z := C w  (CUBLAS/MAGMA DSYMV role) — Pallas symv hot-spot
+# --------------------------------------------------------------------------
+def matvec_explicit(c, w):
+    return (symv_kernel.symv_padded(c, w),)
+
+
+# --------------------------------------------------------------------------
+# Stages KI1-3:  z := U^{-T} (A (U^{-1} w))  (DTRSV, DSYMV, DTRSV fused into
+# one graph so the accelerator round-trips the n-vector once per iteration)
+# --------------------------------------------------------------------------
+def matvec_implicit(a, u, w):
+    w1 = solve_upper(u, w)                          # KI1: U w1 = w
+    w2 = symv_kernel.symv_padded(a, w1)             # KI2: w2 = A w1
+    z = solve_upper(u, w2, trans=True)              # KI3: U^T z = w2
+    return (z,)
+
+
+# --------------------------------------------------------------------------
+# Stage BT1:  X := U^{-1} Y  (DTRSM role), fixed-width column panel
+# --------------------------------------------------------------------------
+def back_transform(u, y):
+    return (solve_upper(u, y),)
+
+
+# --------------------------------------------------------------------------
+# Fused Lanczos three-term step (optional fast path): given the operator
+# inputs and the two previous Lanczos vectors, produce the next unnormalised
+# residual  r = C v_j - beta_{j-1} v_{j-1}  and alpha_j = v_j^T C v_j.
+# Keeps two axpys + one dot on the accelerator alongside the mat-vec.
+# --------------------------------------------------------------------------
+def lanczos_step_explicit(c, v_cur, v_prev, beta_prev):
+    z = symv_kernel.symv_padded(c, v_cur)
+    alpha = jnp.dot(v_cur, z)
+    r = z - alpha * v_cur - beta_prev * v_prev
+    return (r, alpha)
+
+
+def lanczos_step_implicit(a, u, v_cur, v_prev, beta_prev):
+    w1 = solve_upper(u, v_cur)
+    w2 = symv_kernel.symv_padded(a, w1)
+    z = solve_upper(u, w2, trans=True)
+    alpha = jnp.dot(v_cur, z)
+    r = z - alpha * v_cur - beta_prev * v_prev
+    return (r, alpha)
+
+
+# --------------------------------------------------------------------------
+# Pallas gemm exposed as its own artifact (used by the offloaded two-stage
+# reduction's Q1*Q2 accumulation experiments and the kernel microbenches).
+# --------------------------------------------------------------------------
+def gemm(a, b):
+    return (gemm_kernel.gemm_padded(a, b),)
+
+
+# --------------------------------------------------------------------------
+# `_fast` variants: identical math with jnp matmuls in place of the Pallas
+# kernels.  The Pallas kernels are the *TPU-targeted* implementation
+# (MXU-shaped tiles, validated against ref.py through the interpret path);
+# interpret-mode execution on the CPU PJRT backend serializes the tile grid
+# and costs ~8x, so the Rust offload runtime prefers these `_fast` builds
+# when playing the paper's GPU role on this testbed, exactly as a CUDA
+# deployment would pick the CUBLAS build over a debug kernel.  See
+# DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf.
+# --------------------------------------------------------------------------
+def matvec_explicit_fast(c, w):
+    return (c @ w,)
+
+
+def build_c_fast(a, u):
+    v = _inv_upper(jnp.asarray(u))
+    c = v.T @ (jnp.asarray(a) @ v)
+    return (0.5 * (c + c.T),)
+
+
+# --------------------------------------------------------------------------
+# Artifact catalogue: name -> (fn, shapes(n) -> list of ShapeDtypeStruct)
+# --------------------------------------------------------------------------
+def _f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+GRAPHS = {
+    "cholesky": (cholesky, lambda n: [_f64(n, n)]),
+    "build_c": (build_c, lambda n: [_f64(n, n), _f64(n, n)]),
+    "build_c_fast": (build_c_fast, lambda n: [_f64(n, n), _f64(n, n)]),
+    "matvec_explicit": (matvec_explicit, lambda n: [_f64(n, n), _f64(n)]),
+    "matvec_explicit_fast": (matvec_explicit_fast, lambda n: [_f64(n, n), _f64(n)]),
+    "matvec_implicit": (matvec_implicit, lambda n: [_f64(n, n), _f64(n, n), _f64(n)]),
+    "back_transform": (back_transform, lambda n: [_f64(n, n), _f64(n, PANEL)]),
+    "lanczos_step_explicit": (
+        lanczos_step_explicit,
+        lambda n: [_f64(n, n), _f64(n), _f64(n), _f64()],
+    ),
+    "lanczos_step_implicit": (
+        lanczos_step_implicit,
+        lambda n: [_f64(n, n), _f64(n, n), _f64(n), _f64(n), _f64()],
+    ),
+    "gemm": (gemm, lambda n: [_f64(n, n), _f64(n, n)]),
+}

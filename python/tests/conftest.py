@@ -1,0 +1,23 @@
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0x5EED)
+
+
+def make_spd(rng, n, cond=100.0):
+    """Random SPD matrix with controlled condition number."""
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lam = np.geomspace(1.0, cond, n)
+    return (q * lam) @ q.T
+
+
+def make_sym(rng, n):
+    m = rng.standard_normal((n, n))
+    return 0.5 * (m + m.T)

@@ -1,0 +1,118 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes (round and ragged), dtypes, and block sizes; every
+case must match the oracle to tight f64 tolerance (the kernels do the same
+flops in the same precision, only tiled).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm, ref, symv
+
+F64 = np.float64
+F32 = np.float32
+
+
+# ---------------------------------------------------------------- symv ----
+class TestSymv:
+    @pytest.mark.parametrize("n", [1, 2, 7, 64, 128, 130, 256])
+    def test_matches_ref_f64(self, rng, n):
+        a = np.asarray(rng.standard_normal((n, n)), dtype=F64)
+        a = 0.5 * (a + a.T)
+        x = np.asarray(rng.standard_normal(n), dtype=F64)
+        got = np.asarray(symv.symv_padded(a, x))
+        np.testing.assert_allclose(got, ref.symv_ref(a, x), rtol=1e-12, atol=1e-12)
+
+    @pytest.mark.parametrize("bm,bk", [(32, 32), (64, 32), (32, 64), (128, 128)])
+    def test_block_shapes(self, rng, bm, bk):
+        n = 96
+        a = np.asarray(rng.standard_normal((n, n)), dtype=F64)
+        x = np.asarray(rng.standard_normal(n), dtype=F64)
+        got = np.asarray(symv.symv_padded(a, x, bm=bm, bk=bk))
+        np.testing.assert_allclose(got, a @ x, rtol=1e-12, atol=1e-12)
+
+    def test_exact_tile_no_pad(self, rng):
+        n = 256
+        a = np.asarray(rng.standard_normal((n, n)), dtype=F64)
+        x = np.asarray(rng.standard_normal(n), dtype=F64)
+        got = np.asarray(symv.symv(a, x))
+        np.testing.assert_allclose(got, a @ x, rtol=1e-12, atol=1e-12)
+
+    def test_f32(self, rng):
+        n = 100
+        a = np.asarray(rng.standard_normal((n, n)), dtype=F32)
+        x = np.asarray(rng.standard_normal(n), dtype=F32)
+        got = np.asarray(symv.symv_padded(a, x))
+        np.testing.assert_allclose(got, a @ x, rtol=2e-4, atol=2e-4)
+
+    def test_zero_vector(self):
+        n = 64
+        a = np.eye(n)
+        x = np.zeros(n)
+        np.testing.assert_array_equal(np.asarray(symv.symv_padded(a, x)), x)
+
+    def test_identity_matrix(self, rng):
+        n = 200
+        x = np.asarray(rng.standard_normal(n), dtype=F64)
+        got = np.asarray(symv.symv_padded(np.eye(n), x))
+        np.testing.assert_allclose(got, x, rtol=1e-15, atol=0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=200),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, n, seed):
+        r = np.random.default_rng(seed)
+        a = r.standard_normal((n, n))
+        a = 0.5 * (a + a.T)
+        x = r.standard_normal(n)
+        got = np.asarray(symv.symv_padded(a, x, bm=64, bk=64))
+        np.testing.assert_allclose(got, a @ x, rtol=1e-11, atol=1e-11)
+
+
+# ---------------------------------------------------------------- gemm ----
+class TestGemm:
+    @pytest.mark.parametrize(
+        "m,k,n", [(1, 1, 1), (8, 8, 8), (128, 128, 128), (100, 50, 75), (130, 257, 64)]
+    )
+    def test_matches_ref(self, rng, m, k, n):
+        a = np.asarray(rng.standard_normal((m, k)), dtype=F64)
+        b = np.asarray(rng.standard_normal((k, n)), dtype=F64)
+        got = np.asarray(gemm.gemm_padded(a, b))
+        np.testing.assert_allclose(got, ref.gemm_ref(a, b), rtol=1e-11, atol=1e-11)
+
+    def test_exact_tiles(self, rng):
+        a = np.asarray(rng.standard_normal((256, 128)), dtype=F64)
+        b = np.asarray(rng.standard_normal((128, 384)), dtype=F64)
+        got = np.asarray(gemm.gemm(a, b))
+        np.testing.assert_allclose(got, a @ b, rtol=1e-11, atol=1e-11)
+
+    def test_identity(self, rng):
+        a = np.asarray(rng.standard_normal((64, 64)), dtype=F64)
+        got = np.asarray(gemm.gemm_padded(a, np.eye(64)))
+        np.testing.assert_allclose(got, a, rtol=1e-15, atol=0)
+
+    def test_associativity_with_ref(self, rng):
+        """(AB)C via kernel == A(BC) via numpy, loose tolerance."""
+        a = rng.standard_normal((40, 30))
+        b = rng.standard_normal((30, 20))
+        c = rng.standard_normal((20, 10))
+        left = np.asarray(gemm.gemm_padded(np.asarray(gemm.gemm_padded(a, b)), c))
+        np.testing.assert_allclose(left, a @ (b @ c), rtol=1e-10, atol=1e-10)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 150),
+        k=st.integers(1, 150),
+        n=st.integers(1, 150),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        r = np.random.default_rng(seed)
+        a = r.standard_normal((m, k))
+        b = r.standard_normal((k, n))
+        got = np.asarray(gemm.gemm_padded(a, b, bm=64, bn=64, bk=64))
+        np.testing.assert_allclose(got, a @ b, rtol=1e-10, atol=1e-10)

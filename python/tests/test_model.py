@@ -1,0 +1,160 @@
+"""L2 model graphs vs numpy oracles.
+
+Covers every graph in ``model.GRAPHS`` — the set the Rust runtime will load —
+including the mathematical identities the solver relies on (C's spectrum ==
+the generalized spectrum of (A, B)).
+"""
+
+import numpy as np
+import pytest
+
+from compile import model
+from tests.conftest import make_spd, make_sym
+
+
+def np_build_c(a, b):
+    u = np.linalg.cholesky(b).T
+    uinv = np.linalg.inv(u)
+    return uinv.T @ a @ uinv, u
+
+
+class TestCholesky:
+    def test_factorization(self, rng):
+        b = make_spd(rng, 80)
+        (u,) = model.cholesky(b)
+        u = np.asarray(u)
+        assert np.allclose(np.tril(u, -1), 0)
+        np.testing.assert_allclose(u.T @ u, b, rtol=1e-10, atol=1e-10)
+
+    def test_diagonal_positive(self, rng):
+        b = make_spd(rng, 33)
+        (u,) = model.cholesky(b)
+        assert np.all(np.diag(np.asarray(u)) > 0)
+
+
+class TestBuildC:
+    def test_matches_numpy(self, rng):
+        n = 60
+        a, b = make_sym(rng, n), make_spd(rng, n)
+        c_ref, u = np_build_c(a, b)
+        (c,) = model.build_c(a, u)
+        np.testing.assert_allclose(np.asarray(c), c_ref, rtol=1e-9, atol=1e-9)
+
+    def test_symmetric(self, rng):
+        n = 45
+        a, b = make_sym(rng, n), make_spd(rng, n)
+        _, u = np_build_c(a, b)
+        (c,) = model.build_c(a, u)
+        c = np.asarray(c)
+        np.testing.assert_allclose(c, c.T, rtol=0, atol=1e-12)
+
+    def test_spectrum_equals_generalized(self, rng):
+        """eig(C) == generalized eig(A, B): the transform the paper rests on."""
+        n = 40
+        a, b = make_sym(rng, n), make_spd(rng, n)
+        _, u = np_build_c(a, b)
+        (c,) = model.build_c(a, u)
+        w_c = np.linalg.eigvalsh(np.asarray(c))
+        w_gen = np.sort(np.real(np.linalg.eigvals(np.linalg.solve(b, a))))
+        np.testing.assert_allclose(w_c, w_gen, rtol=1e-8, atol=1e-8)
+
+
+class TestMatvecs:
+    def test_explicit(self, rng):
+        n = 70
+        c = make_sym(rng, n)
+        w = rng.standard_normal(n)
+        (z,) = model.matvec_explicit(c, w)
+        np.testing.assert_allclose(np.asarray(z), c @ w, rtol=1e-11, atol=1e-11)
+
+    def test_implicit_equals_explicit(self, rng):
+        """U^{-T} A U^{-1} w computed implicitly == C w with explicit C."""
+        n = 50
+        a, b = make_sym(rng, n), make_spd(rng, n)
+        c_ref, u = np_build_c(a, b)
+        w = rng.standard_normal(n)
+        (z,) = model.matvec_implicit(a, u, w)
+        np.testing.assert_allclose(np.asarray(z), c_ref @ w, rtol=1e-8, atol=1e-8)
+
+    def test_lanczos_step_explicit(self, rng):
+        n = 64
+        c = make_sym(rng, n)
+        v = rng.standard_normal(n)
+        v /= np.linalg.norm(v)
+        vp = rng.standard_normal(n)
+        beta = 0.37
+        r, alpha = model.lanczos_step_explicit(c, v, vp, beta)
+        alpha_ref = v @ (c @ v)
+        r_ref = c @ v - alpha_ref * v - beta * vp
+        np.testing.assert_allclose(float(alpha), alpha_ref, rtol=1e-11)
+        np.testing.assert_allclose(np.asarray(r), r_ref, rtol=1e-9, atol=1e-10)
+
+    def test_lanczos_step_implicit_matches_explicit(self, rng):
+        n = 48
+        a, b = make_sym(rng, n), make_spd(rng, n)
+        c_ref, u = np_build_c(a, b)
+        v = rng.standard_normal(n)
+        v /= np.linalg.norm(v)
+        vp = np.zeros(n)
+        r_i, al_i = model.lanczos_step_implicit(a, u, v, vp, 0.0)
+        r_e = c_ref @ v - (v @ (c_ref @ v)) * v
+        np.testing.assert_allclose(float(al_i), v @ (c_ref @ v), rtol=1e-8)
+        np.testing.assert_allclose(np.asarray(r_i), r_e, rtol=1e-7, atol=1e-8)
+
+
+class TestBackTransform:
+    def test_matches_solve(self, rng):
+        n = 60
+        b = make_spd(rng, n)
+        u = np.linalg.cholesky(b).T
+        y = rng.standard_normal((n, model.PANEL))
+        (x,) = model.back_transform(u, y)
+        np.testing.assert_allclose(
+            np.asarray(x), np.linalg.solve(u, y), rtol=1e-9, atol=1e-9
+        )
+
+    def test_recovers_generalized_eigenvectors(self, rng):
+        """X = U^{-1} Y maps STDEIG eigenvectors back to GSYEIG ones (Eq. 4)."""
+        n = model.PANEL  # use s = PANEL so shapes match the artifact
+        a, b = make_sym(rng, n), make_spd(rng, n)
+        c_ref, u = np_build_c(a, b)
+        lam, y = np.linalg.eigh(c_ref)
+        (x,) = model.back_transform(u, y)
+        x = np.asarray(x)
+        resid = a @ x - b @ x @ np.diag(lam)
+        assert np.linalg.norm(resid) / np.linalg.norm(a) < 1e-8
+
+
+class TestGraphCatalogue:
+    def test_all_graphs_lower(self):
+        """Every catalogued graph lowers to HLO text at a tiny size."""
+        import jax
+
+        from compile.aot import to_hlo_text
+
+        for name, (fn, shapes_of) in model.GRAPHS.items():
+            text = to_hlo_text(fn, shapes_of(32))
+            assert "ENTRY" in text, name
+            assert "f64" in text, name
+
+    def test_no_ffi_custom_calls(self):
+        """The Rust runtime's xla_extension 0.5.1 cannot execute TYPED_FFI
+        custom-calls (e.g. jnp.linalg.cholesky's LAPACK binding); every
+        artifact must lower to plain HLO ops."""
+        from compile.aot import to_hlo_text
+
+        for name, (fn, shapes_of) in model.GRAPHS.items():
+            text = to_hlo_text(fn, shapes_of(32))
+            assert "API_VERSION_TYPED_FFI" not in text, name
+            assert "custom-call" not in text, (
+                f"{name} lowers to a custom-call the Rust PJRT runtime "
+                "cannot execute"
+            )
+
+    def test_shapes_metadata_consistent(self):
+        import jax
+
+        for name, (fn, shapes_of) in model.GRAPHS.items():
+            specs = shapes_of(16)
+            outs = jax.eval_shape(fn, *specs)
+            assert len(outs) >= 1, name

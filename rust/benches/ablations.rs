@@ -1,0 +1,135 @@
+//! Ablation benches for the design choices the paper (and DESIGN.md §5)
+//! call out:
+//!
+//! 1. **GS2 construction**: two-DTRSM (2n³) vs blocked DSYGST (n³).  The
+//!    paper: "we found that computing C via two triangular system solves
+//!    was faster; therefore this is the option selected" (§4.1).
+//! 2. **TT bandwidth w**: the paper's §2.2 trade-off — larger w helps the
+//!    dense→band stage (better blocking) but inflates band→tridiagonal.
+//! 3. **Lanczos basis size m**: restart frequency vs re-orthogonalization
+//!    cost (the paper tuned "the number of Krylov vectors (m)" in §3.3).
+
+use std::time::Instant;
+
+use gsyeig::lanczos::operator::ExplicitOp;
+use gsyeig::lanczos::thick_restart::{lanczos_solve, LanczosConfig, Want};
+use gsyeig::lapack::potrf::dpotrf_upper;
+use gsyeig::lapack::sygst::{dsygst_blocked, sygst_trsm};
+use gsyeig::matrix::Matrix;
+use gsyeig::sbr::{sbrdt, syrdb};
+use gsyeig::util::rng::Rng;
+use gsyeig::util::table::Table;
+use gsyeig::workloads::spectra::{generate_problem, spd_with_condition, sym_with_spectrum};
+
+fn main() {
+    ablation_gs2();
+    ablation_tt_bandwidth();
+    ablation_lanczos_basis();
+}
+
+/// 1. GS2: trsm construction vs blocked DSYGST.
+fn ablation_gs2() {
+    let mut t = Table::new(
+        "Ablation 1 — GS2 construction (paper par. 4.1 choice)",
+        &["n", "two-DTRSM (2n³)", "blocked DSYGST (n³)", "max |Δ|"],
+    );
+    let mut rng = Rng::new(41);
+    for n in [512usize, 1024, 1500] {
+        let a = Matrix::randn_sym(n, &mut rng);
+        let b = spd_with_condition(n, 100.0, &mut rng);
+        let mut u = b.clone();
+        dpotrf_upper(n, u.as_mut_slice(), n).unwrap();
+        u.zero_lower();
+        let mut c1 = a.clone();
+        let t0 = Instant::now();
+        sygst_trsm(n, c1.as_mut_slice(), n, u.as_slice(), n);
+        let dt1 = t0.elapsed().as_secs_f64();
+        let mut c2 = a.clone();
+        let t1 = Instant::now();
+        dsygst_blocked(n, c2.as_mut_slice(), n, u.as_slice(), n);
+        let dt2 = t1.elapsed().as_secs_f64();
+        t.row(vec![
+            n.to_string(),
+            format!("{dt1:.3}s"),
+            format!("{dt2:.3}s"),
+            format!("{:.1e}", c1.max_abs_diff(&c2)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "paper's finding to check: the 2n³ trsm construction beats the n³ DSYGST\n\
+         in practice (regularity of trsm vs DSYGST's fragmented updates).\n"
+    );
+}
+
+/// 2. TT bandwidth trade-off (paper §2.2: 32 ≤ w ≪ n).
+fn ablation_tt_bandwidth() {
+    let n = 1000;
+    let mut rng = Rng::new(42);
+    let lams: Vec<f64> = (0..n).map(|i| i as f64 * 0.3 + 1.0).collect();
+    let a0 = sym_with_spectrum(&lams, &mut rng);
+    let mut t = Table::new(
+        &format!("Ablation 2 — TT bandwidth (n={n}, paper par. 2.2 trade-off)"),
+        &["w", "TT1 dense→band", "TT2 band→tridiag (+acc)", "TT1+TT2", "rotations"],
+    );
+    for w in [8usize, 16, 32, 64] {
+        let mut a = a0.clone();
+        let mut q = Matrix::identity(n);
+        let t0 = Instant::now();
+        syrdb(&mut a, w, Some(&mut q));
+        let dt1 = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let (_tri, nrot) = sbrdt(&mut a, w, Some(&mut q));
+        let dt2 = t1.elapsed().as_secs_f64();
+        t.row(vec![
+            w.to_string(),
+            format!("{dt1:.2}s"),
+            format!("{dt2:.2}s"),
+            format!("{:.2}s", dt1 + dt2),
+            nrot.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected: TT1 shrinks with w (fewer, fatter panels), TT2 grows with w\n\
+         (more rotations to chase) — the balance the paper pins at w ≈ 32.\n"
+    );
+}
+
+/// 3. Lanczos basis size m (restart frequency vs reorthogonalization).
+fn ablation_lanczos_basis() {
+    let n = 1200;
+    let s = 12;
+    let (p, _) = generate_problem(
+        n,
+        &(0..n).map(|i| (i as f64 / n as f64).powi(2) * 50.0 + 0.1).collect::<Vec<_>>(),
+        100.0,
+        43,
+    );
+    // work on C = A of a standard problem directly: B's factor is irrelevant
+    // to this ablation, so use the A matrix as a symmetric operator.
+    let c = p.a;
+    let mut t = Table::new(
+        &format!("Ablation 3 — Krylov basis size m (n={n}, s={s})"),
+        &["m", "matvecs", "restarts", "seconds", "converged"],
+    );
+    for m in [s + 4, 2 * s, 2 * s + 16, 4 * s, 8 * s] {
+        let op = ExplicitOp::new(&c);
+        let mut cfg = LanczosConfig::new(s, Want::Largest);
+        cfg.m = m;
+        let t0 = Instant::now();
+        let r = lanczos_solve(&op, &cfg);
+        t.row(vec![
+            m.to_string(),
+            r.matvecs.to_string(),
+            r.restarts.to_string(),
+            format!("{:.3}", t0.elapsed().as_secs_f64()),
+            r.converged.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expected: tiny m restarts constantly (matvecs blow up); huge m pays\n\
+         quadratic reorthogonalization — the sweet spot the paper tuned in par. 3.3.\n"
+    );
+}

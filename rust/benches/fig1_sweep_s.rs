@@ -1,0 +1,15 @@
+//! Figure 1: execution time of TD/KE/KI vs the number of wanted eigenpairs
+//! s, conventional libraries (TT excluded — not competitive, per the paper).
+use gsyeig::bench::{fig_sweep, ExperimentKind, ExperimentScale};
+use gsyeig::solver::backend::NativeKernels;
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let n = scale.md_n;
+    let svals: Vec<usize> = [n/200, n/100, n/40, n/20, n/10].into_iter().map(|s| s.max(1)).collect();
+    let kernels = NativeKernels::default();
+    let (csv, txt) = fig_sweep(ExperimentKind::Md, &scale, &kernels, &svals, "Figure 1 analog (native)");
+    println!("{txt}");
+    println!("CSV:\n{csv}");
+    println!("expected shape (paper): Krylov times grow fast with s (restart+reorth), KI steepest; TD nearly flat.");
+}

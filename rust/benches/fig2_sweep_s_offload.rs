@@ -1,0 +1,16 @@
+//! Figure 2: execution time of TD/KE/KI vs s with the offloaded kernels.
+use std::rc::Rc;
+use gsyeig::bench::{fig_sweep, ExperimentKind, ExperimentScale};
+use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let n = scale.md_n;
+    let svals: Vec<usize> = [n/200, n/100, n/40, n/20, n/10].into_iter().map(|s| s.max(1)).collect();
+    let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let kernels = OffloadKernels::new(reg);
+    let (csv, txt) = fig_sweep(ExperimentKind::Md, &scale, &kernels, &svals, "Figure 2 analog (offload)");
+    println!("{txt}");
+    println!("CSV:\n{csv}");
+    println!("expected shape (paper): same growth-in-s trend as Figure 1, with the offloaded stages shifted down.");
+}

@@ -1,0 +1,91 @@
+//! Kernel microbenchmarks: GFLOP/s of the hot-path BLAS/LAPACK routines and
+//! the PJRT round-trip latency — the baseline and tracking numbers for the
+//! EXPERIMENTS.md §Perf iteration log.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use gsyeig::blas::{dgemm, dsymv, dtrsm, Diag, Side, Trans, Uplo};
+use gsyeig::lapack::potrf::dpotrf_upper;
+use gsyeig::lapack::sytrd::dsytrd_lower;
+use gsyeig::matrix::Matrix;
+use gsyeig::runtime::ArtifactRegistry;
+use gsyeig::util::rng::Rng;
+
+fn time_gflops(name: &str, flops: f64, reps: usize, mut f: impl FnMut()) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{name:<28} {:>9.2} ms   {:>7.2} GFLOP/s", dt * 1e3, flops / dt / 1e9);
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    for n in [512usize, 1024] {
+        println!("--- n = {n} ---");
+        let a = Matrix::randn(n, n, &mut rng);
+        let b = Matrix::randn(n, n, &mut rng);
+        let mut c = Matrix::zeros(n, n);
+        let n3 = (n * n * n) as f64;
+        time_gflops(&format!("dgemm NN {n}"), 2.0 * n3, 3, || {
+            dgemm(Trans::N, Trans::N, n, n, n, 1.0, a.as_slice(), n, b.as_slice(), n, 0.0, c.as_mut_slice(), n);
+        });
+        let sym = Matrix::randn_sym(n, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let mut y = vec![0.0; n];
+        time_gflops(&format!("dsymv upper {n}"), 2.0 * (n * n) as f64, 50, || {
+            dsymv(Uplo::Upper, n, 1.0, sym.as_slice(), n, &x, 0.0, &mut y);
+        });
+        // SPD for potrf/trsm
+        let mut spd = b.transpose().matmul_naive(&b);
+        for i in 0..n {
+            spd[(i, i)] += n as f64;
+        }
+        let mut u = spd.clone();
+        dpotrf_upper(n, u.as_mut_slice(), n).unwrap();
+        let mut rhs = Matrix::randn(n, n, &mut rng);
+        time_gflops(&format!("dtrsm LUT {n}x{n}"), n3, 3, || {
+            dtrsm(Side::Left, Uplo::Upper, Trans::T, Diag::NonUnit, n, n, 1.0, u.as_slice(), n, rhs.as_mut_slice(), n);
+        });
+        let mut w = spd.clone();
+        time_gflops(&format!("dpotrf {n}"), n3 / 3.0, 3, || {
+            w.as_mut_slice().copy_from_slice(spd.as_slice());
+            dpotrf_upper(n, w.as_mut_slice(), n).unwrap();
+        });
+        let mut tri = sym.clone();
+        let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+        time_gflops(&format!("dsytrd {n}"), 4.0 * n3 / 3.0, 1, || {
+            tri.as_mut_slice().copy_from_slice(sym.as_slice());
+            dsytrd_lower(n, tri.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+        });
+    }
+
+    // PJRT round-trip: per-iteration cost of the offloaded KE1 matvec
+    if let Ok(reg) = ArtifactRegistry::load_default() {
+        let reg = Rc::new(reg);
+        let n = 256;
+        let c = Matrix::randn_sym(n, &mut rng);
+        if let Ok(op) = gsyeig::runtime::offload::OffloadExplicitOp::new(Rc::clone(&reg), &c) {
+            use gsyeig::lanczos::operator::SymOp;
+            let x: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+            let mut y = vec![0.0; n];
+            op.apply(&x, &mut y); // warm (compile done at construction)
+            let t0 = Instant::now();
+            let reps = 100;
+            for _ in 0..reps {
+                op.apply(&x, &mut y);
+            }
+            let dt = t0.elapsed().as_secs_f64() / reps as f64;
+            println!(
+                "--- PJRT offload ---\nmatvec_explicit n={n}: {:.3} ms/iter (incl. vector transfer both ways)",
+                dt * 1e3
+            );
+        }
+    } else {
+        println!("(artifacts missing — skipping PJRT microbench; run `make artifacts`)");
+    }
+}

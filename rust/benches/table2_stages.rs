@@ -1,0 +1,19 @@
+//! Table 2: per-stage execution time of TD/TT/KE/KI on the conventional
+//! (native Rust) libraries, both experiments.
+//!
+//!   cargo bench --bench table2_stages            # default scale (paper/10)
+//!   GSYEIG_SCALE=quick cargo bench --bench table2_stages
+use gsyeig::bench::{run_stage_table, ExperimentKind, ExperimentScale};
+use gsyeig::solver::backend::NativeKernels;
+use gsyeig::solver::gsyeig::Variant;
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let kernels = NativeKernels::default();
+    println!("scale: MD n={} s={}; DFT n={} s={}", scale.md_n, scale.md_s, scale.dft_n, scale.dft_s);
+    for kind in [ExperimentKind::Md, ExperimentKind::Dft] {
+        let t = run_stage_table(kind, &scale, &kernels, &Variant::ALL);
+        println!("{}", t.render("Table 2 analog (conventional libraries)"));
+    }
+    println!("expected shape (paper): Exp1 KE≈KI ≪ TD < TT; Exp2 KE fastest ≈ TD, KI worst, TT2 dominates TT.");
+}

@@ -1,0 +1,12 @@
+//! Table 4: GS1/GS2 on the sequential kernels vs the tiled task-parallel
+//! runtime (PLASMA / libflame+SuperMatrix analog), plus DAG statistics.
+use gsyeig::bench::{run_table4, ExperimentKind, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    for kind in [ExperimentKind::Md, ExperimentKind::Dft] {
+        for nb in [128, 256] {
+            println!("{}", run_table4(kind, &scale, 2, nb));
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Table 7: accuracy of the offloaded (conventional+modern) solvers.
+use std::rc::Rc;
+use gsyeig::bench::{run_accuracy_table, run_stage_table, ExperimentKind, ExperimentScale};
+use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
+use gsyeig::solver::gsyeig::Variant;
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let kernels = OffloadKernels::new(reg);
+    for kind in [ExperimentKind::Md, ExperimentKind::Dft] {
+        let t = run_stage_table(kind, &scale, &kernels, &Variant::ALL);
+        println!("{}", run_accuracy_table(&t, "Table 7 analog (PJRT offload)"));
+    }
+    println!("expected shape (paper): little qualitative difference vs Table 3.");
+}

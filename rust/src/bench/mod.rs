@@ -1,0 +1,9 @@
+//! Experiment harness shared by the CLI (`gsyeig experiment …`) and the
+//! `cargo bench` targets: one function per paper table/figure.
+
+pub mod harness;
+
+pub use harness::{
+    fig_sweep, run_accuracy_table, run_stage_table, run_table4, ExperimentKind, ExperimentScale,
+    StageTable,
+};

@@ -1,0 +1,151 @@
+//! BLAS level 1: vector-vector operations.
+//!
+//! The Krylov iteration (KE2/KI4 in the paper, ARPACK internally) is built
+//! almost entirely from these: dot products and axpys for the three-term
+//! recurrence and the Gram–Schmidt re-orthogonalization.
+
+/// x · y
+#[inline]
+pub fn ddot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way unrolled to let LLVM vectorize with independent accumulators.
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// y += alpha x
+#[inline]
+pub fn daxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if alpha == 0.0 {
+        return;
+    }
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// ||x||_2 with scaling against overflow/underflow (LAPACK dnrm2 style).
+pub fn dnrm2(x: &[f64]) -> f64 {
+    let mut scale = 0.0f64;
+    let mut ssq = 1.0f64;
+    for &xi in x {
+        if xi != 0.0 {
+            let a = xi.abs();
+            if scale < a {
+                ssq = 1.0 + ssq * (scale / a) * (scale / a);
+                scale = a;
+            } else {
+                ssq += (a / scale) * (a / scale);
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+/// x *= alpha
+#[inline]
+pub fn dscal(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// y = x
+#[inline]
+pub fn dcopy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// Index of max |x_i| (0 for empty input).
+pub fn idamax(x: &[f64]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f64::NEG_INFINITY;
+    for (i, &xi) in x.iter().enumerate() {
+        let a = xi.abs();
+        if a > bv {
+            bv = a;
+            best = i;
+        }
+    }
+    best
+}
+
+/// x <-> y
+pub fn dswap(x: &mut [f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+        std::mem::swap(xi, yi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(ddot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn dot_unroll_tail() {
+        // length not divisible by 4 exercises the tail loop
+        let x: Vec<f64> = (0..11).map(|i| i as f64).collect();
+        let s = ddot(&x, &x);
+        assert_eq!(s, (0..11).map(|i| (i * i) as f64).sum::<f64>());
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 1.0];
+        daxpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn nrm2_overflow_safe() {
+        let x = vec![1e200, 1e200];
+        let n = dnrm2(&x);
+        assert!((n - 1e200 * 2.0f64.sqrt()).abs() / n < 1e-15);
+    }
+
+    #[test]
+    fn nrm2_underflow_safe() {
+        let x = vec![1e-200, 1e-200];
+        let n = dnrm2(&x);
+        assert!((n - 1e-200 * 2.0f64.sqrt()).abs() / n < 1e-15);
+    }
+
+    #[test]
+    fn nrm2_zero() {
+        assert_eq!(dnrm2(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn idamax_finds_peak() {
+        assert_eq!(idamax(&[1.0, -9.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn swap_exchanges() {
+        let mut x = vec![1.0, 2.0];
+        let mut y = vec![3.0, 4.0];
+        dswap(&mut x, &mut y);
+        assert_eq!(x, vec![3.0, 4.0]);
+        assert_eq!(y, vec![1.0, 2.0]);
+    }
+}

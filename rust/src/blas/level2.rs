@@ -1,0 +1,457 @@
+//! BLAS level 2: matrix-vector operations.
+//!
+//! These are the memory-bound kernels the paper's analysis pivots on: half
+//! the flops of the direct tridiagonalization (TD1) are `dsymv`, and each
+//! Lanczos iteration of KE/KI is one `dsymv` (KE1/KI2) plus, for KI, two
+//! `dtrsv` (KI1/KI3).
+
+use super::{Diag, Trans, Uplo};
+
+/// y := alpha * op(A) x + beta * y, A is m x n with leading dimension `lda`.
+pub fn dgemv(
+    trans: Trans,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    x: &[f64],
+    beta: f64,
+    y: &mut [f64],
+) {
+    match trans {
+        Trans::N => {
+            debug_assert!(x.len() >= n && y.len() >= m);
+            if beta != 1.0 {
+                for yi in y[..m].iter_mut() {
+                    *yi *= beta;
+                }
+            }
+            for j in 0..n {
+                let t = alpha * x[j];
+                if t != 0.0 {
+                    let col = &a[j * lda..j * lda + m];
+                    for i in 0..m {
+                        y[i] += t * col[i];
+                    }
+                }
+            }
+        }
+        Trans::T => {
+            debug_assert!(x.len() >= m && y.len() >= n);
+            for j in 0..n {
+                let col = &a[j * lda..j * lda + m];
+                let s = super::ddot(col, &x[..m]);
+                y[j] = alpha * s + beta * y[j];
+            }
+        }
+    }
+}
+
+/// y := alpha A x + beta y for symmetric A (only the `uplo` triangle is
+/// referenced), n x n, leading dimension `lda`.
+pub fn dsymv(
+    uplo: Uplo,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    x: &[f64],
+    beta: f64,
+    y: &mut [f64],
+) {
+    if beta != 1.0 {
+        for yi in y[..n].iter_mut() {
+            *yi *= beta;
+        }
+    }
+    match uplo {
+        Uplo::Upper => {
+            // Column sweep: for column j, the stored part is rows 0..=j.
+            for j in 0..n {
+                let t1 = alpha * x[j];
+                let mut t2 = 0.0;
+                let col = &a[j * lda..j * lda + j + 1];
+                for i in 0..j {
+                    y[i] += t1 * col[i];
+                    t2 += col[i] * x[i];
+                }
+                y[j] += t1 * col[j] + alpha * t2;
+            }
+        }
+        Uplo::Lower => {
+            for j in 0..n {
+                let t1 = alpha * x[j];
+                let mut t2 = 0.0;
+                let col = &a[j * lda + j..j * lda + n];
+                y[j] += t1 * col[0];
+                for (k, &ajk) in col.iter().enumerate().skip(1) {
+                    let i = j + k;
+                    y[i] += t1 * ajk;
+                    t2 += ajk * x[i];
+                }
+                y[j] += alpha * t2;
+            }
+        }
+    }
+}
+
+/// Solve op(A) x = b in place for triangular A (n x n, `lda`), b in `x`.
+pub fn dtrsv(
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    x: &mut [f64],
+) {
+    match (uplo, trans) {
+        (Uplo::Upper, Trans::N) => {
+            // Back substitution, column-oriented.
+            for j in (0..n).rev() {
+                if x[j] != 0.0 {
+                    if diag == Diag::NonUnit {
+                        x[j] /= a[j + j * lda];
+                    }
+                    let t = x[j];
+                    let col = &a[j * lda..j * lda + j];
+                    for i in 0..j {
+                        x[i] -= t * col[i];
+                    }
+                }
+            }
+        }
+        (Uplo::Upper, Trans::T) => {
+            // Uᵀ is lower: forward substitution with dots down columns.
+            for j in 0..n {
+                let col = &a[j * lda..j * lda + j];
+                let s = super::ddot(col, &x[..j]);
+                let mut t = x[j] - s;
+                if diag == Diag::NonUnit {
+                    t /= a[j + j * lda];
+                }
+                x[j] = t;
+            }
+        }
+        (Uplo::Lower, Trans::N) => {
+            for j in 0..n {
+                if x[j] != 0.0 {
+                    if diag == Diag::NonUnit {
+                        x[j] /= a[j + j * lda];
+                    }
+                    let t = x[j];
+                    let col = &a[j * lda + j + 1..j * lda + n];
+                    for (k, &aij) in col.iter().enumerate() {
+                        x[j + 1 + k] -= t * aij;
+                    }
+                }
+            }
+        }
+        (Uplo::Lower, Trans::T) => {
+            for j in (0..n).rev() {
+                let col = &a[j * lda + j + 1..j * lda + n];
+                let mut s = 0.0;
+                for (k, &aij) in col.iter().enumerate() {
+                    s += aij * x[j + 1 + k];
+                }
+                let mut t = x[j] - s;
+                if diag == Diag::NonUnit {
+                    t /= a[j + j * lda];
+                }
+                x[j] = t;
+            }
+        }
+    }
+}
+
+/// Triangular matrix-vector product x := op(A) x.
+pub fn dtrmv(
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    x: &mut [f64],
+) {
+    match (uplo, trans) {
+        (Uplo::Upper, Trans::N) => {
+            for j in 0..n {
+                // process columns left to right accumulating into earlier rows
+                let t = x[j];
+                if t != 0.0 {
+                    let col = &a[j * lda..j * lda + j];
+                    for i in 0..j {
+                        x[i] += t * col[i];
+                    }
+                }
+                if diag == Diag::NonUnit {
+                    x[j] *= a[j + j * lda];
+                }
+            }
+        }
+        (Uplo::Upper, Trans::T) => {
+            for j in (0..n).rev() {
+                let col = &a[j * lda..j * lda + j];
+                let mut s = if diag == Diag::NonUnit { x[j] * a[j + j * lda] } else { x[j] };
+                s += super::ddot(col, &x[..j]);
+                x[j] = s;
+            }
+        }
+        (Uplo::Lower, Trans::N) => {
+            for j in (0..n).rev() {
+                let t = x[j];
+                if diag == Diag::NonUnit {
+                    x[j] *= a[j + j * lda];
+                }
+                if t != 0.0 {
+                    for i in (j + 1)..n {
+                        x[i] += t * a[i + j * lda];
+                    }
+                }
+            }
+        }
+        (Uplo::Lower, Trans::T) => {
+            for j in 0..n {
+                let mut s = if diag == Diag::NonUnit { x[j] * a[j + j * lda] } else { x[j] };
+                for i in (j + 1)..n {
+                    s += a[i + j * lda] * x[i];
+                }
+                x[j] = s;
+            }
+        }
+    }
+}
+
+/// Rank-1 update A += alpha x yᵀ (m x n, `lda`).
+pub fn dger(m: usize, n: usize, alpha: f64, x: &[f64], y: &[f64], a: &mut [f64], lda: usize) {
+    for j in 0..n {
+        let t = alpha * y[j];
+        if t != 0.0 {
+            let col = &mut a[j * lda..j * lda + m];
+            for i in 0..m {
+                col[i] += t * x[i];
+            }
+        }
+    }
+}
+
+/// Symmetric rank-2 update A += alpha (x yᵀ + y xᵀ), `uplo` triangle only.
+pub fn dsyr2(uplo: Uplo, n: usize, alpha: f64, x: &[f64], y: &[f64], a: &mut [f64], lda: usize) {
+    match uplo {
+        Uplo::Upper => {
+            for j in 0..n {
+                let t1 = alpha * y[j];
+                let t2 = alpha * x[j];
+                let col = &mut a[j * lda..j * lda + j + 1];
+                for i in 0..=j {
+                    col[i] += x[i] * t1 + y[i] * t2;
+                }
+            }
+        }
+        Uplo::Lower => {
+            for j in 0..n {
+                let t1 = alpha * y[j];
+                let t2 = alpha * x[j];
+                for i in j..n {
+                    a[i + j * lda] += x[i] * t1 + y[i] * t2;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    fn approx(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemv_n_matches_naive() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(6, 4, &mut rng);
+        let x: Vec<f64> = (0..4).map(|i| i as f64 + 1.0).collect();
+        let mut y = vec![1.0; 6];
+        let mut expect = a.matvec_naive(&x);
+        for (e, yi) in expect.iter_mut().zip(&y) {
+            *e = 2.0 * *e + 3.0 * yi;
+        }
+        dgemv(Trans::N, 6, 4, 2.0, a.as_slice(), 6, &x, 3.0, &mut y);
+        approx(&y, &expect, 1e-13);
+    }
+
+    #[test]
+    fn gemv_t_matches_naive() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(6, 4, &mut rng);
+        let x: Vec<f64> = (0..6).map(|i| i as f64 - 2.0).collect();
+        let expect = a.transpose().matvec_naive(&x);
+        let mut y = vec![0.0; 4];
+        dgemv(Trans::T, 6, 4, 1.0, a.as_slice(), 6, &x, 0.0, &mut y);
+        approx(&y, &expect, 1e-13);
+    }
+
+    #[test]
+    fn symv_upper_equals_full_product() {
+        let mut rng = Rng::new(3);
+        let n = 7;
+        let a = Matrix::randn_sym(n, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let expect = a.matvec_naive(&x);
+        // poison the lower triangle to prove it is not referenced
+        let mut au = a.clone();
+        for j in 0..n {
+            for i in (j + 1)..n {
+                au[(i, j)] = f64::NAN;
+            }
+        }
+        let mut y = vec![0.0; n];
+        dsymv(Uplo::Upper, n, 1.0, au.as_slice(), n, &x, 0.0, &mut y);
+        approx(&y, &expect, 1e-13);
+    }
+
+    #[test]
+    fn symv_lower_equals_full_product() {
+        let mut rng = Rng::new(4);
+        let n = 6;
+        let a = Matrix::randn_sym(n, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let expect = a.matvec_naive(&x);
+        let mut al = a.clone();
+        for j in 0..n {
+            for i in 0..j {
+                al[(i, j)] = f64::NAN;
+            }
+        }
+        let mut y = vec![0.0; n];
+        dsymv(Uplo::Lower, n, 1.0, al.as_slice(), n, &x, 0.0, &mut y);
+        approx(&y, &expect, 1e-13);
+    }
+
+    fn upper_triangular(n: usize, rng: &mut Rng) -> Matrix {
+        let mut u = Matrix::randn(n, n, rng);
+        for j in 0..n {
+            for i in (j + 1)..n {
+                u[(i, j)] = 0.0;
+            }
+            u[(j, j)] = 2.0 + u[(j, j)].abs(); // well-conditioned
+        }
+        u
+    }
+
+    #[test]
+    fn trsv_upper_n_solves() {
+        let mut rng = Rng::new(5);
+        let n = 8;
+        let u = upper_triangular(n, &mut rng);
+        let xtrue: Vec<f64> = (0..n).map(|i| i as f64 + 0.5).collect();
+        let mut b = u.matvec_naive(&xtrue);
+        dtrsv(Uplo::Upper, Trans::N, Diag::NonUnit, n, u.as_slice(), n, &mut b);
+        approx(&b, &xtrue, 1e-12);
+    }
+
+    #[test]
+    fn trsv_upper_t_solves() {
+        let mut rng = Rng::new(6);
+        let n = 8;
+        let u = upper_triangular(n, &mut rng);
+        let xtrue: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let mut b = u.transpose().matvec_naive(&xtrue);
+        dtrsv(Uplo::Upper, Trans::T, Diag::NonUnit, n, u.as_slice(), n, &mut b);
+        approx(&b, &xtrue, 1e-12);
+    }
+
+    #[test]
+    fn trsv_lower_roundtrip() {
+        let mut rng = Rng::new(7);
+        let n = 6;
+        let l = upper_triangular(n, &mut rng).transpose();
+        let xtrue: Vec<f64> = (0..n).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        let mut b = l.matvec_naive(&xtrue);
+        dtrsv(Uplo::Lower, Trans::N, Diag::NonUnit, n, l.as_slice(), n, &mut b);
+        approx(&b, &xtrue, 1e-12);
+        let mut b2 = l.transpose().matvec_naive(&xtrue);
+        dtrsv(Uplo::Lower, Trans::T, Diag::NonUnit, n, l.as_slice(), n, &mut b2);
+        approx(&b2, &xtrue, 1e-12);
+    }
+
+    #[test]
+    fn trmv_matches_matvec() {
+        let mut rng = Rng::new(8);
+        let n = 7;
+        let u = upper_triangular(n, &mut rng);
+        for trans in [Trans::N, Trans::T] {
+            let x: Vec<f64> = (0..n).map(|i| i as f64 - 3.0).collect();
+            let expect = match trans {
+                Trans::N => u.matvec_naive(&x),
+                Trans::T => u.transpose().matvec_naive(&x),
+            };
+            let mut xv = x.clone();
+            dtrmv(Uplo::Upper, trans, Diag::NonUnit, n, u.as_slice(), n, &mut xv);
+            approx(&xv, &expect, 1e-12);
+        }
+    }
+
+    #[test]
+    fn trmv_lower_matches() {
+        let mut rng = Rng::new(81);
+        let n = 6;
+        let l = upper_triangular(n, &mut rng).transpose();
+        for trans in [Trans::N, Trans::T] {
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).cos()).collect();
+            let expect = match trans {
+                Trans::N => l.matvec_naive(&x),
+                Trans::T => l.transpose().matvec_naive(&x),
+            };
+            let mut xv = x.clone();
+            dtrmv(Uplo::Lower, trans, Diag::NonUnit, n, l.as_slice(), n, &mut xv);
+            approx(&xv, &expect, 1e-12);
+        }
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let mut a = Matrix::zeros(3, 2);
+        dger(3, 2, 2.0, &[1.0, 2.0, 3.0], &[4.0, 5.0], a.as_mut_slice(), 3);
+        assert_eq!(a[(2, 1)], 2.0 * 3.0 * 5.0);
+        assert_eq!(a[(0, 0)], 8.0);
+    }
+
+    #[test]
+    fn syr2_symmetric_update() {
+        let mut rng = Rng::new(9);
+        let n = 5;
+        let a0 = Matrix::randn_sym(n, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let y: Vec<f64> = (0..n).map(|i| (i as f64).powi(2)).collect();
+        // dense oracle
+        let mut expect = a0.clone();
+        for j in 0..n {
+            for i in 0..n {
+                expect[(i, j)] += 1.5 * (x[i] * y[j] + y[i] * x[j]);
+            }
+        }
+        for uplo in [Uplo::Upper, Uplo::Lower] {
+            let mut a = a0.clone();
+            dsyr2(uplo, n, 1.5, &x, &y, a.as_mut_slice(), n);
+            for j in 0..n {
+                let range: Box<dyn Iterator<Item = usize>> = match uplo {
+                    Uplo::Upper => Box::new(0..=j),
+                    Uplo::Lower => Box::new(j..n),
+                };
+                for i in range {
+                    assert!((a[(i, j)] - expect[(i, j)]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+}

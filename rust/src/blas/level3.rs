@@ -1,0 +1,1003 @@
+//! BLAS level 3: blocked matrix-matrix operations.
+//!
+//! `dgemm` is the workhorse (GEBP-style i/p blocking with a 4-column axpy
+//! microkernel over contiguous columns); `dtrsm` is blocked on the
+//! triangular dimension with `dgemm` updates — these two carry GS2, BT1 and
+//! the Q-accumulations, i.e. every Level-3 row of the paper's Table 1.
+
+use super::{Diag, Side, Trans, Uplo};
+
+/// Row-block (i) and depth-block (p) sizes for the GEBP gemm.  Tuned for a
+/// ~1 MiB L2: the A panel is MB*KB*8 = 512 KiB and the C column stripe
+/// MB*8 = 2 KiB per column.
+const MB: usize = 256;
+const KB: usize = 256;
+/// Triangular-block size for blocked `dtrsm`.
+const TRSM_NB: usize = 64;
+
+/// C := alpha op(A) op(B) + beta C, C is m x n, op(A) m x k, op(B) k x n.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm(
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    // beta-scale C
+    if beta != 1.0 {
+        for j in 0..n {
+            let col = &mut c[j * ldc..j * ldc + m];
+            if beta == 0.0 {
+                col.fill(0.0);
+            } else {
+                for v in col.iter_mut() {
+                    *v *= beta;
+                }
+            }
+        }
+    }
+    if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    match (transa, transb) {
+        (Trans::N, Trans::N) => gemm_nn(m, n, k, alpha, a, lda, b, ldb, c, ldc),
+        (Trans::T, Trans::N) => {
+            // C[i,j] += alpha * dot(A[:,i], B[:,j]); contiguous dots.
+            for j in 0..n {
+                let bcol = &b[j * ldb..j * ldb + k];
+                for i in 0..m {
+                    let acol = &a[i * lda..i * lda + k];
+                    c[i + j * ldc] += alpha * super::ddot(acol, bcol);
+                }
+            }
+        }
+        (Trans::N, Trans::T) => {
+            // op(B)[p,j] = B[j,p]: for fixed p, contiguous in j.
+            for p in 0..k {
+                let acol = &a[p * lda..p * lda + m];
+                for j in 0..n {
+                    let t = alpha * b[j + p * ldb];
+                    if t != 0.0 {
+                        let ccol = &mut c[j * ldc..j * ldc + m];
+                        for i in 0..m {
+                            ccol[i] += t * acol[i];
+                        }
+                    }
+                }
+            }
+        }
+        (Trans::T, Trans::T) => {
+            for j in 0..n {
+                for i in 0..m {
+                    let mut s = 0.0;
+                    for p in 0..k {
+                        s += a[p + i * lda] * b[j + p * ldb];
+                    }
+                    c[i + j * ldc] += alpha * s;
+                }
+            }
+        }
+    }
+}
+
+/// The hot path: C += alpha * A * B with i/p cache blocking and a 4-wide
+/// rank-update microkernel on contiguous columns.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    for pp in (0..k).step_by(KB) {
+        let pe = (pp + KB).min(k);
+        for ii in (0..m).step_by(MB) {
+            let ie = (ii + MB).min(m);
+            let mb = ie - ii;
+            let mut j = 0;
+            // 2-column x 4-deep microkernel: each pass over the A panel
+            // feeds two C stripes, halving A traffic from L2.
+            while j + 2 <= n {
+                let (cl, cr) = c.split_at_mut(ii + (j + 1) * ldc);
+                let c0 = &mut cl[ii + j * ldc..ii + j * ldc + mb];
+                let c1 = &mut cr[..mb];
+                let mut p = pp;
+                while p + 4 <= pe {
+                    let b00 = alpha * b[p + j * ldb];
+                    let b10 = alpha * b[p + 1 + j * ldb];
+                    let b20 = alpha * b[p + 2 + j * ldb];
+                    let b30 = alpha * b[p + 3 + j * ldb];
+                    let b01 = alpha * b[p + (j + 1) * ldb];
+                    let b11 = alpha * b[p + 1 + (j + 1) * ldb];
+                    let b21 = alpha * b[p + 2 + (j + 1) * ldb];
+                    let b31 = alpha * b[p + 3 + (j + 1) * ldb];
+                    let a0 = &a[ii + p * lda..ii + p * lda + mb];
+                    let a1 = &a[ii + (p + 1) * lda..ii + (p + 1) * lda + mb];
+                    let a2 = &a[ii + (p + 2) * lda..ii + (p + 2) * lda + mb];
+                    let a3 = &a[ii + (p + 3) * lda..ii + (p + 3) * lda + mb];
+                    for i in 0..mb {
+                        let (v0, v1, v2, v3) = (a0[i], a1[i], a2[i], a3[i]);
+                        c0[i] += v0 * b00 + v1 * b10 + v2 * b20 + v3 * b30;
+                        c1[i] += v0 * b01 + v1 * b11 + v2 * b21 + v3 * b31;
+                    }
+                    p += 4;
+                }
+                while p < pe {
+                    let t0 = alpha * b[p + j * ldb];
+                    let t1 = alpha * b[p + (j + 1) * ldb];
+                    let acol = &a[ii + p * lda..ii + p * lda + mb];
+                    for i in 0..mb {
+                        c0[i] += t0 * acol[i];
+                        c1[i] += t1 * acol[i];
+                    }
+                    p += 1;
+                }
+                j += 2;
+            }
+            // odd tail column: the single-stripe kernel
+            while j < n {
+                let ccol = &mut c[ii + j * ldc..ii + j * ldc + mb];
+                let mut p = pp;
+                while p + 4 <= pe {
+                    let b0 = alpha * b[p + j * ldb];
+                    let b1 = alpha * b[p + 1 + j * ldb];
+                    let b2 = alpha * b[p + 2 + j * ldb];
+                    let b3 = alpha * b[p + 3 + j * ldb];
+                    let a0 = &a[ii + p * lda..ii + p * lda + mb];
+                    let a1 = &a[ii + (p + 1) * lda..ii + (p + 1) * lda + mb];
+                    let a2 = &a[ii + (p + 2) * lda..ii + (p + 2) * lda + mb];
+                    let a3 = &a[ii + (p + 3) * lda..ii + (p + 3) * lda + mb];
+                    for i in 0..mb {
+                        ccol[i] += a0[i] * b0 + a1[i] * b1 + a2[i] * b2 + a3[i] * b3;
+                    }
+                    p += 4;
+                }
+                while p < pe {
+                    let t = alpha * b[p + j * ldb];
+                    if t != 0.0 {
+                        let acol = &a[ii + p * lda..ii + p * lda + mb];
+                        for i in 0..mb {
+                            ccol[i] += t * acol[i];
+                        }
+                    }
+                    p += 1;
+                }
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Solve op(A) X = alpha B (Left) or X op(A) = alpha B (Right) in place;
+/// B is m x n, A triangular (`uplo`, `diag`).  Blocked on the triangular
+/// dimension with `dgemm` trailing updates.
+#[allow(clippy::too_many_arguments)]
+pub fn dtrsm(
+    side: Side,
+    uplo: Uplo,
+    transa: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &mut [f64],
+    ldb: usize,
+) {
+    if alpha != 1.0 {
+        for j in 0..n {
+            for v in b[j * ldb..j * ldb + m].iter_mut() {
+                *v *= alpha;
+            }
+        }
+    }
+    match (side, uplo, transa) {
+        (Side::Left, Uplo::Upper, Trans::N) => {
+            // Back substitution over row blocks, bottom-up, right-looking.
+            let nb = TRSM_NB;
+            let nblk = m.div_ceil(nb);
+            for kb in (0..nblk).rev() {
+                let ks = kb * nb;
+                let ke = (ks + nb).min(m);
+                let kw = ke - ks;
+                // solve U_kk X_k = B_k column by column
+                for j in 0..n {
+                    solve_small_upper_n(diag, kw, &a[ks + ks * lda..], lda, &mut b[ks + j * ldb..ks + j * ldb + kw]);
+                }
+                // B[0..ks, :] -= U[0..ks, k] * X_k: X_k copied to a scratch
+                // panel (it lives in the same buffer as B), then one dgemm —
+                // the blocked-microkernel path carries the whole update.
+                if ks > 0 {
+                    let mut xk = vec![0.0; kw * n];
+                    for j in 0..n {
+                        xk[j * kw..j * kw + kw]
+                            .copy_from_slice(&b[ks + j * ldb..ks + j * ldb + kw]);
+                    }
+                    dgemm(Trans::N, Trans::N, ks, n, kw, -1.0, &a[ks * lda..], lda, &xk, kw, 1.0, b, ldb);
+                }
+            }
+        }
+        (Side::Left, Uplo::Upper, Trans::T) => {
+            // Uᵀ is lower: forward substitution, top-down.
+            let nb = TRSM_NB;
+            let nblk = m.div_ceil(nb);
+            for kb in 0..nblk {
+                let ks = kb * nb;
+                let ke = (ks + nb).min(m);
+                let kw = ke - ks;
+                for j in 0..n {
+                    solve_small_upper_t(diag, kw, &a[ks + ks * lda..], lda, &mut b[ks + j * ldb..ks + j * ldb + kw]);
+                }
+                // B[ke.., :] -= U[ks..ke, ke..]ᵀ X_k: copy X_k to a scratch
+                // panel, transpose the U block once, and run the update
+                // through the dgemm microkernel (the GS2 hot path).
+                if ke < m {
+                    let rest = m - ke;
+                    let mut xk = vec![0.0; kw * n];
+                    for j in 0..n {
+                        xk[j * kw..j * kw + kw]
+                            .copy_from_slice(&b[ks + j * ldb..ks + j * ldb + kw]);
+                    }
+                    // Uᵀ block: (rest x kw) from U[ks..ke, ke..m]
+                    let mut ut = vec![0.0; rest * kw];
+                    for c in 0..rest {
+                        for r in 0..kw {
+                            ut[c + r * rest] = a[ks + r + (ke + c) * lda];
+                        }
+                    }
+                    let (_, brest) = b.split_at_mut(ke);
+                    dgemm(Trans::N, Trans::N, rest, n, kw, -1.0, &ut, rest, &xk, kw, 1.0, brest, ldb);
+                }
+            }
+        }
+        (Side::Left, Uplo::Lower, Trans::N) => {
+            for j in 0..n {
+                super::dtrsv(Uplo::Lower, Trans::N, diag, m, a, lda, &mut b[j * ldb..j * ldb + m]);
+            }
+        }
+        (Side::Left, Uplo::Lower, Trans::T) => {
+            for j in 0..n {
+                super::dtrsv(Uplo::Lower, Trans::T, diag, m, a, lda, &mut b[j * ldb..j * ldb + m]);
+            }
+        }
+        (Side::Right, Uplo::Upper, Trans::N) => {
+            // X U = B: left-looking over column blocks of X.
+            let nb = TRSM_NB;
+            let nblk = n.div_ceil(nb);
+            for kb in 0..nblk {
+                let ks = kb * nb;
+                let ke = (ks + nb).min(n);
+                // B_k -= X[:, 0..ks] * U[0..ks, k]: the solved columns and
+                // the current block occupy disjoint column ranges of B, so
+                // one split gives dgemm both operands (microkernel path).
+                if ks > 0 {
+                    let (xdone, bk) = b.split_at_mut(ks * ldb);
+                    dgemm(
+                        Trans::N,
+                        Trans::N,
+                        m,
+                        ke - ks,
+                        ks,
+                        -1.0,
+                        xdone,
+                        ldb,
+                        &a[ks * lda..],
+                        lda,
+                        1.0,
+                        bk,
+                        ldb,
+                    );
+                }
+                // solve X_k U_kk = B_k: columns within the block, forward.
+                for j in ks..ke {
+                    // subtract contributions of earlier columns in the block
+                    for p in ks..j {
+                        let t = a[p + j * lda];
+                        if t != 0.0 {
+                            let (xp, xj) = two_cols(b, p * ldb, j * ldb, m);
+                            for i in 0..m {
+                                xj[i] -= t * xp[i];
+                            }
+                        }
+                    }
+                    if diag == Diag::NonUnit {
+                        let d = 1.0 / a[j + j * lda];
+                        for v in b[j * ldb..j * ldb + m].iter_mut() {
+                            *v *= d;
+                        }
+                    }
+                }
+            }
+        }
+        (Side::Right, Uplo::Upper, Trans::T) => {
+            // X Uᵀ = B: B[:,j] depends on X[:,p] for p >= j -> backward.
+            for j in (0..n).rev() {
+                for p in (j + 1)..n {
+                    let t = a[j + p * lda];
+                    if t != 0.0 {
+                        let (xj, xp) = two_cols(b, j * ldb, p * ldb, m);
+                        for i in 0..m {
+                            xj[i] -= t * xp[i];
+                        }
+                    }
+                }
+                if diag == Diag::NonUnit {
+                    let d = 1.0 / a[j + j * lda];
+                    for v in b[j * ldb..j * ldb + m].iter_mut() {
+                        *v *= d;
+                    }
+                }
+            }
+        }
+        (Side::Right, Uplo::Lower, Trans::N) => {
+            // X L = B: column j depends on X[:,p] for p >= j -> backward.
+            for j in (0..n).rev() {
+                for p in (j + 1)..n {
+                    let t = a[p + j * lda];
+                    if t != 0.0 {
+                        let (xj, xp) = two_cols(b, j * ldb, p * ldb, m);
+                        for i in 0..m {
+                            xj[i] -= t * xp[i];
+                        }
+                    }
+                }
+                if diag == Diag::NonUnit {
+                    let d = 1.0 / a[j + j * lda];
+                    for v in b[j * ldb..j * ldb + m].iter_mut() {
+                        *v *= d;
+                    }
+                }
+            }
+        }
+        (Side::Right, Uplo::Lower, Trans::T) => {
+            // X Lᵀ = B: forward.
+            for j in 0..n {
+                for p in 0..j {
+                    let t = a[j + p * lda];
+                    if t != 0.0 {
+                        let (xp, xj) = two_cols(b, p * ldb, j * ldb, m);
+                        for i in 0..m {
+                            xj[i] -= t * xp[i];
+                        }
+                    }
+                }
+                if diag == Diag::NonUnit {
+                    let d = 1.0 / a[j + j * lda];
+                    for v in b[j * ldb..j * ldb + m].iter_mut() {
+                        *v *= d;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Split a buffer into two disjoint column slices at byte offsets o1 < o2.
+fn two_cols(buf: &mut [f64], o1: usize, o2: usize, m: usize) -> (&mut [f64], &mut [f64]) {
+    assert!(o1 + m <= o2, "columns must be disjoint and ordered");
+    let (lo, hi) = buf.split_at_mut(o2);
+    (&mut lo[o1..o1 + m], &mut hi[..m])
+}
+
+/// In-place small solve U x = b for the kw x kw upper block at `a` (lda).
+fn solve_small_upper_n(diag: Diag, kw: usize, a: &[f64], lda: usize, x: &mut [f64]) {
+    for j in (0..kw).rev() {
+        if x[j] != 0.0 {
+            if diag == Diag::NonUnit {
+                x[j] /= a[j + j * lda];
+            }
+            let t = x[j];
+            for i in 0..j {
+                x[i] -= t * a[i + j * lda];
+            }
+        }
+    }
+}
+
+/// In-place small solve Uᵀ x = b.
+fn solve_small_upper_t(diag: Diag, kw: usize, a: &[f64], lda: usize, x: &mut [f64]) {
+    for j in 0..kw {
+        let mut s = x[j];
+        for i in 0..j {
+            s -= a[i + j * lda] * x[i];
+        }
+        x[j] = if diag == Diag::NonUnit { s / a[j + j * lda] } else { s };
+    }
+}
+
+/// Symmetric rank-k update: C := alpha op(A) op(A)ᵀ + beta C on the `uplo`
+/// triangle.  `trans == N`: A is n x k; `trans == T`: A is k x n and the
+/// update is alpha AᵀA (the flavour blocked Cholesky uses).
+#[allow(clippy::too_many_arguments)]
+pub fn dsyrk(
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    // beta scale on the referenced triangle
+    for j in 0..n {
+        let (lo, hi) = match uplo {
+            Uplo::Upper => (0, j + 1),
+            Uplo::Lower => (j, n),
+        };
+        if beta != 1.0 {
+            for i in lo..hi {
+                c[i + j * ldc] *= beta;
+            }
+        }
+    }
+    if alpha == 0.0 {
+        return;
+    }
+    match trans {
+        Trans::T => {
+            if n >= 32 && k >= 32 {
+                // Fast path (the blocked-Cholesky trailing update): form Aᵀ
+                // once and push the work through the dgemm NN microkernel in
+                // 64-wide column blocks, accumulating only the triangle.
+                // The sliver of extra flops (half a diagonal block per
+                // column block) is noise next to the ~4x kernel speedup.
+                let mut at = vec![0.0; n * k];
+                for j in 0..n {
+                    let col = &a[j * lda..j * lda + k];
+                    for (p, &v) in col.iter().enumerate() {
+                        at[j + p * n] = v;
+                    }
+                }
+                const JB: usize = 64;
+                let mut scratch = vec![0.0; n * JB];
+                for jb in (0..n).step_by(JB) {
+                    let je = (jb + JB).min(n);
+                    let (row0, rows) = match uplo {
+                        Uplo::Upper => (0usize, je),
+                        Uplo::Lower => (jb, n - jb),
+                    };
+                    let sc = &mut scratch[..rows * (je - jb)];
+                    dgemm(
+                        Trans::N,
+                        Trans::N,
+                        rows,
+                        je - jb,
+                        k,
+                        alpha,
+                        &at[row0..],
+                        n,
+                        &a[jb * lda..],
+                        lda,
+                        0.0,
+                        sc,
+                        rows,
+                    );
+                    for j in jb..je {
+                        let (lo, hi) = match uplo {
+                            Uplo::Upper => (0, j + 1),
+                            Uplo::Lower => (j, n),
+                        };
+                        let scol = &sc[(j - jb) * rows..];
+                        for i in lo..hi {
+                            c[i + j * ldc] += scol[i - row0];
+                        }
+                    }
+                }
+            } else {
+                // C[i,j] += alpha * dot(A[:,i], A[:,j])
+                for j in 0..n {
+                    let ajc = &a[j * lda..j * lda + k];
+                    let (lo, hi) = match uplo {
+                        Uplo::Upper => (0, j + 1),
+                        Uplo::Lower => (j, n),
+                    };
+                    for i in lo..hi {
+                        let aic = &a[i * lda..i * lda + k];
+                        c[i + j * ldc] += alpha * super::ddot(aic, ajc);
+                    }
+                }
+            }
+        }
+        Trans::N => {
+            // C[:,j] (triangle part) += alpha * A * A[j,:]ᵀ
+            for p in 0..k {
+                for j in 0..n {
+                    let t = alpha * a[j + p * lda];
+                    if t != 0.0 {
+                        let (lo, hi) = match uplo {
+                            Uplo::Upper => (0, j + 1),
+                            Uplo::Lower => (j, n),
+                        };
+                        for i in lo..hi {
+                            c[i + j * ldc] += t * a[i + p * lda];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Symmetric matrix multiply C := alpha A B + beta C with A symmetric
+/// (`uplo` triangle stored) on the Left — used by the blocked DSYGST.
+#[allow(clippy::too_many_arguments)]
+pub fn dsymm_left(
+    uplo: Uplo,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    // One dsymv per column of B: C[:,j] = alpha A B[:,j] + beta C[:,j].
+    for j in 0..n {
+        let bcol = &b[j * ldb..j * ldb + m];
+        let ccol = &mut c[j * ldc..j * ldc + m];
+        super::dsymv(uplo, m, alpha, a, lda, bcol, beta, ccol);
+    }
+}
+
+/// Symmetric rank-2k update on the `uplo` triangle.
+/// `trans == N`: C := alpha (A Bᵀ + B Aᵀ) + beta C with A, B n x k — the
+/// trailing update of the blocked tridiagonalization (TD1) and the SBR band
+/// reduction (TT1).  `trans == T`: C := alpha (Aᵀ B + Bᵀ A) + beta C with
+/// A, B k x n — used by the blocked DSYGST.
+#[allow(clippy::too_many_arguments)]
+pub fn dsyr2k_t(
+    uplo: Uplo,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    for j in 0..n {
+        let (lo, hi) = match uplo {
+            Uplo::Upper => (0, j + 1),
+            Uplo::Lower => (j, n),
+        };
+        let ajc = &a[j * lda..j * lda + k];
+        let bjc = &b[j * ldb..j * ldb + k];
+        for i in lo..hi {
+            let aic = &a[i * lda..i * lda + k];
+            let bic = &b[i * ldb..i * ldb + k];
+            let s = super::ddot(aic, bjc) + super::ddot(bic, ajc);
+            let cij = &mut c[i + j * ldc];
+            *cij = alpha * s + beta * *cij;
+        }
+    }
+}
+
+/// Symmetric rank-2k update C := alpha (A Bᵀ + B Aᵀ) + beta C (`trans == N`,
+/// A and B n x k) on the `uplo` triangle — the trailing update of the
+/// blocked tridiagonalization (TD1) and of the SBR band reduction (TT1).
+#[allow(clippy::too_many_arguments)]
+pub fn dsyr2k(
+    uplo: Uplo,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    for j in 0..n {
+        let (lo, hi) = match uplo {
+            Uplo::Upper => (0, j + 1),
+            Uplo::Lower => (j, n),
+        };
+        if beta != 1.0 {
+            for i in lo..hi {
+                c[i + j * ldc] *= beta;
+            }
+        }
+    }
+    if alpha == 0.0 {
+        return;
+    }
+    for p in 0..k {
+        for j in 0..n {
+            let t1 = alpha * b[j + p * ldb];
+            let t2 = alpha * a[j + p * lda];
+            if t1 == 0.0 && t2 == 0.0 {
+                continue;
+            }
+            let (lo, hi) = match uplo {
+                Uplo::Upper => (0, j + 1),
+                Uplo::Lower => (j, n),
+            };
+            for i in lo..hi {
+                c[i + j * ldc] += t1 * a[i + p * lda] + t2 * b[i + p * ldb];
+            }
+        }
+    }
+}
+
+/// Triangular matrix multiply B := alpha op(A) B (Left) or alpha B op(A)
+/// (Right); unblocked column sweeps — used on narrow WY panels (larfb).
+#[allow(clippy::too_many_arguments)]
+pub fn dtrmm(
+    side: Side,
+    uplo: Uplo,
+    transa: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &mut [f64],
+    ldb: usize,
+) {
+    match side {
+        Side::Left => {
+            for j in 0..n {
+                let col = &mut b[j * ldb..j * ldb + m];
+                super::dtrmv(uplo, transa, diag, m, a, lda, col);
+                if alpha != 1.0 {
+                    for v in col.iter_mut() {
+                        *v *= alpha;
+                    }
+                }
+            }
+        }
+        Side::Right => {
+            // B := alpha B op(A): process columns in dependency order.
+            // Column j of the result is sum_p B[:,p] op(A)[p,j].
+            let effective = |p: usize, j: usize| -> f64 {
+                let (r, c) = match transa {
+                    Trans::N => (p, j),
+                    Trans::T => (j, p),
+                };
+                let in_tri = match uplo {
+                    Uplo::Upper => r <= c,
+                    Uplo::Lower => r >= c,
+                };
+                if !in_tri {
+                    0.0
+                } else if r == c && diag == Diag::Unit {
+                    1.0
+                } else {
+                    a[r + c * lda]
+                }
+            };
+            // result column j needs original columns p; compute into fresh
+            // storage to keep the sweep simple (panels here are narrow).
+            let mut out = vec![0.0; m * n];
+            for j in 0..n {
+                let oc = &mut out[j * m..(j + 1) * m];
+                for p in 0..n {
+                    let t = alpha * effective(p, j);
+                    if t != 0.0 {
+                        let bc = &b[p * ldb..p * ldb + m];
+                        for i in 0..m {
+                            oc[i] += t * bc[i];
+                        }
+                    }
+                }
+            }
+            for j in 0..n {
+                b[j * ldb..j * ldb + m].copy_from_slice(&out[j * m..(j + 1) * m]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    fn upper(n: usize, rng: &mut Rng) -> Matrix {
+        let mut u = Matrix::randn(n, n, rng);
+        for j in 0..n {
+            for i in (j + 1)..n {
+                u[(i, j)] = 0.0;
+            }
+            u[(j, j)] = 2.0 + u[(j, j)].abs();
+        }
+        u
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, n, k) in [(5, 4, 3), (67, 35, 129), (300, 7, 300)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let expect = a.matmul_naive(&b);
+            let mut c = Matrix::zeros(m, n);
+            dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, c.as_mut_slice(), m);
+            assert!(c.max_abs_diff(&expect) < 1e-10, "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let mut rng = Rng::new(2);
+        let (m, n, k) = (9, 8, 7);
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let c0 = Matrix::randn(m, n, &mut rng);
+        let mut expect = a.matmul_naive(&b);
+        for j in 0..n {
+            for i in 0..m {
+                expect[(i, j)] = 2.0 * expect[(i, j)] - 3.0 * c0[(i, j)];
+            }
+        }
+        let mut c = c0.clone();
+        dgemm(Trans::N, Trans::N, m, n, k, 2.0, a.as_slice(), m, b.as_slice(), k, -3.0, c.as_mut_slice(), m);
+        assert!(c.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn gemm_tn_nt_tt_match_naive() {
+        let mut rng = Rng::new(3);
+        let (m, n, k) = (14, 11, 17);
+        let an = Matrix::randn(m, k, &mut rng);
+        let bn = Matrix::randn(k, n, &mut rng);
+        let expect = an.matmul_naive(&bn);
+        let at = an.transpose(); // k x m, use with Trans::T
+        let bt = bn.transpose(); // n x k
+
+        let mut c = Matrix::zeros(m, n);
+        dgemm(Trans::T, Trans::N, m, n, k, 1.0, at.as_slice(), k, bn.as_slice(), k, 0.0, c.as_mut_slice(), m);
+        assert!(c.max_abs_diff(&expect) < 1e-12, "TN");
+
+        let mut c = Matrix::zeros(m, n);
+        dgemm(Trans::N, Trans::T, m, n, k, 1.0, an.as_slice(), m, bt.as_slice(), n, 0.0, c.as_mut_slice(), m);
+        assert!(c.max_abs_diff(&expect) < 1e-12, "NT");
+
+        let mut c = Matrix::zeros(m, n);
+        dgemm(Trans::T, Trans::T, m, n, k, 1.0, at.as_slice(), k, bt.as_slice(), n, 0.0, c.as_mut_slice(), m);
+        assert!(c.max_abs_diff(&expect) < 1e-12, "TT");
+    }
+
+    #[test]
+    fn trsm_left_upper_n_blocked() {
+        let mut rng = Rng::new(4);
+        let m = 150; // exercises multiple TRSM_NB blocks
+        let n = 13;
+        let u = upper(m, &mut rng);
+        let x = Matrix::randn(m, n, &mut rng);
+        let b = u.matmul_naive(&x);
+        let mut bx = b.clone();
+        dtrsm(Side::Left, Uplo::Upper, Trans::N, Diag::NonUnit, m, n, 1.0, u.as_slice(), m, bx.as_mut_slice(), m);
+        assert!(bx.max_abs_diff(&x) < 1e-9);
+    }
+
+    #[test]
+    fn trsm_left_upper_t_blocked() {
+        let mut rng = Rng::new(5);
+        let m = 150;
+        let n = 9;
+        let u = upper(m, &mut rng);
+        let x = Matrix::randn(m, n, &mut rng);
+        let b = u.transpose().matmul_naive(&x);
+        let mut bx = b.clone();
+        dtrsm(Side::Left, Uplo::Upper, Trans::T, Diag::NonUnit, m, n, 1.0, u.as_slice(), m, bx.as_mut_slice(), m);
+        assert!(bx.max_abs_diff(&x) < 1e-9);
+    }
+
+    #[test]
+    fn trsm_right_upper_n_blocked() {
+        let mut rng = Rng::new(6);
+        let m = 11;
+        let n = 140;
+        let u = upper(n, &mut rng);
+        let x = Matrix::randn(m, n, &mut rng);
+        let b = x.matmul_naive(&u);
+        let mut bx = b.clone();
+        dtrsm(Side::Right, Uplo::Upper, Trans::N, Diag::NonUnit, m, n, 1.0, u.as_slice(), n, bx.as_mut_slice(), m);
+        assert!(bx.max_abs_diff(&x) < 1e-9);
+    }
+
+    #[test]
+    fn trsm_right_upper_t() {
+        let mut rng = Rng::new(7);
+        let m = 8;
+        let n = 40;
+        let u = upper(n, &mut rng);
+        let x = Matrix::randn(m, n, &mut rng);
+        let b = x.matmul_naive(&u.transpose());
+        let mut bx = b.clone();
+        dtrsm(Side::Right, Uplo::Upper, Trans::T, Diag::NonUnit, m, n, 1.0, u.as_slice(), n, bx.as_mut_slice(), m);
+        assert!(bx.max_abs_diff(&x) < 1e-9);
+    }
+
+    #[test]
+    fn trsm_right_lower_both() {
+        let mut rng = Rng::new(71);
+        let m = 7;
+        let n = 33;
+        let l = upper(n, &mut rng).transpose();
+        let x = Matrix::randn(m, n, &mut rng);
+        let b = x.matmul_naive(&l);
+        let mut bx = b.clone();
+        dtrsm(Side::Right, Uplo::Lower, Trans::N, Diag::NonUnit, m, n, 1.0, l.as_slice(), n, bx.as_mut_slice(), m);
+        assert!(bx.max_abs_diff(&x) < 1e-9);
+        let b2 = x.matmul_naive(&l.transpose());
+        let mut bx2 = b2.clone();
+        dtrsm(Side::Right, Uplo::Lower, Trans::T, Diag::NonUnit, m, n, 1.0, l.as_slice(), n, bx2.as_mut_slice(), m);
+        assert!(bx2.max_abs_diff(&x) < 1e-9);
+    }
+
+    #[test]
+    fn trsm_left_lower_both() {
+        let mut rng = Rng::new(8);
+        let m = 60;
+        let n = 5;
+        let l = upper(m, &mut rng).transpose();
+        let x = Matrix::randn(m, n, &mut rng);
+        for trans in [Trans::N, Trans::T] {
+            let b = match trans {
+                Trans::N => l.matmul_naive(&x),
+                Trans::T => l.transpose().matmul_naive(&x),
+            };
+            let mut bx = b.clone();
+            dtrsm(Side::Left, Uplo::Lower, trans, Diag::NonUnit, m, n, 1.0, l.as_slice(), m, bx.as_mut_slice(), m);
+            assert!(bx.max_abs_diff(&x) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trsm_alpha_scales() {
+        let mut rng = Rng::new(9);
+        let m = 10;
+        let u = upper(m, &mut rng);
+        let x = Matrix::randn(m, 3, &mut rng);
+        let b = u.matmul_naive(&x);
+        let mut bx = b.clone();
+        dtrsm(Side::Left, Uplo::Upper, Trans::N, Diag::NonUnit, m, 3, 2.0, u.as_slice(), m, bx.as_mut_slice(), m);
+        let mut x2 = x.clone();
+        for v in x2.as_mut_slice() {
+            *v *= 2.0;
+        }
+        assert!(bx.max_abs_diff(&x2) < 1e-10);
+    }
+
+    #[test]
+    fn syrk_upper_t_matches_dense() {
+        let mut rng = Rng::new(10);
+        let (n, k) = (9, 6);
+        let a = Matrix::randn(k, n, &mut rng);
+        let full = a.transpose().matmul_naive(&a);
+        let mut c = Matrix::zeros(n, n);
+        dsyrk(Uplo::Upper, Trans::T, n, k, 1.0, a.as_slice(), k, 0.0, c.as_mut_slice(), n);
+        for j in 0..n {
+            for i in 0..=j {
+                assert!((c[(i, j)] - full[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_lower_n_matches_dense() {
+        let mut rng = Rng::new(11);
+        let (n, k) = (8, 5);
+        let a = Matrix::randn(n, k, &mut rng);
+        let full = a.matmul_naive(&a.transpose());
+        let mut c = Matrix::zeros(n, n);
+        dsyrk(Uplo::Lower, Trans::N, n, k, 1.0, a.as_slice(), n, 0.0, c.as_mut_slice(), n);
+        for j in 0..n {
+            for i in j..n {
+                assert!((c[(i, j)] - full[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn syr2k_lower_matches_dense() {
+        let mut rng = Rng::new(12);
+        let (n, k) = (10, 4);
+        let a = Matrix::randn(n, k, &mut rng);
+        let b = Matrix::randn(n, k, &mut rng);
+        let mut full = a.matmul_naive(&b.transpose());
+        let ba = b.matmul_naive(&a.transpose());
+        for j in 0..n {
+            for i in 0..n {
+                full[(i, j)] = -(full[(i, j)] + ba[(i, j)]);
+            }
+        }
+        let mut c = Matrix::zeros(n, n);
+        dsyr2k(Uplo::Lower, n, k, -1.0, a.as_slice(), n, b.as_slice(), n, 0.0, c.as_mut_slice(), n);
+        for j in 0..n {
+            for i in j..n {
+                assert!((c[(i, j)] - full[(i, j)]).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn trmm_left_matches_dense() {
+        let mut rng = Rng::new(13);
+        let m = 12;
+        let n = 5;
+        let u = upper(m, &mut rng);
+        let b = Matrix::randn(m, n, &mut rng);
+        for trans in [Trans::N, Trans::T] {
+            let expect = match trans {
+                Trans::N => u.matmul_naive(&b),
+                Trans::T => u.transpose().matmul_naive(&b),
+            };
+            let mut bx = b.clone();
+            dtrmm(Side::Left, Uplo::Upper, trans, Diag::NonUnit, m, n, 1.0, u.as_slice(), m, bx.as_mut_slice(), m);
+            assert!(bx.max_abs_diff(&expect) < 1e-11);
+        }
+    }
+
+    #[test]
+    fn trmm_right_matches_dense() {
+        let mut rng = Rng::new(14);
+        let m = 6;
+        let n = 9;
+        let u = upper(n, &mut rng);
+        let b = Matrix::randn(m, n, &mut rng);
+        for (uplo, a) in [(Uplo::Upper, u.clone()), (Uplo::Lower, u.transpose())] {
+            for trans in [Trans::N, Trans::T] {
+                let expect = match trans {
+                    Trans::N => b.matmul_naive(&a),
+                    Trans::T => b.matmul_naive(&a.transpose()),
+                };
+                let mut bx = b.clone();
+                dtrmm(Side::Right, uplo, trans, Diag::NonUnit, m, n, 1.0, a.as_slice(), n, bx.as_mut_slice(), m);
+                assert!(bx.max_abs_diff(&expect) < 1e-11);
+            }
+        }
+    }
+
+    #[test]
+    fn trmm_unit_diag_ignores_diagonal() {
+        let mut rng = Rng::new(15);
+        let m = 7;
+        let mut u = upper(m, &mut rng);
+        let b = Matrix::randn(m, 3, &mut rng);
+        // oracle with implicit unit diagonal
+        let mut u1 = u.clone();
+        for i in 0..m {
+            u1[(i, i)] = 1.0;
+        }
+        let expect = u1.matmul_naive(&b);
+        // poison the stored diagonal: Unit must not read it
+        for i in 0..m {
+            u[(i, i)] = f64::NAN;
+        }
+        let mut bx = b.clone();
+        dtrmm(Side::Left, Uplo::Upper, Trans::N, Diag::Unit, m, 3, 1.0, u.as_slice(), m, bx.as_mut_slice(), m);
+        assert!(bx.max_abs_diff(&expect) < 1e-11);
+    }
+}

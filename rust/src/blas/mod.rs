@@ -1,0 +1,45 @@
+//! From-scratch BLAS (levels 1–3), column-major, LAPACK calling style.
+//!
+//! This is the substrate the paper's Table 1 builds on (MKL/GotoBLAS2 in the
+//! original): raw-slice routines with explicit leading dimensions so the
+//! blocked LAPACK/SBR algorithms can walk submatrices without copies.
+//! Level-3 routines are cache-blocked; the distinction the paper leans on —
+//! Level-2 (memory-bound) vs Level-3 (compute-bound) — is therefore
+//! reproduced structurally: `dsymv`/`dtrsv` stream the matrix once per call,
+//! `dgemm`/`dtrsm`/`dsyr2k` reuse blocked panels.
+
+pub mod level1;
+pub mod level2;
+pub mod level3;
+
+pub use level1::*;
+pub use level2::*;
+pub use level3::*;
+
+/// Transposition flag.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Trans {
+    N,
+    T,
+}
+
+/// Which triangle of a symmetric/triangular matrix is referenced.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Uplo {
+    Upper,
+    Lower,
+}
+
+/// Side of a triangular multiply/solve.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Side {
+    Left,
+    Right,
+}
+
+/// Unit-diagonal flag for triangular ops.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Diag {
+    NonUnit,
+    Unit,
+}

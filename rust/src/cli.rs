@@ -1,0 +1,97 @@
+//! Minimal command-line argument parser (the offline crate set has no
+//! clap — DESIGN.md substitution #6).  Supports subcommands, `--key value`
+//! options, and `--flag` booleans.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // value present and not another option?
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.opts.insert(name.to_string(), v);
+                    }
+                    _ => out.flags.push(name.to_string()),
+                }
+            } else {
+                out.command.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn command_at(&self, i: usize) -> Option<&str> {
+        self.command.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommands_and_options() {
+        let a = parse("experiment table2 --n 500 --variant KE");
+        assert_eq!(a.command_at(0), Some("experiment"));
+        assert_eq!(a.command_at(1), Some("table2"));
+        assert_eq!(a.get_usize("n", 0), 500);
+        assert_eq!(a.get("variant"), Some("KE"));
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = parse("runtime --inventory --n 256");
+        assert!(a.flag("inventory"));
+        assert_eq!(a.get_usize("n", 0), 256);
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("solve --quick");
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("solve");
+        assert_eq!(a.get_usize("n", 123), 123);
+        assert_eq!(a.get_u64("seed", 7), 7);
+    }
+}

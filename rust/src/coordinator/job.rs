@@ -1,0 +1,84 @@
+//! Job descriptions and outcomes.
+
+use crate::matrix::Matrix;
+use crate::solver::accuracy::Accuracy;
+use crate::solver::gsyeig::{Problem, Variant, Which};
+
+/// Where the pencil comes from.
+#[derive(Clone)]
+pub enum WorkloadSpec {
+    /// MD/NMA synthetic instance (solved via the inverse-pencil trick).
+    Md { n: usize, seed: u64 },
+    /// DFT synthetic instance.
+    Dft { n: usize, seed: u64 },
+    /// Caller-provided matrices.
+    Inline { a: Matrix, b: Matrix, which: Which },
+}
+
+impl WorkloadSpec {
+    pub fn n(&self) -> usize {
+        match self {
+            WorkloadSpec::Md { n, .. } | WorkloadSpec::Dft { n, .. } => *n,
+            WorkloadSpec::Inline { a, .. } => a.rows(),
+        }
+    }
+
+    /// Materialize the pencil the solver should see (already inverted for
+    /// MD) and the wanted end.
+    pub fn realize(&self) -> (Problem, Which) {
+        match self {
+            WorkloadSpec::Md { n, seed } => {
+                let mut w = crate::workloads::MdWorkload::with_n(*n);
+                w.seed = *seed;
+                let (p, which, _) = w.solver_problem();
+                (p, which)
+            }
+            WorkloadSpec::Dft { n, seed } => {
+                let mut w = crate::workloads::DftWorkload::with_n(*n);
+                w.seed = *seed;
+                let (p, _) = w.problem();
+                (p, w.which())
+            }
+            WorkloadSpec::Inline { a, b, which } => {
+                (Problem::new(a.clone(), b.clone()), *which)
+            }
+        }
+    }
+}
+
+/// What to solve and how.
+#[derive(Clone)]
+pub struct JobSpec {
+    pub workload: WorkloadSpec,
+    /// Wanted eigenpairs.
+    pub s: usize,
+    /// Force a variant; `None` lets the router decide (paper §6 policy).
+    pub variant: Option<Variant>,
+    /// Key for the Cholesky-factor cache: jobs sharing a B matrix (e.g.
+    /// all k-points of one SCF cycle) should share a key.
+    pub b_cache_key: Option<u64>,
+}
+
+pub struct Job {
+    pub id: u64,
+    pub spec: JobSpec,
+}
+
+/// Result record for one job.
+#[derive(Clone)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub variant: Variant,
+    pub router_reason: &'static str,
+    pub n: usize,
+    pub s: usize,
+    pub eigenvalues: Vec<f64>,
+    /// Generalized eigenvectors (n x s) — SCF density assembly needs them.
+    pub x: Matrix,
+    pub accuracy: Accuracy,
+    pub total_seconds: f64,
+    pub matvecs: usize,
+    pub converged: bool,
+    /// Whether GS1 was served from the factor cache.
+    pub gs1_cached: bool,
+}

@@ -1,0 +1,88 @@
+//! Coordinator metrics: throughput, latency distribution, cache hits.
+
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    latencies: Vec<f64>,
+    jobs_done: usize,
+    gs1_cache_hits: usize,
+    matvecs_total: usize,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub jobs_done: usize,
+    pub gs1_cache_hits: usize,
+    pub matvecs_total: usize,
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_mean: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, latency_s: f64, gs1_cached: bool, matvecs: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies.push(latency_s);
+        g.jobs_done += 1;
+        if gs1_cached {
+            g.gs1_cache_hits += 1;
+        }
+        g.matvecs_total += matvecs;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[((lat.len() - 1) as f64 * p) as usize]
+            }
+        };
+        MetricsSnapshot {
+            jobs_done: g.jobs_done,
+            gs1_cache_hits: g.gs1_cache_hits,
+            matvecs_total: g.matvecs_total,
+            latency_p50: pct(0.5),
+            latency_p95: pct(0.95),
+            latency_mean: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record(i as f64, i % 3 == 0, i);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.jobs_done, 100);
+        assert!(s.latency_p50 <= s.latency_p95);
+        assert!((s.latency_mean - 50.5).abs() < 1.0);
+        assert_eq!(s.gs1_cache_hits, 33);
+    }
+
+    #[test]
+    fn empty_snapshot_zeroes() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.jobs_done, 0);
+        assert_eq!(s.latency_p95, 0.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Eigenproblem job coordinator — the Layer-3 service wrapper around the
+//! solver library.
+//!
+//! The paper's applications do not solve one pencil: the DFT simulation
+//! (§3.2) solves *dozens of GSYEIGs per self-consistency cycle, for tens of
+//! cycles*, parametrized by the k-vector.  This module is the runtime a
+//! production deployment of the paper's solvers needs for that shape of
+//! workload:
+//!
+//! * [`queue`] — bounded job queue with backpressure;
+//! * [`router`] — variant auto-selection implementing the paper's §6
+//!   guidance (Krylov when only 3–5 % of the spectrum is wanted, KI when
+//!   `C` cannot be afforded, TD otherwise);
+//! * [`server`] — worker pool executing jobs, with a Cholesky-factor cache
+//!   keyed by the B-matrix fingerprint (within an SCF cycle every k-point
+//!   shares B — GS1 is paid once);
+//! * [`metrics`] — throughput/latency accounting.
+
+pub mod job;
+pub mod metrics;
+pub mod queue;
+pub mod router;
+pub mod server;
+
+pub use job::{Job, JobOutcome, JobSpec, WorkloadSpec};
+pub use queue::BoundedQueue;
+pub use router::{select_variant, RouterConfig};
+pub use server::{Coordinator, CoordinatorConfig};

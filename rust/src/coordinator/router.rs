@@ -1,0 +1,88 @@
+//! Variant auto-selection — the paper's conclusions (§6) as policy.
+//!
+//! > "they indicate that in realistic applications, when only 3–5 % of the
+//! > spectrum is required, the Krylov-subspace solver is to be preferred."
+//!
+//! plus the memory rule of §5.3 (KI when an explicit C cannot be afforded)
+//! and Table 2's evidence that TT is never competitive.
+
+use crate::solver::gsyeig::Variant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Host memory available for dense operands, in bytes.  The explicit-C
+    /// variants need room for both A/C and B/U (2·n²·8); if that does not
+    /// fit, KI is the only option (§2.3: "no initial cost to pay for the
+    /// explicit construction of C").
+    pub host_memory_bytes: usize,
+    /// Fraction of the spectrum below which Krylov wins (paper: 3–5 %).
+    pub krylov_fraction: f64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { host_memory_bytes: 8 << 30, krylov_fraction: 0.05 }
+    }
+}
+
+/// Pick a variant for an (n, s) problem.  Returns the variant and the rule
+/// that fired (logged in job outcomes).
+pub fn select_variant(n: usize, s: usize, cfg: &RouterConfig) -> (Variant, &'static str) {
+    let dense_pair_bytes = 2usize.saturating_mul(n).saturating_mul(n).saturating_mul(8);
+    if dense_pair_bytes + n * n * 8 > cfg.host_memory_bytes {
+        // cannot hold A, B *and* an explicit C: operate implicitly
+        return (Variant::KI, "memory: explicit C does not fit (par. 2.3)");
+    }
+    let frac = s as f64 / n as f64;
+    if frac <= cfg.krylov_fraction {
+        // the paper's headline conclusion
+        (Variant::KE, "s/n within Krylov-favourable band (par. 6: 3-5%)")
+    } else {
+        // large fractions: reduction amortizes better (Fig. 1 trend)
+        (Variant::TD, "large s/n: tridiagonal reduction amortizes (Fig. 1)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_fraction_routes_to_ke() {
+        let (v, _) = select_variant(10_000, 100, &RouterConfig::default());
+        assert_eq!(v, Variant::KE);
+    }
+
+    #[test]
+    fn large_fraction_routes_to_td() {
+        let (v, _) = select_variant(1000, 300, &RouterConfig::default());
+        assert_eq!(v, Variant::TD);
+    }
+
+    #[test]
+    fn memory_pressure_routes_to_ki() {
+        let cfg = RouterConfig { host_memory_bytes: 10 << 20, krylov_fraction: 0.05 };
+        // 3 n² · 8 > 10 MB for n = 1000 (24 MB)
+        let (v, reason) = select_variant(1000, 10, &cfg);
+        assert_eq!(v, Variant::KI);
+        assert!(reason.contains("memory"));
+    }
+
+    #[test]
+    fn boundary_fraction() {
+        let cfg = RouterConfig::default();
+        let (v5, _) = select_variant(1000, 50, &cfg); // exactly 5%
+        assert_eq!(v5, Variant::KE);
+        let (v6, _) = select_variant(1000, 60, &cfg); // 6%
+        assert_eq!(v6, Variant::TD);
+    }
+
+    #[test]
+    fn tt_never_selected() {
+        let cfg = RouterConfig::default();
+        for (n, s) in [(100, 1), (100, 50), (5000, 10), (2000, 1999)] {
+            let (v, _) = select_variant(n, s, &cfg);
+            assert_ne!(v, Variant::TT, "n={n} s={s}");
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! The coordinator server: worker pool over the job queue, with router
+//! integration and a Cholesky-factor cache for SCF-style job streams.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::lapack::LapackError;
+use crate::matrix::Matrix;
+use crate::solver::accuracy::Accuracy;
+use crate::solver::backend::{Kernels, NativeKernels};
+use crate::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant};
+
+use super::job::{Job, JobOutcome};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::queue::BoundedQueue;
+use super::router::{select_variant, RouterConfig};
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub router: RouterConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 2, queue_capacity: 16, router: RouterConfig::default() }
+    }
+}
+
+/// Kernels wrapper that caches Cholesky factors by an explicit key —
+/// within an SCF cycle every k-point shares B, so GS1 is paid once
+/// (the reuse opportunity the paper's DFT application exposes).
+struct CachingKernels {
+    inner: NativeKernels,
+    cache: Arc<Mutex<HashMap<u64, Matrix>>>,
+    key: Option<u64>,
+    hit: std::cell::Cell<bool>,
+}
+
+impl Kernels for CachingKernels {
+    fn cholesky(&self, b: &mut Matrix) -> Result<(), LapackError> {
+        if let Some(key) = self.key {
+            if let Some(u) = self.cache.lock().unwrap().get(&key) {
+                if u.rows() == b.rows() {
+                    *b = u.clone();
+                    self.hit.set(true);
+                    return Ok(());
+                }
+            }
+            self.inner.cholesky(b)?;
+            self.cache.lock().unwrap().insert(key, b.clone());
+            Ok(())
+        } else {
+            self.inner.cholesky(b)
+        }
+    }
+
+    fn build_c(&self, a: &mut Matrix, u: &Matrix) {
+        self.inner.build_c(a, u)
+    }
+
+    fn back_transform(&self, u: &Matrix, y: &mut Matrix) {
+        self.inner.back_transform(u, y)
+    }
+
+    fn explicit_op<'a>(
+        &'a self,
+        c: &'a Matrix,
+    ) -> Box<dyn crate::lanczos::operator::SymOp + 'a> {
+        self.inner.explicit_op(c)
+    }
+
+    fn implicit_op<'a>(
+        &'a self,
+        a: &'a Matrix,
+        u: &'a Matrix,
+    ) -> Option<Box<dyn crate::lanczos::operator::SymOp + 'a>> {
+        self.inner.implicit_op(a, u)
+    }
+
+    fn name(&self) -> &'static str {
+        "native+factor-cache"
+    }
+}
+
+/// The coordinator: submit jobs, run them on a worker pool, collect
+/// outcomes and metrics.
+pub struct Coordinator {
+    queue: Arc<BoundedQueue<Job>>,
+    results: Arc<Mutex<Vec<JobOutcome>>>,
+    metrics: Arc<Metrics>,
+    config: CoordinatorConfig,
+}
+
+impl Coordinator {
+    pub fn new(config: CoordinatorConfig) -> Self {
+        Coordinator {
+            queue: Arc::new(BoundedQueue::new(config.queue_capacity)),
+            results: Arc::new(Mutex::new(Vec::new())),
+            metrics: Arc::new(Metrics::new()),
+            config,
+        }
+    }
+
+    /// Submit a job (blocks under backpressure).
+    pub fn submit(&self, job: Job) -> Result<(), Job> {
+        self.queue.push(job)
+    }
+
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Run workers until the queue is closed and drained; returns all
+    /// outcomes sorted by job id.
+    pub fn run_to_completion(&self) -> Vec<JobOutcome> {
+        let factor_cache: Arc<Mutex<HashMap<u64, Matrix>>> = Arc::new(Mutex::new(HashMap::new()));
+        std::thread::scope(|scope| {
+            for _ in 0..self.config.workers.max(1) {
+                let queue = Arc::clone(&self.queue);
+                let results = Arc::clone(&self.results);
+                let metrics = Arc::clone(&self.metrics);
+                let cache = Arc::clone(&factor_cache);
+                let router_cfg = self.config.router;
+                scope.spawn(move || {
+                    while let Some(job) = queue.pop() {
+                        let outcome = execute_job(job, &cache, &router_cfg);
+                        metrics.record(outcome.total_seconds, outcome.gs1_cached, outcome.matvecs);
+                        results.lock().unwrap().push(outcome);
+                    }
+                });
+            }
+        });
+        let mut out = self.results.lock().unwrap().clone();
+        out.sort_by_key(|o| o.id);
+        out
+    }
+}
+
+fn execute_job(
+    job: Job,
+    cache: &Arc<Mutex<HashMap<u64, Matrix>>>,
+    router_cfg: &RouterConfig,
+) -> JobOutcome {
+    let (problem, which) = job.spec.workload.realize();
+    let n = problem.n();
+    let s = job.spec.s;
+    let (variant, reason) = match job.spec.variant {
+        Some(v) => (v, "caller-forced"),
+        None => select_variant(n, s, router_cfg),
+    };
+    // keep the originals for the accuracy check (solver consumes its copy)
+    let a0 = problem.a.clone();
+    let b0 = problem.b.clone();
+
+    let kernels = CachingKernels {
+        inner: NativeKernels::default(),
+        cache: Arc::clone(cache),
+        key: job.spec.b_cache_key,
+        hit: std::cell::Cell::new(false),
+    };
+    let cfg = SolverConfig::new(variant, s, which);
+    let solver = GsyeigSolver::with_kernels(cfg, kernels);
+    let t0 = std::time::Instant::now();
+    let sol = solver.solve(problem);
+    let total = t0.elapsed().as_secs_f64();
+    let accuracy = Accuracy::measure(&a0, &b0, &sol.eigenvalues, &sol.x);
+    JobOutcome {
+        id: job.id,
+        variant,
+        router_reason: reason,
+        n,
+        s,
+        eigenvalues: sol.eigenvalues,
+        x: sol.x,
+        accuracy,
+        total_seconds: total,
+        matvecs: sol.matvecs,
+        converged: sol.converged,
+        gs1_cached: solver.kernels.hit.get(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{JobSpec, WorkloadSpec};
+    use crate::solver::gsyeig::Which;
+    use crate::util::rng::Rng;
+    use crate::workloads::spectra::generate_problem;
+
+    fn inline_spec(n: usize, s: usize, seed: u64) -> JobSpec {
+        let lams: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let (p, _) = generate_problem(n, &lams, 20.0, seed);
+        JobSpec {
+            workload: WorkloadSpec::Inline { a: p.a, b: p.b, which: Which::Smallest },
+            s,
+            variant: None,
+            b_cache_key: None,
+        }
+    }
+
+    #[test]
+    fn runs_jobs_and_collects_outcomes() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        for id in 0..4u64 {
+            coord.submit(Job { id, spec: inline_spec(40, 2, id) }).ok().unwrap();
+        }
+        coord.close();
+        let out = coord.run_to_completion();
+        assert_eq!(out.len(), 4);
+        for o in &out {
+            assert!(o.converged);
+            assert!(o.accuracy.residual < 1e-8, "job {} residual {}", o.id, o.accuracy.residual);
+        }
+        let m = coord.metrics();
+        assert_eq!(m.jobs_done, 4);
+    }
+
+    #[test]
+    fn router_picks_ke_for_small_fraction() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        coord.submit(Job { id: 0, spec: inline_spec(120, 2, 1) }).ok().unwrap();
+        coord.close();
+        let out = coord.run_to_completion();
+        assert_eq!(out[0].variant, Variant::KE);
+    }
+
+    #[test]
+    fn factor_cache_hits_across_shared_b() {
+        // same workload seed => same B; same cache key => GS1 reuse
+        let mut rng = Rng::new(3);
+        let n = 50;
+        let lams: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let (p, _) = generate_problem(n, &lams, 20.0, 99);
+        let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+        for id in 0..3u64 {
+            let spec = JobSpec {
+                workload: WorkloadSpec::Inline {
+                    a: {
+                        // different A per "k-point", same B
+                        let mut a = p.a.clone();
+                        a[(0, 0)] += rng.uniform() * 1e-9;
+                        a
+                    },
+                    b: p.b.clone(),
+                    which: Which::Smallest,
+                },
+                s: 2,
+                variant: Some(Variant::TD),
+                b_cache_key: Some(42),
+            };
+            coord.submit(Job { id, spec }).ok().unwrap();
+        }
+        coord.close();
+        let out = coord.run_to_completion();
+        let hits = out.iter().filter(|o| o.gs1_cached).count();
+        assert_eq!(hits, 2, "second and third jobs must reuse the factor");
+    }
+
+    #[test]
+    fn forced_variant_respected() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let mut spec = inline_spec(40, 2, 5);
+        spec.variant = Some(Variant::TT);
+        coord.submit(Job { id: 0, spec }).ok().unwrap();
+        coord.close();
+        let out = coord.run_to_completion();
+        assert_eq!(out[0].variant, Variant::TT);
+        assert_eq!(out[0].router_reason, "caller-forced");
+    }
+}

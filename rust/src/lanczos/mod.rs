@@ -1,0 +1,18 @@
+//! ARPACK-substitute: restarted Lanczos for a few extremal eigenpairs of a
+//! symmetric operator (the paper's DSAUPD/DSEUPD, operations KE2/KE3 and
+//! KI4/KI5).
+//!
+//! The paper uses ARPACK's *implicitly restarted* Lanczos; we implement the
+//! mathematically equivalent **thick restart** (Wu & Simon, TRLan) with full
+//! two-pass re-orthogonalization — Kahan's "twice is enough" (§2.3 of the
+//! paper cites the same Giraud et al. analysis).  Same `n × m` auxiliary
+//! storage, same convergence criterion (`β_m |eᵀy_i| ≤ max(ulp·‖T‖,
+//! tol·|θ_i|)`), same restart role; iteration and mat-vec counts are
+//! reported exactly like the paper reports ARPACK iterations.  See
+//! DESIGN.md substitution #3.
+
+pub mod operator;
+pub mod thick_restart;
+
+pub use operator::{ExplicitOp, ImplicitOp, SymOp};
+pub use thick_restart::{lanczos_solve, LanczosConfig, LanczosResult, Want};

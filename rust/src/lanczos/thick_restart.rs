@@ -1,0 +1,410 @@
+//! Thick-restart Lanczos driver (Wu & Simon TRLan) — the DSAUPD/DSEUPD
+//! substitute (see module docs and DESIGN.md substitution #3).
+//!
+//! One call plays the role of the paper's ARPACK reverse-communication
+//! loop: it repeatedly applies the operator (KE1 or KI1–KI3), maintains the
+//! three-term recurrence with full two-pass re-orthogonalization (KE2/KI4),
+//! restarts with the best Ritz vectors, and finally assembles the Ritz
+//! pairs (KE3/KI5).
+
+use crate::blas::{daxpy, ddot, dgemm, dnrm2, dscal, Trans};
+use crate::lapack::syev::dsyev;
+use crate::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::timer::StageTimer;
+
+use super::operator::SymOp;
+
+/// Which end of the spectrum to converge (ARPACK `which` = 'LA' / 'SA').
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Want {
+    Largest,
+    Smallest,
+}
+
+#[derive(Clone, Debug)]
+pub struct LanczosConfig {
+    /// Number of wanted eigenpairs (the paper's `s`).
+    pub s: usize,
+    /// Krylov basis size `m` (paper: `2s ≤ m ≪ n`; 0 = auto).
+    pub m: usize,
+    /// Relative residual tolerance (ARPACK `tol`; the paper sets tol=0 =
+    /// machine precision — same default here).
+    pub tol: f64,
+    /// Hard cap on operator applications.
+    pub max_matvecs: usize,
+    pub want: Want,
+    pub seed: u64,
+}
+
+impl LanczosConfig {
+    pub fn new(s: usize, want: Want) -> Self {
+        LanczosConfig { s, m: 0, tol: 0.0, max_matvecs: 200_000, want, seed: 0x1a2c_05 }
+    }
+
+    fn basis_size(&self, n: usize) -> usize {
+        let m = if self.m > 0 { self.m } else { (2 * self.s + 16).max(3 * self.s / 2 + 8) };
+        m.min(n)
+    }
+}
+
+#[derive(Debug)]
+pub struct LanczosResult {
+    /// Converged eigenvalues, ordered from the wanted end inward
+    /// (ascending for `Smallest`, descending for `Largest`).
+    pub eigenvalues: Vec<f64>,
+    /// Matching Ritz vectors (n x s, orthonormal).
+    pub vectors: Matrix,
+    /// Operator applications (the paper's "ARPACK iterations").
+    pub matvecs: usize,
+    /// Restart cycles taken.
+    pub restarts: usize,
+    pub converged: bool,
+    /// Wall-clock spent in the recurrence/orthogonalization (KE2/KI4) and
+    /// in the final Ritz assembly (KE3/KI5), for the stage tables.
+    pub stage_times: StageTimer,
+}
+
+/// Run thick-restart Lanczos on `op`.
+pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> LanczosResult {
+    let n = op.n();
+    let s = cfg.s.min(n);
+    let m = cfg.basis_size(n).max(s + 2).min(n);
+    let tol = if cfg.tol <= 0.0 { f64::EPSILON } else { cfg.tol };
+    let mut timer = StageTimer::new();
+
+    // Krylov basis V (n x m+1): m basis columns + the residual slot.
+    let mut v = Matrix::zeros(n, m + 1);
+    let mut rng = Rng::new(cfg.seed);
+    {
+        let v0 = v.col_mut(0);
+        rng.fill_normal(v0);
+        let inv = 1.0 / dnrm2(v0);
+        dscal(inv, v0);
+    }
+
+    // Projected matrix data: after a thick restart the leading k x k block
+    // is diag(ritz) with coupling row beta_c; the trailing part is the new
+    // tridiagonal (alpha, beta).
+    let mut k = 0usize; // retained Ritz count
+    let mut ritz_kept: Vec<f64> = vec![];
+    let mut beta_c: Vec<f64> = vec![]; // coupling of kept vectors to v_k
+    let mut restarts = 0usize;
+
+    loop {
+        // ---- Lanczos extension from column k to m
+        let mut alpha = vec![0.0; m];
+        let mut beta = vec![0.0; m]; // beta[j]: coupling (v_j, v_{j+1})
+        let mut jlast = m;
+        for j in k..m {
+            // w := Op v_j
+            let mut w = vec![0.0; n];
+            op.apply(v.col(j), &mut w);
+            if op.matvecs() > cfg.max_matvecs {
+                jlast = j + 1;
+                // fall through with what we have
+            }
+            let t0 = std::time::Instant::now();
+            // three-term recurrence
+            alpha[j] = ddot(&w, v.col(j));
+            daxpy(-alpha[j], v.col(j), &mut w);
+            if j == k {
+                // coupling to all retained Ritz vectors
+                for (i, bc) in beta_c.iter().enumerate() {
+                    daxpy(-bc, v.col(i), &mut w);
+                }
+            } else {
+                daxpy(-beta[j - 1], v.col(j - 1), &mut w);
+            }
+            // full re-orthogonalization, two passes (Kahan: twice is enough)
+            for _pass in 0..2 {
+                for i in 0..=j {
+                    let proj = ddot(&w, v.col(i));
+                    daxpy(-proj, v.col(i), &mut w);
+                }
+            }
+            let bj = dnrm2(&w);
+            beta[j] = bj;
+            if bj < f64::EPSILON * alpha[j].abs().max(1.0) {
+                // invariant subspace found: restart the residual randomly
+                let wv = &mut w;
+                rng.fill_normal(wv);
+                for i in 0..=j {
+                    let proj = ddot(wv, v.col(i));
+                    daxpy(-proj, v.col(i), wv);
+                }
+                let nb = dnrm2(wv);
+                if nb > 0.0 {
+                    dscal(1.0 / nb, wv);
+                }
+                beta[j] = 0.0;
+            } else {
+                dscal(1.0 / bj, &mut w);
+            }
+            v.col_mut(j + 1).copy_from_slice(&w);
+            timer.add("lanczos_recurrence", t0.elapsed());
+            if op.matvecs() >= cfg.max_matvecs {
+                jlast = j + 1;
+                break;
+            }
+        }
+        let mcur = jlast.min(m);
+
+        // ---- projected eigenproblem (order mcur)
+        let t1 = std::time::Instant::now();
+        let mut tm = Matrix::zeros(mcur, mcur);
+        for i in 0..k {
+            tm[(i, i)] = ritz_kept[i];
+            tm[(i, k)] = beta_c[i];
+            tm[(k, i)] = beta_c[i];
+        }
+        for j in k..mcur {
+            tm[(j, j)] = alpha[j];
+            if j + 1 < mcur {
+                tm[(j + 1, j)] = beta[j];
+                tm[(j, j + 1)] = beta[j];
+            }
+        }
+        let (theta, y) = dsyev(&tm).expect("projected eigenproblem");
+        // wanted order: indices from the wanted end of the projected spectrum
+        let order: Vec<usize> = match cfg.want {
+            Want::Smallest => (0..mcur).collect(),
+            Want::Largest => (0..mcur).rev().collect(),
+        };
+        // residual estimates: |beta_last * y[last, i]|
+        let blast = beta[mcur - 1];
+        let tnorm = theta.iter().fold(0.0f64, |acc, t| acc.max(t.abs())).max(1.0);
+        let converged_count = order
+            .iter()
+            .take(s)
+            .filter(|&&i| (blast * y[(mcur - 1, i)]).abs() <= tol.max(f64::EPSILON) * tnorm)
+            .count();
+        timer.add("ritz_assembly", t1.elapsed());
+
+        let budget_exhausted = op.matvecs() >= cfg.max_matvecs;
+        if converged_count >= s || budget_exhausted {
+            // ---- assemble the s wanted Ritz pairs: X = V(:, 0..mcur) Y_s
+            let t2 = std::time::Instant::now();
+            let mut xs = Matrix::zeros(n, s);
+            let mut ys = Matrix::zeros(mcur, s);
+            let mut vals = Vec::with_capacity(s);
+            for (col, &i) in order.iter().take(s).enumerate() {
+                vals.push(theta[i]);
+                for r in 0..mcur {
+                    ys[(r, col)] = y[(r, i)];
+                }
+            }
+            dgemm(
+                Trans::N,
+                Trans::N,
+                n,
+                s,
+                mcur,
+                1.0,
+                v.as_slice(),
+                n,
+                ys.as_slice(),
+                mcur,
+                0.0,
+                xs.as_mut_slice(),
+                n,
+            );
+            timer.add("ritz_assembly", t2.elapsed());
+            return LanczosResult {
+                eigenvalues: vals,
+                vectors: xs,
+                matvecs: op.matvecs(),
+                restarts,
+                converged: converged_count >= s,
+                stage_times: timer,
+            };
+        }
+
+        // ---- thick restart: retain kr Ritz vectors from the wanted end
+        let t3 = std::time::Instant::now();
+        restarts += 1;
+        let kr = (s + (mcur - s) / 2).min(mcur - 1).max(s.min(mcur - 1));
+        let mut ynew = Matrix::zeros(mcur, kr);
+        let mut ritz_new = Vec::with_capacity(kr);
+        let mut bc_new = Vec::with_capacity(kr);
+        for (col, &i) in order.iter().take(kr).enumerate() {
+            ritz_new.push(theta[i]);
+            bc_new.push(blast * y[(mcur - 1, i)]);
+            for r in 0..mcur {
+                ynew[(r, col)] = y[(r, i)];
+            }
+        }
+        // V(:, 0..kr) := V(:, 0..mcur) Ynew ; V(:, kr) := v_mcur (residual)
+        let mut vnew = Matrix::zeros(n, kr);
+        dgemm(
+            Trans::N,
+            Trans::N,
+            n,
+            kr,
+            mcur,
+            1.0,
+            v.as_slice(),
+            n,
+            ynew.as_slice(),
+            mcur,
+            0.0,
+            vnew.as_mut_slice(),
+            n,
+        );
+        let resid: Vec<f64> = v.col(mcur).to_vec();
+        for c in 0..kr {
+            v.col_mut(c).copy_from_slice(vnew.col(c));
+        }
+        v.col_mut(kr).copy_from_slice(&resid);
+        k = kr;
+        ritz_kept = ritz_new;
+        beta_c = bc_new;
+        timer.add("lanczos_restart", t3.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lanczos::operator::ExplicitOp;
+    use crate::lapack::syev::dsyev;
+    use crate::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    /// Symmetric matrix with prescribed spectrum via random reflections.
+    fn with_spectrum(lams: &[f64], seed: u64) -> Matrix {
+        let n = lams.len();
+        let mut rng = Rng::new(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = lams[i];
+        }
+        // a few random Householder similarity transforms
+        for _ in 0..3 {
+            let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let nv = dnrm2(&v);
+            dscal(1.0 / nv, &mut v);
+            // A := H A H with H = I - 2vvᵀ
+            let av = a.matvec_naive(&v);
+            let vav = ddot(&v, &av);
+            // H A H = A - 2 v (Av)ᵀ - 2 (Av) vᵀ + 4 (vᵀAv) v vᵀ
+            for j in 0..n {
+                for i in 0..n {
+                    a[(i, j)] += -2.0 * v[i] * av[j] - 2.0 * av[i] * v[j]
+                        + 4.0 * vav * v[i] * v[j];
+                }
+            }
+        }
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn finds_largest_eigenpairs() {
+        let lams: Vec<f64> = (1..=60).map(|i| i as f64).collect();
+        let a = with_spectrum(&lams, 1);
+        let op = ExplicitOp::new(&a);
+        let r = lanczos_solve(&op, &LanczosConfig::new(5, Want::Largest));
+        assert!(r.converged);
+        for (i, expect) in [60.0, 59.0, 58.0, 57.0, 56.0].iter().enumerate() {
+            assert!(
+                (r.eigenvalues[i] - expect).abs() < 1e-8,
+                "eig {i}: {} vs {expect}",
+                r.eigenvalues[i]
+            );
+        }
+    }
+
+    #[test]
+    fn finds_smallest_eigenpairs() {
+        let lams: Vec<f64> = (1..=50).map(|i| (i * i) as f64).collect();
+        let a = with_spectrum(&lams, 2);
+        let op = ExplicitOp::new(&a);
+        let r = lanczos_solve(&op, &LanczosConfig::new(4, Want::Smallest));
+        assert!(r.converged);
+        for (i, expect) in [1.0, 4.0, 9.0, 16.0].iter().enumerate() {
+            assert!((r.eigenvalues[i] - expect).abs() < 1e-7, "eig {i}");
+        }
+    }
+
+    #[test]
+    fn ritz_vectors_are_eigenvectors() {
+        let lams: Vec<f64> = (0..40).map(|i| (i as f64 - 5.0) * 2.0).collect();
+        let a = with_spectrum(&lams, 3);
+        let op = ExplicitOp::new(&a);
+        let r = lanczos_solve(&op, &LanczosConfig::new(3, Want::Largest));
+        for j in 0..3 {
+            let xj: Vec<f64> = r.vectors.col(j).to_vec();
+            let ax = a.matvec_naive(&xj);
+            for i in 0..40 {
+                assert!(
+                    (ax[i] - r.eigenvalues[j] * xj[i]).abs() < 1e-7 * a.frobenius_norm(),
+                    "residual col {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        let lams: Vec<f64> = (0..35).map(|i| (i as f64).exp().min(1e6)).collect();
+        let a = with_spectrum(&lams, 4);
+        let op = ExplicitOp::new(&a);
+        let r = lanczos_solve(&op, &LanczosConfig::new(4, Want::Largest));
+        let xtx = r.vectors.transpose().matmul_naive(&r.vectors);
+        assert!(xtx.max_abs_diff(&Matrix::identity(4)) < 1e-9);
+    }
+
+    #[test]
+    fn matches_dense_solver_on_random_matrix() {
+        let mut rng = Rng::new(5);
+        let n = 45;
+        let a = Matrix::randn_sym(n, &mut rng);
+        let (w, _) = dsyev(&a).unwrap();
+        let op = ExplicitOp::new(&a);
+        let r = lanczos_solve(&op, &LanczosConfig::new(6, Want::Smallest));
+        for i in 0..6 {
+            assert!(
+                (r.eigenvalues[i] - w[i]).abs() < 1e-7 * a.frobenius_norm(),
+                "eig {i}: {} vs {}",
+                r.eigenvalues[i],
+                w[i]
+            );
+        }
+    }
+
+    #[test]
+    fn clustered_spectrum_converges_with_restarts() {
+        // hard case: the wanted end is clustered
+        let mut lams: Vec<f64> = vec![1.0, 1.0 + 1e-6, 1.0 + 2e-6, 2.0];
+        lams.extend((0..50).map(|i| 10.0 + i as f64));
+        let a = with_spectrum(&lams, 6);
+        let op = ExplicitOp::new(&a);
+        let mut cfg = LanczosConfig::new(3, Want::Smallest);
+        cfg.tol = 1e-10;
+        let r = lanczos_solve(&op, &cfg);
+        assert!(r.converged, "matvecs={} restarts={}", r.matvecs, r.restarts);
+        assert!((r.eigenvalues[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn respects_matvec_budget() {
+        let lams: Vec<f64> = (0..80).map(|i| i as f64 * 0.9 + 1.0).collect();
+        let a = with_spectrum(&lams, 7);
+        let op = ExplicitOp::new(&a);
+        let mut cfg = LanczosConfig::new(10, Want::Smallest);
+        cfg.max_matvecs = 25;
+        let r = lanczos_solve(&op, &cfg);
+        assert!(r.matvecs <= 26, "matvecs {}", r.matvecs);
+    }
+
+    #[test]
+    fn reports_iteration_counts() {
+        let lams: Vec<f64> = (1..=30).map(|i| i as f64).collect();
+        let a = with_spectrum(&lams, 8);
+        let op = ExplicitOp::new(&a);
+        let r = lanczos_solve(&op, &LanczosConfig::new(2, Want::Largest));
+        assert!(r.matvecs > 0);
+        assert_eq!(r.matvecs, op.matvecs());
+    }
+}

@@ -1,0 +1,352 @@
+//! Householder reflector machinery (DLARFG / DLARF / DLARFT / DLARFB /
+//! DGEQR2) — shared by the direct tridiagonalization (TD1), the SBR band
+//! reduction (TT1), and the back-transforms (TD3/TT4).
+
+use crate::blas::{ddot, dgemm, dgemv, dger, dnrm2, dscal, dtrmm, Diag, Side, Trans, Uplo};
+
+/// Generate an elementary reflector H = I - tau [1; v][1; v]ᵀ such that
+/// H [alpha; x] = [beta; 0].  On exit `x` holds v and the return is
+/// `(tau, beta)`.  (LAPACK DLARFG.)
+pub fn dlarfg(alpha: f64, x: &mut [f64]) -> (f64, f64) {
+    let xnorm = dnrm2(x);
+    if xnorm == 0.0 {
+        return (0.0, alpha);
+    }
+    let beta = -(alpha.signum()) * (alpha * alpha + xnorm * xnorm).sqrt();
+    let tau = (beta - alpha) / beta;
+    let scale = 1.0 / (alpha - beta);
+    dscal(scale, x);
+    (tau, beta)
+}
+
+/// Apply H = I - tau v vᵀ from the left to the m x n matrix at `c` (ldc):
+/// C := H C.  `v` has length m (explicit, including its unit head if any).
+pub fn dlarf_left(m: usize, n: usize, v: &[f64], tau: f64, c: &mut [f64], ldc: usize) {
+    if tau == 0.0 {
+        return;
+    }
+    // w = Cᵀ v  (length n), then C -= tau v wᵀ.
+    let mut w = vec![0.0; n];
+    dgemv(Trans::T, m, n, 1.0, c, ldc, &v[..m], 0.0, &mut w);
+    dger(m, n, -tau, &v[..m], &w, c, ldc);
+}
+
+/// Apply H = I - tau v vᵀ from the right: C := C H (C is m x n).
+pub fn dlarf_right(m: usize, n: usize, v: &[f64], tau: f64, c: &mut [f64], ldc: usize) {
+    if tau == 0.0 {
+        return;
+    }
+    // w = C v (length m), then C -= tau w vᵀ.
+    let mut w = vec![0.0; m];
+    dgemv(Trans::N, m, n, 1.0, c, ldc, &v[..n], 0.0, &mut w);
+    dger(m, n, -tau, &w, &v[..n], c, ldc);
+}
+
+/// Unblocked QR factorization of the m x n matrix at `a` (lda): on exit R in
+/// the upper triangle, the reflector vectors below the diagonal, `tau[i]`
+/// per column.  (LAPACK DGEQR2.)
+pub fn dgeqr2(m: usize, n: usize, a: &mut [f64], lda: usize, tau: &mut [f64]) {
+    let kmax = m.min(n);
+    let mut v = vec![0.0; m];
+    for k in 0..kmax {
+        // reflector from A[k.., k]
+        let alpha = a[k + k * lda];
+        let (t, beta) = {
+            // the column below the diagonal has m - k - 1 entries
+            let start = k + 1 + k * lda;
+            dlarfg(alpha, &mut a[start..start + (m - k - 1)])
+        };
+        tau[k] = t;
+        a[k + k * lda] = beta;
+        if k + 1 < n && t != 0.0 {
+            // v = [1; A[k+1.., k]]
+            v[0] = 1.0;
+            v[1..m - k].copy_from_slice(&a[k + 1 + k * lda..k + 1 + k * lda + (m - k - 1)]);
+            // apply to trailing columns A[k.., k+1..]
+            let off = k + (k + 1) * lda;
+            dlarf_left(m - k, n - k - 1, &v[..m - k], t, &mut a[off..], lda);
+        }
+    }
+}
+
+/// Form the T factor of the compact WY representation
+/// `H_0 H_1 ... H_{k-1} = I - V T Vᵀ` for forward, columnwise-stored
+/// reflectors.  `v` is m x k dense with **explicit** unit diagonal and zeros
+/// above (the callers materialise it), `t` is k x k (ldt).  (LAPACK DLARFT.)
+pub fn dlarft_forward_columnwise(
+    m: usize,
+    k: usize,
+    v: &[f64],
+    ldv: usize,
+    tau: &[f64],
+    t: &mut [f64],
+    ldt: usize,
+) {
+    for i in 0..k {
+        if tau[i] == 0.0 {
+            for j in 0..=i {
+                t[j + i * ldt] = 0.0;
+            }
+            continue;
+        }
+        // t(0..i, i) = -tau_i * V(:, 0..i)ᵀ V(:, i)
+        for j in 0..i {
+            let vj = &v[j * ldv..j * ldv + m];
+            let vi = &v[i * ldv..i * ldv + m];
+            t[j + i * ldt] = -tau[i] * ddot(vj, vi);
+        }
+        // t(0..i, i) := T(0..i, 0..i) * t(0..i, i)   (small upper trmv).
+        // Top-down in-place is safe: row `r` reads only positions p >= r,
+        // which have not yet been overwritten.
+        for row in 0..i {
+            let mut s = 0.0;
+            for p in row..i {
+                s += t[row + p * ldt] * t[p + i * ldt];
+            }
+            t[row + i * ldt] = s;
+        }
+        t[i + i * ldt] = tau[i];
+    }
+}
+
+/// Apply the block reflector H = I - V T Vᵀ (forward, columnwise) or its
+/// transpose from the left: C := op(H) C.  `v` is m x k dense (explicit unit
+/// diag), `t` k x k upper, C m x n.  (LAPACK DLARFB, 'L', direct='F'.)
+#[allow(clippy::too_many_arguments)]
+pub fn dlarfb_left(
+    trans: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    v: &[f64],
+    ldv: usize,
+    t: &[f64],
+    ldt: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    if k == 0 {
+        return;
+    }
+    // W = Vᵀ C  (k x n)
+    let mut w = vec![0.0; k * n];
+    dgemm(Trans::T, Trans::N, k, n, m, 1.0, v, ldv, c, ldc, 0.0, &mut w, k);
+    // W := op(T) W ; H C uses T, Hᵀ C uses Tᵀ
+    dtrmm(Side::Left, Uplo::Upper, trans, Diag::NonUnit, k, n, 1.0, t, ldt, &mut w, k);
+    // C := C - V W
+    dgemm(Trans::N, Trans::N, m, n, k, -1.0, v, ldv, &w, k, 1.0, c, ldc);
+}
+
+/// C := C op(H) from the right (C is m x n, H = I - V T Vᵀ with V n x k).
+#[allow(clippy::too_many_arguments)]
+pub fn dlarfb_right(
+    trans: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    v: &[f64],
+    ldv: usize,
+    t: &[f64],
+    ldt: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    if k == 0 {
+        return;
+    }
+    // W = C V  (m x k)
+    let mut w = vec![0.0; m * k];
+    dgemm(Trans::N, Trans::N, m, k, n, 1.0, c, ldc, v, ldv, 0.0, &mut w, m);
+    // C H = C - (C V) T Vᵀ ; C Hᵀ = C - (C V) Tᵀ Vᵀ
+    dtrmm(Side::Right, Uplo::Upper, trans, Diag::NonUnit, m, k, 1.0, t, ldt, &mut w, m);
+    dgemm(Trans::N, Trans::T, m, n, k, -1.0, &w, m, v, ldv, 1.0, c, ldc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn larfg_annihilates() {
+        let alpha = 3.0;
+        let mut x = vec![1.0, -2.0, 0.5];
+        let orig = {
+            let mut v = vec![alpha];
+            v.extend_from_slice(&x);
+            v
+        };
+        let (tau, beta) = dlarfg(alpha, &mut x);
+        // apply H to the original vector: should give [beta; 0; 0; 0]
+        let mut v = vec![1.0];
+        v.extend_from_slice(&x);
+        let vt_a = v.iter().zip(&orig).map(|(a, b)| a * b).sum::<f64>();
+        let out: Vec<f64> = orig
+            .iter()
+            .zip(&v)
+            .map(|(o, vi)| o - tau * vi * vt_a)
+            .collect();
+        assert!((out[0] - beta).abs() < 1e-14);
+        for o in &out[1..] {
+            assert!(o.abs() < 1e-14);
+        }
+        // norm preservation
+        let n0 = orig.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((beta.abs() - n0).abs() < 1e-13);
+    }
+
+    #[test]
+    fn larfg_zero_tail() {
+        let mut x = vec![0.0, 0.0];
+        let (tau, beta) = dlarfg(5.0, &mut x);
+        assert_eq!(tau, 0.0);
+        assert_eq!(beta, 5.0);
+    }
+
+    #[test]
+    fn larf_left_is_orthogonal_involution() {
+        let mut rng = Rng::new(1);
+        let m = 8;
+        let mut x: Vec<f64> = (0..m - 1).map(|_| rng.normal()).collect();
+        let (tau, _) = dlarfg(rng.normal(), &mut x);
+        let mut v = vec![1.0];
+        v.extend_from_slice(&x);
+        let c0 = Matrix::randn(m, 5, &mut rng);
+        let mut c = c0.clone();
+        dlarf_left(m, 5, &v, tau, c.as_mut_slice(), m);
+        dlarf_left(m, 5, &v, tau, c.as_mut_slice(), m); // H² = I
+        assert!(c.max_abs_diff(&c0) < 1e-12);
+    }
+
+    #[test]
+    fn geqr2_reconstructs() {
+        let mut rng = Rng::new(2);
+        let (m, n) = (10, 6);
+        let a0 = Matrix::randn(m, n, &mut rng);
+        let mut a = a0.clone();
+        let mut tau = vec![0.0; n];
+        dgeqr2(m, n, a.as_mut_slice(), m, &mut tau);
+        // rebuild Q by applying reflectors to identity (Q = H0 H1 ... )
+        let mut q = Matrix::identity(m);
+        for k in (0..n).rev() {
+            let mut v = vec![0.0; m - k];
+            v[0] = 1.0;
+            for i in 1..(m - k) {
+                v[i] = a[(k + i, k)];
+            }
+            let off = k + k * m;
+            dlarf_left(m - k, m - k, &v, tau[k], &mut q.as_mut_slice()[off..], m);
+        }
+        // R = upper triangle of a
+        let mut r = Matrix::zeros(m, n);
+        for j in 0..n {
+            for i in 0..=j.min(m - 1) {
+                r[(i, j)] = a[(i, j)];
+            }
+        }
+        let qr = q.matmul_naive(&r);
+        assert!(qr.max_abs_diff(&a0) < 1e-12);
+        // Q orthogonal
+        let qtq = q.transpose().matmul_naive(&q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(m)) < 1e-12);
+    }
+
+    /// Build (V, T, tau) from a QR factorization and check
+    /// I - V T Vᵀ == H0 H1 ... H_{k-1}.
+    #[test]
+    fn larft_matches_reflector_product() {
+        let mut rng = Rng::new(3);
+        let (m, k) = (9, 4);
+        let a0 = Matrix::randn(m, k, &mut rng);
+        let mut a = a0.clone();
+        let mut tau = vec![0.0; k];
+        dgeqr2(m, k, a.as_mut_slice(), m, &mut tau);
+        // dense V with explicit unit diagonal
+        let mut v = Matrix::zeros(m, k);
+        for j in 0..k {
+            v[(j, j)] = 1.0;
+            for i in (j + 1)..m {
+                v[(i, j)] = a[(i, j)];
+            }
+        }
+        let mut t = Matrix::zeros(k, k);
+        dlarft_forward_columnwise(m, k, v.as_slice(), m, &tau, t.as_mut_slice(), k);
+        // H_prod = H0 H1 ... H_{k-1} applied to identity
+        let mut hp = Matrix::identity(m);
+        for j in (0..k).rev() {
+            let vj: Vec<f64> = (0..m).map(|i| v[(i, j)]).collect();
+            dlarf_left(m, m, &vj, tau[j], hp.as_mut_slice(), m);
+        }
+        // I - V T Vᵀ
+        let vt = v.matmul_naive(&t);
+        let vtvt = vt.matmul_naive(&v.transpose());
+        let mut wy = Matrix::identity(m);
+        for j in 0..m {
+            for i in 0..m {
+                wy[(i, j)] -= vtvt[(i, j)];
+            }
+        }
+        assert!(wy.max_abs_diff(&hp) < 1e-12);
+    }
+
+    #[test]
+    fn larfb_left_matches_sequential_application() {
+        let mut rng = Rng::new(4);
+        let (m, n, k) = (12, 7, 4);
+        let mut a = Matrix::randn(m, k, &mut rng);
+        let mut tau = vec![0.0; k];
+        dgeqr2(m, k, a.as_mut_slice(), m, &mut tau);
+        let mut v = Matrix::zeros(m, k);
+        for j in 0..k {
+            v[(j, j)] = 1.0;
+            for i in (j + 1)..m {
+                v[(i, j)] = a[(i, j)];
+            }
+        }
+        let mut t = Matrix::zeros(k, k);
+        dlarft_forward_columnwise(m, k, v.as_slice(), m, &tau, t.as_mut_slice(), k);
+
+        let c0 = Matrix::randn(m, n, &mut rng);
+        // sequential: Hᵀ C = H_{k-1} ... H_0 C
+        let mut cs = c0.clone();
+        for j in 0..k {
+            let vj: Vec<f64> = (0..m).map(|i| v[(i, j)]).collect();
+            dlarf_left(m, n, &vj, tau[j], cs.as_mut_slice(), m);
+        }
+        // blocked: C := Hᵀ C
+        let mut cb = c0.clone();
+        dlarfb_left(Trans::T, m, n, k, v.as_slice(), m, t.as_slice(), k, cb.as_mut_slice(), m);
+        assert!(cb.max_abs_diff(&cs) < 1e-12);
+    }
+
+    #[test]
+    fn larfb_right_matches_sequential_application() {
+        let mut rng = Rng::new(5);
+        let (m, n, k) = (6, 11, 3);
+        let mut a = Matrix::randn(n, k, &mut rng);
+        let mut tau = vec![0.0; k];
+        dgeqr2(n, k, a.as_mut_slice(), n, &mut tau);
+        let mut v = Matrix::zeros(n, k);
+        for j in 0..k {
+            v[(j, j)] = 1.0;
+            for i in (j + 1)..n {
+                v[(i, j)] = a[(i, j)];
+            }
+        }
+        let mut t = Matrix::zeros(k, k);
+        dlarft_forward_columnwise(n, k, v.as_slice(), n, &tau, t.as_mut_slice(), k);
+
+        let c0 = Matrix::randn(m, n, &mut rng);
+        // sequential right application: C H = C - tau (C v) vᵀ, H = H0..H_{k-1}
+        // C H0 H1 ... = ((C H0) H1) ...
+        let mut cs = c0.clone();
+        for j in 0..k {
+            let vj: Vec<f64> = (0..n).map(|i| v[(i, j)]).collect();
+            dlarf_right(m, n, &vj, tau[j], cs.as_mut_slice(), m);
+        }
+        let mut cb = c0.clone();
+        dlarfb_right(Trans::N, m, n, k, v.as_slice(), n, t.as_slice(), k, cb.as_mut_slice(), m);
+        assert!(cb.max_abs_diff(&cs) < 1e-12);
+    }
+}

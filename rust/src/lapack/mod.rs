@@ -1,0 +1,56 @@
+//! From-scratch LAPACK subset: exactly the routines of the paper's Table 1.
+//!
+//! | Paper routine | Here |
+//! |---|---|
+//! | DPOTRF (GS1)  | [`potrf::dpotrf_upper`] |
+//! | DSYGST/DTRSM (GS2) | [`sygst::sygst_trsm`], [`sygst::dsygst_blocked`] |
+//! | DSYTRD (TD1)  | [`sytrd::dsytrd_lower`] |
+//! | DSTEMR (TD2/TT3, MR³) | [`stebz::dstebz`] + [`stein::dstein`] (subset bisection + inverse iteration — see DESIGN.md substitution #4) |
+//! | DSTEQR/DSTERF | [`steqr::dsteqr`], [`steqr::dsterf`] (full-spectrum QL, used by the Lanczos projected problem and tests) |
+//! | DORMTR (TD3/TT4) | [`ormtr::dormtr_lower`] |
+//! | DLARFG/DLARF/DLARFT/DLARFB | [`householder`] (shared by DSYTRD, SBR, QR panels) |
+
+pub mod householder;
+pub mod ormtr;
+pub mod potrf;
+pub mod stebz;
+pub mod stein;
+pub mod steqr;
+pub mod sygst;
+pub mod syev;
+pub mod sytrd;
+
+pub use householder::{dgeqr2, dlarf_left, dlarfg, dlarft_forward_columnwise};
+pub use syev::dsyev;
+pub use ormtr::{dorgtr_lower, dormtr_lower};
+pub use potrf::{dpotf2_upper, dpotrf_upper};
+pub use stebz::dstebz;
+pub use stein::dstein;
+pub use steqr::{dsteqr, dsterf};
+pub use sygst::{dsygst_blocked, sygst_trsm};
+pub use sytrd::{dsytd2_lower, dsytrd_lower};
+
+/// Error type for the numerical routines.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LapackError {
+    /// Matrix not positive definite; leading minor index reported.
+    NotPositiveDefinite(usize),
+    /// An iterative eigensolver failed to converge for this element.
+    NoConvergence(usize),
+    /// Invalid argument combination.
+    BadArgument(&'static str),
+}
+
+impl std::fmt::Display for LapackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LapackError::NotPositiveDefinite(i) => {
+                write!(f, "matrix not positive definite (leading minor {i})")
+            }
+            LapackError::NoConvergence(i) => write!(f, "no convergence at element {i}"),
+            LapackError::BadArgument(s) => write!(f, "bad argument: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for LapackError {}

@@ -1,0 +1,151 @@
+//! Stage TD3/TT4 back-transform: apply the orthogonal factor of the
+//! tridiagonalization, `Y := Q Z` (LAPACK DORMTR, lower convention), and
+//! the explicit construction `Q` (DORGTR) needed by variant TT's
+//! `Q₁` accumulation.
+//!
+//! `Q` is never formed in variant TD — reflectors are applied straight from
+//! their compact storage in the reduced matrix, which is the storage
+//! economy the paper credits TD with in §2.2.
+
+use super::householder::dlarf_left;
+use crate::blas::Trans;
+use crate::matrix::Matrix;
+
+/// C := Q C (trans = N) or Qᵀ C (trans = T), with Q the orthogonal factor
+/// of `dsytrd_lower` stored as reflectors in `a` (+ `tau`).  C is n x s.
+pub fn dormtr_lower(
+    trans: Trans,
+    n: usize,
+    s: usize,
+    a: &[f64],
+    lda: usize,
+    tau: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+) {
+    if n < 2 {
+        return;
+    }
+    let mut v = vec![0.0; n];
+    let apply = |i: usize, c: &mut [f64], v: &mut [f64]| {
+        let m = n - i - 1;
+        v[0] = 1.0;
+        let src = (i + 2) + i * lda;
+        v[1..m].copy_from_slice(&a[src..src + (m - 1)]);
+        // rows i+1..n of C
+        dlarf_left(m, s, &v[..m], tau[i], &mut c[i + 1..], ldc);
+    };
+    match trans {
+        // Q C = H_0 (H_1 (... H_{n-2} C))
+        Trans::N => {
+            for i in (0..n - 1).rev() {
+                apply(i, c, &mut v);
+            }
+        }
+        // Qᵀ C = H_{n-2} (... (H_0 C))
+        Trans::T => {
+            for i in 0..n - 1 {
+                apply(i, c, &mut v);
+            }
+        }
+    }
+}
+
+/// Explicitly form Q (n x n) from `dsytrd_lower` output — the TT1 step of
+/// variant TT pays 4n³/3 flops for exactly this in the paper's accounting.
+pub fn dorgtr_lower(n: usize, a: &[f64], lda: usize, tau: &[f64]) -> Matrix {
+    let mut q = Matrix::identity(n);
+    if n >= 2 {
+        dormtr_lower(Trans::N, n, n, a, lda, tau, q.as_mut_slice(), n);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lapack::sytrd::dsytrd_lower;
+    use crate::matrix::{Matrix, SymTridiag};
+    use crate::util::rng::Rng;
+
+    fn reduce(n: usize, rng: &mut Rng) -> (Matrix, Matrix, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let a0 = Matrix::randn_sym(n, rng);
+        let mut a = a0.clone();
+        let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+        dsytrd_lower(n, a.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+        (a0, a, d, e, tau)
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        let mut rng = Rng::new(1);
+        let n = 40;
+        let (_, a, _, _, tau) = reduce(n, &mut rng);
+        let q = dorgtr_lower(n, a.as_slice(), n, &tau);
+        let qtq = q.transpose().matmul_naive(&q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(n)) < 1e-12);
+    }
+
+    #[test]
+    fn q_transforms_a_to_t() {
+        let mut rng = Rng::new(2);
+        let n = 35;
+        let (a0, a, d, e, tau) = reduce(n, &mut rng);
+        let q = dorgtr_lower(n, a.as_slice(), n, &tau);
+        let t = q.transpose().matmul_naive(&a0).matmul_naive(&q);
+        let tref = SymTridiag::new(d, e).to_dense();
+        assert!(t.max_abs_diff(&tref) < 1e-10 * a0.frobenius_norm());
+    }
+
+    #[test]
+    fn ormtr_matches_explicit_q_product() {
+        let mut rng = Rng::new(3);
+        let n = 30;
+        let s = 6;
+        let (_, a, _, _, tau) = reduce(n, &mut rng);
+        let q = dorgtr_lower(n, a.as_slice(), n, &tau);
+        let z = Matrix::randn(n, s, &mut rng);
+        let expect = q.matmul_naive(&z);
+        let mut c = z.clone();
+        dormtr_lower(Trans::N, n, s, a.as_slice(), n, &tau, c.as_mut_slice(), n);
+        assert!(c.max_abs_diff(&expect) < 1e-11);
+    }
+
+    #[test]
+    fn ormtr_transpose_inverts() {
+        let mut rng = Rng::new(4);
+        let n = 25;
+        let s = 4;
+        let (_, a, _, _, tau) = reduce(n, &mut rng);
+        let z = Matrix::randn(n, s, &mut rng);
+        let mut c = z.clone();
+        dormtr_lower(Trans::N, n, s, a.as_slice(), n, &tau, c.as_mut_slice(), n);
+        dormtr_lower(Trans::T, n, s, a.as_slice(), n, &tau, c.as_mut_slice(), n);
+        assert!(c.max_abs_diff(&z) < 1e-11);
+    }
+
+    /// End-to-end TD pipeline identity: eigenvectors of A from
+    /// (sytrd -> steqr(Z=I) -> ormtr) satisfy A y = lambda y.
+    #[test]
+    fn full_td_pipeline_on_standard_problem() {
+        use crate::lapack::steqr::dsteqr;
+        let mut rng = Rng::new(5);
+        let n = 24;
+        let (a0, a, d, e, tau) = reduce(n, &mut rng);
+        let mut t = SymTridiag::new(d, e);
+        let mut z = Matrix::identity(n);
+        dsteqr(&mut t, Some(&mut z)).unwrap();
+        // back-transform all vectors
+        dormtr_lower(Trans::N, n, n, a.as_slice(), n, &tau, z.as_mut_slice(), n);
+        for j in 0..n {
+            let yj: Vec<f64> = z.col(j).to_vec();
+            let ay = a0.matvec_naive(&yj);
+            for i in 0..n {
+                assert!(
+                    (ay[i] - t.d[j] * yj[i]).abs() < 1e-9 * a0.frobenius_norm(),
+                    "col {j}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Cholesky factorization `B = UᵀU` — stage GS1 of every variant.
+//!
+//! Blocked right-looking algorithm (LAPACK DPOTRF, uplo='U'): n³/3 flops,
+//! almost entirely in `dsyrk`/`dtrsm` (Level 3), which is why GS1 is the
+//! stage the task-parallel and GPU libraries accelerate best in the paper's
+//! Tables 4 and 6.
+
+use super::LapackError;
+use crate::blas::{ddot, dgemv, dsyrk, dtrsm, Diag, Side, Trans, Uplo};
+
+/// Blocking factor (same order as LAPACK's ILAENV default for DPOTRF).
+const NB: usize = 64;
+
+/// Unblocked upper Cholesky of the n x n matrix at `a` (lda): on exit the
+/// upper triangle holds U with `UᵀU = A`; the strict lower triangle is not
+/// referenced.  (LAPACK DPOTF2.)
+pub fn dpotf2_upper(n: usize, a: &mut [f64], lda: usize) -> Result<(), LapackError> {
+    for j in 0..n {
+        // U[j,j] = sqrt(A[j,j] - U[0..j,j]ᵀ U[0..j,j])
+        let col_j = &a[j * lda..j * lda + j];
+        let ajj = a[j + j * lda] - ddot(col_j, col_j);
+        if ajj <= 0.0 || !ajj.is_finite() {
+            return Err(LapackError::NotPositiveDefinite(j + 1));
+        }
+        let ajj = ajj.sqrt();
+        a[j + j * lda] = ajj;
+        // row j of the remaining columns:
+        // A[j, j+1..] := (A[j, j+1..] - U[0..j, j]ᵀ A[0..j, j+1..]) / ajj
+        if j + 1 < n {
+            // w = A[0..j, j+1..]ᵀ * U[0..j, j]   (length n-j-1)
+            let mut w = vec![0.0; n - j - 1];
+            // copy U[0..j, j] to keep borrows disjoint
+            let uj: Vec<f64> = a[j * lda..j * lda + j].to_vec();
+            dgemv(Trans::T, j, n - j - 1, 1.0, &a[(j + 1) * lda..], lda, &uj, 0.0, &mut w);
+            for (idx, wi) in w.iter().enumerate() {
+                let p = j + (j + 1 + idx) * lda;
+                a[p] = (a[p] - wi) / ajj;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Blocked upper Cholesky (LAPACK DPOTRF, uplo='U').  On success the upper
+/// triangle of `a` holds U.
+pub fn dpotrf_upper(n: usize, a: &mut [f64], lda: usize) -> Result<(), LapackError> {
+    dpotrf_upper_nb(n, a, lda, NB)
+}
+
+/// Blocked upper Cholesky with explicit block size (exposed for the
+/// tuning experiments and the tiled task-parallel runtime).
+pub fn dpotrf_upper_nb(
+    n: usize,
+    a: &mut [f64],
+    lda: usize,
+    nb: usize,
+) -> Result<(), LapackError> {
+    if nb <= 1 || nb >= n {
+        return dpotf2_upper(n, a, lda);
+    }
+    let mut j = 0;
+    while j < n {
+        let jb = nb.min(n - j);
+        // factor the diagonal block A[j..j+jb, j..j+jb]
+        {
+            let off = j + j * lda;
+            dpotf2_upper(jb, &mut a[off..], lda).map_err(|e| match e {
+                LapackError::NotPositiveDefinite(i) => LapackError::NotPositiveDefinite(j + i),
+                other => other,
+            })?;
+        }
+        if j + jb < n {
+            let rest = n - j - jb;
+            // A[j.., j+jb..] := U_jjᵀ^{-1} A[j.., j+jb..]   (trsm)
+            {
+                // split borrows: triangular block is read, panel written.
+                // The panel A[j..j+jb, j+jb..n] starts at column j+jb.
+                let (tri_part, panel_part) = a.split_at_mut((j + jb) * lda);
+                let tri = &tri_part[j + j * lda..];
+                dtrsm(
+                    Side::Left,
+                    Uplo::Upper,
+                    Trans::T,
+                    Diag::NonUnit,
+                    jb,
+                    rest,
+                    1.0,
+                    tri,
+                    lda,
+                    &mut panel_part[j..],
+                    lda,
+                );
+            }
+            // A[j+jb.., j+jb..] -= A[j..j+jb, j+jb..]ᵀ A[j..j+jb, j+jb..]
+            {
+                let (panel_part, trail_part) = {
+                    // panel rows j..j+jb live in columns >= j+jb: we need
+                    // both a read of the panel and a write of the trailing
+                    // block in the same columns — copy the panel (jb x rest).
+                    let mut panel = vec![0.0; jb * rest];
+                    for c in 0..rest {
+                        let src = j + (j + jb + c) * lda;
+                        panel[c * jb..c * jb + jb].copy_from_slice(&a[src..src + jb]);
+                    }
+                    (panel, ())
+                };
+                let _ = trail_part;
+                let off = (j + jb) + (j + jb) * lda;
+                dsyrk(
+                    Uplo::Upper,
+                    Trans::T,
+                    rest,
+                    jb,
+                    -1.0,
+                    &panel_part,
+                    jb,
+                    1.0,
+                    &mut a[off..],
+                    lda,
+                );
+            }
+        }
+        j += jb;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        let g = Matrix::randn(n, n, rng);
+        let mut b = g.transpose().matmul_naive(&g);
+        for i in 0..n {
+            b[(i, i)] += n as f64; // well away from singular
+        }
+        b
+    }
+
+    fn check_factor(b: &Matrix, u: &Matrix) {
+        let n = b.rows();
+        let mut uu = u.clone();
+        uu.zero_lower();
+        let utu = uu.transpose().matmul_naive(&uu);
+        let scale = b.frobenius_norm();
+        assert!(
+            utu.max_abs_diff(b) < 1e-12 * scale,
+            "||UᵀU - B|| = {}",
+            utu.max_abs_diff(b)
+        );
+    }
+
+    #[test]
+    fn potf2_small() {
+        let mut rng = Rng::new(1);
+        let b = random_spd(12, &mut rng);
+        let mut u = b.clone();
+        dpotf2_upper(12, u.as_mut_slice(), 12).unwrap();
+        check_factor(&b, &u);
+    }
+
+    #[test]
+    fn potrf_blocked_matches_unblocked() {
+        let mut rng = Rng::new(2);
+        let n = 201; // deliberately not a multiple of NB
+        let b = random_spd(n, &mut rng);
+        let mut u1 = b.clone();
+        dpotf2_upper(n, u1.as_mut_slice(), n).unwrap();
+        let mut u2 = b.clone();
+        dpotrf_upper(n, u2.as_mut_slice(), n).unwrap();
+        u1.zero_lower();
+        u2.zero_lower();
+        assert!(u1.max_abs_diff(&u2) < 1e-9 * b.frobenius_norm());
+        check_factor(&b, &u2);
+    }
+
+    #[test]
+    fn potrf_various_block_sizes() {
+        let mut rng = Rng::new(3);
+        let n = 97;
+        let b = random_spd(n, &mut rng);
+        for nb in [1, 8, 32, 96, 200] {
+            let mut u = b.clone();
+            dpotrf_upper_nb(n, u.as_mut_slice(), n, nb).unwrap();
+            check_factor(&b, &u);
+        }
+    }
+
+    #[test]
+    fn potrf_rejects_indefinite() {
+        let mut a = Matrix::identity(4);
+        a[(2, 2)] = -1.0;
+        let e = dpotrf_upper(4, a.as_mut_slice(), 4).unwrap_err();
+        assert_eq!(e, LapackError::NotPositiveDefinite(3));
+    }
+
+    #[test]
+    fn potrf_identity_is_identity() {
+        let mut a = Matrix::identity(10);
+        dpotrf_upper(10, a.as_mut_slice(), 10).unwrap();
+        assert!(a.max_abs_diff(&Matrix::identity(10)) < 1e-15);
+    }
+
+    #[test]
+    fn potrf_diag_positive() {
+        let mut rng = Rng::new(4);
+        let n = 40;
+        let b = random_spd(n, &mut rng);
+        let mut u = b.clone();
+        dpotrf_upper(n, u.as_mut_slice(), n).unwrap();
+        for i in 0..n {
+            assert!(u[(i, i)] > 0.0);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Bisection for a subset of tridiagonal eigenvalues (LAPACK DSTEBZ class).
+//!
+//! Together with `stein` (inverse iteration) this plays the MR³/DSTEMR role
+//! of stages TD2/TT3: an O(ns)-class *subset* solver whose cost is
+//! negligible next to the reductions — the property Table 2 of the paper
+//! verifies ("the execution time of the tridiagonal eigensolver is
+//! negligible, validating the choice of MR³").  See DESIGN.md
+//! (substitution #4) for why bisection+invit substitutes for MR³ here.
+
+use crate::matrix::SymTridiag;
+
+/// Compute eigenvalues `il..=iu` (0-based, ascending order) of `t` by
+/// Sturm-count bisection.  Each eigenvalue is located independently to
+/// nearly machine precision.
+pub fn dstebz(t: &SymTridiag, il: usize, iu: usize) -> Vec<f64> {
+    let n = t.n();
+    assert!(il <= iu && iu < n, "index range {il}..={iu} out of 0..{n}");
+    let (glo, ghi) = t.gershgorin();
+    let span = (ghi - glo).max(f64::MIN_POSITIVE);
+    let abs_tol = f64::EPSILON * (glo.abs().max(ghi.abs()) + span).max(1.0);
+    let mut out = Vec::with_capacity(iu - il + 1);
+    for k in il..=iu {
+        // invariant: count(lo) <= k < count(hi)
+        let mut lo = glo - span * 1e-6 - abs_tol;
+        let mut hi = ghi + span * 1e-6 + abs_tol;
+        // bisect until interval ~ ulp
+        for _ in 0..120 {
+            let mid = 0.5 * (lo + hi);
+            if hi - lo <= 2.0 * f64::EPSILON * mid.abs() + abs_tol * 1e-3 {
+                break;
+            }
+            if t.sturm_count(mid) > k {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        out.push(0.5 * (lo + hi));
+    }
+    out
+}
+
+/// Count eigenvalues in the half-open interval `[a, b)`.
+pub fn count_in_interval(t: &SymTridiag, a: f64, b: f64) -> usize {
+    t.sturm_count(b) - t.sturm_count(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lapack::steqr::dsterf;
+
+    fn laplacian(n: usize) -> SymTridiag {
+        SymTridiag::new(vec![2.0; n], vec![-1.0; n - 1])
+    }
+
+    #[test]
+    fn subset_matches_full_solver() {
+        let n = 40;
+        let t = SymTridiag::new(
+            (0..n).map(|i| (i as f64 * 0.9).sin() * 2.0).collect(),
+            (0..n - 1).map(|i| 1.0 + 0.1 * (i as f64).cos()).collect(),
+        );
+        let mut tf = t.clone();
+        dsterf(&mut tf).unwrap();
+        let subset = dstebz(&t, 3, 12);
+        for (j, k) in (3..=12).enumerate() {
+            assert!(
+                (subset[j] - tf.d[k]).abs() < 1e-10,
+                "eig {k}: {} vs {}",
+                subset[j],
+                tf.d[k]
+            );
+        }
+    }
+
+    #[test]
+    fn smallest_eigenvalue_of_laplacian() {
+        let n = 50;
+        let t = laplacian(n);
+        let lam = dstebz(&t, 0, 0)[0];
+        let expect = 2.0 - 2.0 * (std::f64::consts::PI / (n as f64 + 1.0)).cos();
+        assert!((lam - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn largest_eigenvalue_of_laplacian() {
+        let n = 50;
+        let t = laplacian(n);
+        let lam = dstebz(&t, n - 1, n - 1)[0];
+        let expect =
+            2.0 - 2.0 * (n as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos();
+        assert!((lam - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn values_ascending() {
+        let n = 30;
+        let t = SymTridiag::new(
+            (0..n).map(|i| ((i * 31) % 7) as f64).collect(),
+            vec![0.8; n - 1],
+        );
+        let vals = dstebz(&t, 0, n - 1);
+        for i in 1..n {
+            assert!(vals[i] >= vals[i - 1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn interval_count() {
+        let t = laplacian(10);
+        assert_eq!(count_in_interval(&t, -1.0, 5.0), 10);
+        assert_eq!(count_in_interval(&t, 5.0, 6.0), 0);
+    }
+
+    #[test]
+    fn degenerate_cluster_counted() {
+        // diag(1,1,1) has a triple eigenvalue; bisection must return it
+        // three times at indices 0,1,2
+        let t = SymTridiag::new(vec![1.0, 1.0, 1.0], vec![0.0, 0.0]);
+        let vals = dstebz(&t, 0, 2);
+        for v in vals {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Inverse iteration for tridiagonal eigenvectors (LAPACK DSTEIN class).
+//!
+//! Given eigenvalues from `stebz`, each eigenvector is obtained by a few
+//! inverse-iteration sweeps with the shifted tridiagonal factored by
+//! Gaussian elimination with partial pivoting; vectors whose eigenvalues
+//! fall in the same cluster are re-orthogonalized by modified Gram–Schmidt
+//! (the EISPACK TINVIT strategy).  Completes the MR³ substitution of
+//! DESIGN.md (#4).
+
+use crate::blas::{ddot, dnrm2};
+use crate::matrix::{Matrix, SymTridiag};
+use crate::util::rng::Rng;
+
+/// Relative gap below which consecutive eigenvalues are treated as one
+/// cluster and their vectors mutually re-orthogonalized.
+const CLUSTER_REL_GAP: f64 = 1e-3;
+const MAX_SWEEPS: usize = 5;
+
+/// Solve (T - lam I) x = b via LU with partial pivoting; near-zero pivots
+/// are perturbed (standard inverse-iteration practice — the shift *is* an
+/// eigenvalue, so the system is intentionally near-singular).
+fn solve_shifted(t: &SymTridiag, lam: f64, b: &[f64], pivmin: f64) -> Vec<f64> {
+    let n = t.n();
+    if n == 1 {
+        let mut p = t.d[0] - lam;
+        if p.abs() < pivmin {
+            p = pivmin.copysign(if p == 0.0 { 1.0 } else { p });
+        }
+        return vec![b[0] / p];
+    }
+    // Working diagonals of (T - lam I): sub (dl), main (dd), super (du),
+    // plus the second superdiagonal (du2) created by pivoting fill-in.
+    // (LAPACK DGTTRF structure.)
+    let mut dl: Vec<f64> = t.e.clone();
+    let mut dd: Vec<f64> = t.d.iter().map(|&di| di - lam).collect();
+    let mut du: Vec<f64> = t.e.clone();
+    let mut du2 = vec![0.0; n - 1]; // only first n-2 used
+    let mut perm = vec![false; n - 1];
+
+    for i in 0..n - 1 {
+        if dd[i].abs() >= dl[i].abs() {
+            // no swap: pivot dd[i]
+            if dd[i].abs() < pivmin {
+                dd[i] = pivmin.copysign(if dd[i] == 0.0 { 1.0 } else { dd[i] });
+            }
+            let m = dl[i] / dd[i];
+            dl[i] = m;
+            dd[i + 1] -= m * du[i];
+            du2[i] = 0.0;
+        } else {
+            // swap rows i and i+1: pivot becomes dl[i]
+            perm[i] = true;
+            let m = dd[i] / dl[i];
+            // new row i   = (dl[i], dd[i+1], du[i+1])
+            // new row i+1 = (dd[i], du[i],   0), then eliminated with m
+            let old_ddi1 = dd[i + 1];
+            let old_dui = du[i];
+            dd[i] = dl[i];
+            du[i] = old_ddi1;
+            dd[i + 1] = old_dui - m * old_ddi1;
+            if i + 1 < n - 1 {
+                du2[i] = du[i + 1];
+                du[i + 1] = -m * du[i + 1];
+            }
+            dl[i] = m;
+        }
+    }
+    if dd[n - 1].abs() < pivmin {
+        dd[n - 1] = pivmin.copysign(if dd[n - 1] == 0.0 { 1.0 } else { dd[n - 1] });
+    }
+
+    // forward sweep on the rhs (apply the recorded row ops)
+    let mut x = b.to_vec();
+    for i in 0..n - 1 {
+        if perm[i] {
+            x.swap(i, i + 1);
+        }
+        let m = dl[i];
+        x[i + 1] -= m * x[i];
+    }
+    // back substitution with the (up to) two superdiagonals
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        if i + 1 < n {
+            s -= du[i] * x[i + 1];
+        }
+        if i + 2 < n {
+            s -= du2[i] * x[i + 2];
+        }
+        x[i] = s / dd[i];
+    }
+    x
+}
+
+/// Eigenvectors for the given (ascending) eigenvalues of `t`; returns an
+/// n x s column-orthonormal matrix.
+pub fn dstein(t: &SymTridiag, lambdas: &[f64]) -> Matrix {
+    let n = t.n();
+    let s = lambdas.len();
+    let mut z = Matrix::zeros(n, s);
+    let norm = t.norm1().max(f64::MIN_POSITIVE);
+    let pivmin = f64::EPSILON * norm * 1e-3;
+    let mut rng = Rng::new(0x57E1_Eu64);
+    let mut cluster_start = 0usize;
+
+    for j in 0..s {
+        if j > 0 && (lambdas[j] - lambdas[j - 1]).abs() > CLUSTER_REL_GAP * norm {
+            cluster_start = j;
+        }
+        // random start keeps components along the target eigenvector
+        let mut x: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let inv_scale = 1.0 / dnrm2(&x);
+        for v in x.iter_mut() {
+            *v *= inv_scale;
+        }
+        for sweep in 0..MAX_SWEEPS {
+            let mut y = solve_shifted(t, lambdas[j], &x, pivmin);
+            // re-orthogonalize within the cluster
+            for p in cluster_start..j {
+                let zp = z.col(p);
+                let proj = ddot(&y, zp);
+                for (yi, zi) in y.iter_mut().zip(zp) {
+                    *yi -= proj * zi;
+                }
+            }
+            let ny = dnrm2(&y);
+            if ny == 0.0 {
+                // degenerate start; re-randomize
+                for v in x.iter_mut() {
+                    *v = rng.uniform_in(-1.0, 1.0);
+                }
+                continue;
+            }
+            let inv = 1.0 / ny;
+            for (xi, yi) in x.iter_mut().zip(&y) {
+                *xi = yi * inv;
+            }
+            // growth test: one sweep usually suffices; after the 2nd sweep
+            // accept unconditionally unless the residual is still poor.
+            if sweep >= 1 {
+                let tx = t.matvec(&x);
+                let mut rmax = 0.0f64;
+                for i in 0..n {
+                    rmax = rmax.max((tx[i] - lambdas[j] * x[i]).abs());
+                }
+                if rmax <= 1e-12 * norm || sweep == MAX_SWEEPS - 1 {
+                    break;
+                }
+            }
+        }
+        z.col_mut(j).copy_from_slice(&x);
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lapack::stebz::dstebz;
+
+    fn laplacian(n: usize) -> SymTridiag {
+        SymTridiag::new(vec![2.0; n], vec![-1.0; n - 1])
+    }
+
+    #[test]
+    fn residuals_small_for_subset() {
+        let n = 60;
+        let t = laplacian(n);
+        let lams = dstebz(&t, 0, 9);
+        let z = dstein(&t, &lams);
+        for j in 0..10 {
+            let zj: Vec<f64> = z.col(j).to_vec();
+            let tz = t.matvec(&zj);
+            let mut r = 0.0f64;
+            for i in 0..n {
+                r = r.max((tz[i] - lams[j] * zj[i]).abs());
+            }
+            assert!(r < 1e-10, "vector {j} residual {r}");
+        }
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        let n = 45;
+        let t = SymTridiag::new(
+            (0..n).map(|i| (i as f64 * 0.31).cos() * 2.0).collect(),
+            (0..n - 1).map(|i| 0.7 + 0.2 * (i as f64).sin()).collect(),
+        );
+        let lams = dstebz(&t, 0, 7);
+        let z = dstein(&t, &lams);
+        for a in 0..8 {
+            for b in 0..8 {
+                let d = ddot(z.col(a), z.col(b));
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((d - expect).abs() < 1e-9, "<z{a},z{b}> = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_eigenvalues_get_orthogonal_vectors() {
+        // two nearly-equal eigenvalues via two disconnected blocks
+        let mut d = vec![1.0, 2.0, 1.0 + 1e-14, 2.0];
+        let e = vec![0.5, 0.0, 0.5];
+        // blocks [1, .5; .5, 2] twice: eigenvalues come in near-equal pairs
+        let t = SymTridiag::new(std::mem::take(&mut d), e);
+        let lams = dstebz(&t, 0, 1);
+        assert!((lams[0] - lams[1]).abs() < 1e-10);
+        let z = dstein(&t, &lams);
+        let inner = ddot(z.col(0), z.col(1)).abs();
+        assert!(inner < 1e-8, "cluster vectors not orthogonal: {inner}");
+    }
+
+    #[test]
+    fn matches_known_laplacian_vectors() {
+        let n = 12;
+        let t = laplacian(n);
+        let lams = dstebz(&t, 0, 0);
+        let z = dstein(&t, &lams);
+        // analytic: v_k(i) ∝ sin((i+1)kπ/(n+1)), k=1
+        let mut expect: Vec<f64> = (0..n)
+            .map(|i| ((i as f64 + 1.0) * std::f64::consts::PI / (n as f64 + 1.0)).sin())
+            .collect();
+        let nv = dnrm2(&expect);
+        for v in expect.iter_mut() {
+            *v /= nv;
+        }
+        let got = z.col(0);
+        let sign = if got[0] * expect[0] < 0.0 { -1.0 } else { 1.0 };
+        for i in 0..n {
+            assert!((sign * got[i] - expect[i]).abs() < 1e-9, "row {i}");
+        }
+    }
+}

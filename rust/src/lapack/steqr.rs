@@ -1,0 +1,243 @@
+//! Implicit QL with Wilkinson-style shifts for the full spectrum of a
+//! symmetric tridiagonal matrix (EISPACK TQL2 / LAPACK DSTEQR class).
+//!
+//! Used for the small projected eigenproblems of the Lanczos solvers
+//! (KE3/KI5: `T_m, V_m → Λ, Y`, where ARPACK also applies a shifted QR
+//! iteration) and as the reference full-spectrum solver in tests.  The
+//! *subset* path of TD2/TT3 uses `stebz` + `stein` instead.
+
+use super::LapackError;
+use crate::matrix::{Matrix, SymTridiag};
+
+const MAX_ITER: usize = 50;
+
+/// Eigenvalues (and optionally eigenvectors) of a symmetric tridiagonal
+/// matrix via implicit QL with shifts.
+///
+/// On success `t.d` holds the eigenvalues in ascending order and `t.e` is
+/// destroyed.  If `z` is given (any row count, n columns — typically the
+/// identity for T's own eigenvectors, or the accumulated `Q` to fold the
+/// back-transform in), the same rotations are applied to its columns and
+/// columns are permuted with the final sort.
+pub fn dsteqr(t: &mut SymTridiag, mut z: Option<&mut Matrix>) -> Result<(), LapackError> {
+    let n = t.n();
+    if let Some(zm) = &z {
+        assert_eq!(zm.cols(), n, "z must have n columns");
+    }
+    if n <= 1 {
+        return Ok(());
+    }
+    let d = &mut t.d;
+    let mut e = t.e.clone();
+    e.push(0.0); // pad so e[m] with m = n-1 is addressable
+    let eps = f64::EPSILON;
+
+    for l in 0..n {
+        let mut iter = 0;
+        'outer: loop {
+            // locate the first negligible off-diagonal at or after l
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= eps * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break 'outer;
+            }
+            iter += 1;
+            if iter > MAX_ITER {
+                return Err(LapackError::NoConvergence(l + 1));
+            }
+            // Wilkinson-style shift from the 2x2 at the top of the block
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(if g == 0.0 { 1.0 } else { g }));
+            let (mut s, mut c, mut p) = (1.0f64, 1.0f64, 0.0f64);
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // recover from underflow: deflate and retry
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                if let Some(zm) = &mut z {
+                    // apply the rotation to columns i and i+1
+                    let rows = zm.rows();
+                    for k in 0..rows {
+                        f = zm[(k, i + 1)];
+                        zm[(k, i + 1)] = s * zm[(k, i)] + c * f;
+                        zm[(k, i)] = c * zm[(k, i)] - s * f;
+                    }
+                }
+            }
+            if underflow {
+                continue 'outer;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // ascending selection sort, permuting eigenvector columns alongside
+    for i in 0..n {
+        let mut kmin = i;
+        for k in (i + 1)..n {
+            if d[k] < d[kmin] {
+                kmin = k;
+            }
+        }
+        if kmin != i {
+            d.swap(i, kmin);
+            if let Some(zm) = &mut z {
+                let rows = zm.rows();
+                for r in 0..rows {
+                    let tmp = zm[(r, i)];
+                    zm[(r, i)] = zm[(r, kmin)];
+                    zm[(r, kmin)] = tmp;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Eigenvalues only (LAPACK DSTERF role): QL without vector accumulation.
+pub fn dsterf(t: &mut SymTridiag) -> Result<(), LapackError> {
+    dsteqr(t, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn laplacian(n: usize) -> SymTridiag {
+        SymTridiag::new(vec![2.0; n], vec![-1.0; n - 1])
+    }
+
+    fn laplacian_eigs(n: usize) -> Vec<f64> {
+        (1..=n)
+            .map(|k| 2.0 - 2.0 * (k as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos())
+            .collect()
+    }
+
+    #[test]
+    fn eigenvalues_of_laplacian() {
+        let n = 30;
+        let mut t = laplacian(n);
+        dsterf(&mut t).unwrap();
+        let expect = laplacian_eigs(n);
+        for i in 0..n {
+            assert!((t.d[i] - expect[i]).abs() < 1e-12, "eig {i}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_ascending() {
+        let n = 25;
+        let mut t = SymTridiag::new(
+            (0..n).map(|i| ((i * 7919) % 13) as f64).collect(),
+            (0..n - 1).map(|i| 1.0 + (i % 3) as f64).collect(),
+        );
+        dsterf(&mut t).unwrap();
+        for i in 1..n {
+            assert!(t.d[i] >= t.d[i - 1]);
+        }
+    }
+
+    #[test]
+    fn eigenvectors_satisfy_t_z_eq_z_lambda() {
+        let n = 20;
+        let t0 = laplacian(n);
+        let mut t = t0.clone();
+        let mut z = Matrix::identity(n);
+        dsteqr(&mut t, Some(&mut z)).unwrap();
+        for j in 0..n {
+            let zj: Vec<f64> = (0..n).map(|i| z[(i, j)]).collect();
+            let tz = t0.matvec(&zj);
+            for i in 0..n {
+                assert!(
+                    (tz[i] - t.d[j] * zj[i]).abs() < 1e-11,
+                    "col {j} row {i}: {} vs {}",
+                    tz[i],
+                    t.d[j] * zj[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let n = 18;
+        let mut t = SymTridiag::new(
+            (0..n).map(|i| (i as f64).sin() * 3.0).collect(),
+            (0..n - 1).map(|i| 0.5 + (i as f64).cos()).collect(),
+        );
+        let mut z = Matrix::identity(n);
+        dsteqr(&mut t, Some(&mut z)).unwrap();
+        let ztz = z.transpose().matmul_naive(&z);
+        assert!(ztz.max_abs_diff(&Matrix::identity(n)) < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix_trivial() {
+        let mut t = SymTridiag::new(vec![3.0, -1.0, 2.0], vec![0.0, 0.0]);
+        let mut z = Matrix::identity(3);
+        dsteqr(&mut t, Some(&mut z)).unwrap();
+        assert_eq!(t.d, vec![-1.0, 2.0, 3.0]);
+        // permutation matrix expected
+        assert_eq!(z[(1, 0)], 1.0);
+        assert_eq!(z[(2, 1)], 1.0);
+        assert_eq!(z[(0, 2)], 1.0);
+    }
+
+    #[test]
+    fn single_element() {
+        let mut t = SymTridiag::new(vec![42.0], vec![]);
+        dsterf(&mut t).unwrap();
+        assert_eq!(t.d, vec![42.0]);
+    }
+
+    #[test]
+    fn clustered_eigenvalues_resolved() {
+        // nearly-degenerate pair
+        let mut t = SymTridiag::new(vec![1.0, 1.0 + 1e-12, 5.0], vec![1e-13, 1e-13]);
+        dsterf(&mut t).unwrap();
+        assert!((t.d[0] - 1.0).abs() < 1e-10);
+        assert!((t.d[2] - 5.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn trace_and_frobenius_preserved() {
+        let n = 16;
+        let t0 = SymTridiag::new(
+            (0..n).map(|i| (i as f64 * 1.3).cos()).collect(),
+            (0..n - 1).map(|i| (i as f64 * 0.7).sin()).collect(),
+        );
+        let trace0: f64 = t0.d.iter().sum();
+        let frob0: f64 = t0.d.iter().map(|x| x * x).sum::<f64>()
+            + 2.0 * t0.e.iter().map(|x| x * x).sum::<f64>();
+        let mut t = t0.clone();
+        dsterf(&mut t).unwrap();
+        let trace1: f64 = t.d.iter().sum();
+        let frob1: f64 = t.d.iter().map(|x| x * x).sum::<f64>();
+        assert!((trace0 - trace1).abs() < 1e-12 * trace0.abs().max(1.0));
+        assert!((frob0 - frob1).abs() < 1e-11 * frob0.max(1.0));
+    }
+}

@@ -1,0 +1,80 @@
+//! Small dense symmetric eigensolver (DSYEV class): tridiagonalize, QL with
+//! vector accumulation, back-transform.  Used for the Lanczos projected
+//! problems (order m ≪ n) and as the exhaustive oracle in tests.
+
+use super::ormtr::dormtr_lower;
+use super::steqr::dsteqr;
+use super::sytrd::dsytrd_lower;
+use super::LapackError;
+use crate::blas::Trans;
+use crate::matrix::{Matrix, SymTridiag};
+
+/// All eigenvalues (ascending) and eigenvectors of a dense symmetric
+/// matrix.  O(n³); intended for the small projected problems.
+pub fn dsyev(a: &Matrix) -> Result<(Vec<f64>, Matrix), LapackError> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    if n == 0 {
+        return Ok((vec![], Matrix::zeros(0, 0)));
+    }
+    if n == 1 {
+        return Ok((vec![a[(0, 0)]], Matrix::identity(1)));
+    }
+    let mut ared = a.clone();
+    let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+    dsytrd_lower(n, ared.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+    let mut t = SymTridiag::new(d, e);
+    let mut z = Matrix::identity(n);
+    dsteqr(&mut t, Some(&mut z))?;
+    // eigenvectors of A: back-transform by the tridiagonalization's Q
+    dormtr_lower(Trans::N, n, n, ared.as_slice(), n, &tau, z.as_mut_slice(), n);
+    Ok((t.d, z))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eigen_decomposition_reconstructs() {
+        let mut rng = Rng::new(1);
+        let n = 25;
+        let a = Matrix::randn_sym(n, &mut rng);
+        let (w, v) = dsyev(&a).unwrap();
+        // A V == V diag(w)
+        for j in 0..n {
+            let vj: Vec<f64> = v.col(j).to_vec();
+            let av = a.matvec_naive(&vj);
+            for i in 0..n {
+                assert!((av[i] - w[j] * vj[i]).abs() < 1e-10 * a.frobenius_norm());
+            }
+        }
+        let vtv = v.transpose().matmul_naive(&v);
+        assert!(vtv.max_abs_diff(&Matrix::identity(n)) < 1e-11);
+    }
+
+    #[test]
+    fn known_spectrum_diag() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, &x) in [4.0, -1.0, 2.5, 0.0].iter().enumerate() {
+            a[(i, i)] = x;
+        }
+        let (w, _) = dsyev(&a).unwrap();
+        assert_eq!(w, vec![-1.0, 0.0, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // xxᵀ has eigenvalues {‖x‖², 0, ..., 0}
+        let n = 8;
+        let x: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+        let a = Matrix::from_fn(n, n, |i, j| x[i] * x[j]);
+        let (w, _) = dsyev(&a).unwrap();
+        let nx2: f64 = x.iter().map(|v| v * v).sum();
+        assert!((w[n - 1] - nx2).abs() < 1e-10 * nx2);
+        for i in 0..n - 1 {
+            assert!(w[i].abs() < 1e-10 * nx2);
+        }
+    }
+}

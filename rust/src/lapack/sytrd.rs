@@ -1,0 +1,339 @@
+//! Stage TD1: direct Householder tridiagonalization `QᵀCQ = T`
+//! (LAPACK DSYTRD, lower convention).
+//!
+//! The blocked algorithm (DLATRD panels + DSYR2K trailing updates) performs
+//! 4n³/3 flops, of which *half* — the panel `dsymv`s — are Level-2 and
+//! memory-bound.  This 50 % BLAS-2 fraction is intrinsic to the one-stage
+//! reduction and is exactly what the paper blames for TD1's dominant cost on
+//! multi-threaded architectures (§4.2); variant TT exists to avoid it.
+//!
+//! Reflector `i` is stored in `A(i+2:n, i)` with its implicit unit head at
+//! row `i+1`; `tau[i]` alongside; `d`/`e` receive the tridiagonal.
+
+use super::householder::dlarfg;
+use crate::blas::{daxpy, ddot, dgemv, dscal, dsymv, dsyr2, dsyr2k, Trans, Uplo};
+
+const NB: usize = 32;
+
+/// Unblocked lower tridiagonalization (LAPACK DSYTD2).
+/// On exit: `d[0..n]`, `e[0..n-1]`, reflectors in the strict lower part of
+/// `a` below the first subdiagonal, `tau[0..n-1]` (tau[n-2..] may be 0).
+pub fn dsytd2_lower(
+    n: usize,
+    a: &mut [f64],
+    lda: usize,
+    d: &mut [f64],
+    e: &mut [f64],
+    tau: &mut [f64],
+) {
+    if n == 0 {
+        return;
+    }
+    for i in 0..n.saturating_sub(1) {
+        // generate reflector annihilating A(i+2:n, i)
+        let alpha = a[(i + 1) + i * lda];
+        let (taui, beta) = {
+            let start = (i + 2) + i * lda;
+            let len = n - i - 2;
+            dlarfg(alpha, &mut a[start..start + len])
+        };
+        e[i] = beta;
+        tau[i] = taui;
+        if taui != 0.0 {
+            let m = n - i - 1; // order of the trailing block
+            a[(i + 1) + i * lda] = 1.0;
+            // v = A(i+1:n, i)  (copy to keep borrows simple)
+            let v: Vec<f64> = a[(i + 1) + i * lda..(i + 1) + i * lda + m].to_vec();
+            // w := tau * A(i+1:, i+1:) v
+            let mut w = vec![0.0; m];
+            dsymv(Uplo::Lower, m, taui, &a[(i + 1) + (i + 1) * lda..], lda, &v, 0.0, &mut w);
+            // w += -tau/2 (wᵀ v) v
+            let alpha_c = -0.5 * taui * ddot(&w, &v);
+            daxpy(alpha_c, &v, &mut w);
+            // A(i+1:, i+1:) -= v wᵀ + w vᵀ
+            dsyr2(Uplo::Lower, m, -1.0, &v, &w, &mut a[(i + 1) + (i + 1) * lda..], lda);
+            a[(i + 1) + i * lda] = e[i];
+        } else {
+            a[(i + 1) + i * lda] = beta;
+        }
+        d[i] = a[i + i * lda];
+    }
+    d[n - 1] = a[(n - 1) + (n - 1) * lda];
+}
+
+/// One DLATRD panel (lower): reduce the first `nb` columns of the trailing
+/// m x m block starting at global index `i0`, accumulating `W` (m x nb, ldw
+/// = m) so the caller can apply the rank-2k trailing update.
+#[allow(clippy::too_many_arguments)]
+fn dlatrd_lower(
+    n: usize,
+    i0: usize,
+    nb: usize,
+    a: &mut [f64],
+    lda: usize,
+    e: &mut [f64],
+    tau: &mut [f64],
+    w: &mut [f64],
+    ldw: usize,
+) {
+    let m = n - i0;
+    debug_assert!(ldw >= m);
+    for il in 0..nb {
+        let jc = i0 + il; // global column
+        let rows = n - jc; // rows jc..n of this column
+        // -- update A(jc:n, jc) with the il previous transforms of the panel
+        if il > 0 {
+            // row vectors of W and A at (local) row il, cols 0..il (strided)
+            let wrow: Vec<f64> = (0..il).map(|p| w[il + p * ldw]).collect();
+            let arow: Vec<f64> = (0..il).map(|p| a[jc + (i0 + p) * lda]).collect();
+            // A(jc:n, jc) -= A(jc:n, i0:jc) wrowᵀ + W(il:m, 0:il) arowᵀ
+            let (left, right) = a.split_at_mut(jc * lda);
+            let col = &mut right[jc..jc + rows];
+            dgemv(Trans::N, rows, il, -1.0, &left[jc + i0 * lda..], lda, &wrow, 1.0, col);
+            dgemv(Trans::N, rows, il, -1.0, &w[il..], ldw, &arow, 1.0, col);
+        }
+        if jc + 1 >= n {
+            break;
+        }
+        // -- generate the reflector for column jc
+        let alpha = a[(jc + 1) + jc * lda];
+        let (taui, beta) = {
+            let start = (jc + 2) + jc * lda;
+            let len = n - jc - 2;
+            dlarfg(alpha, &mut a[start..start + len])
+        };
+        e[jc] = beta;
+        tau[jc] = taui;
+        a[(jc + 1) + jc * lda] = 1.0;
+        // -- W(il+1:, il) := tau (A22 v - A_panel (Wᵀ v) - W_panel (Aᵀ v) ...)
+        let mv = n - jc - 1;
+        let v: Vec<f64> = a[(jc + 1) + jc * lda..(jc + 1) + jc * lda + mv].to_vec();
+        // w_col = A(jc+1:, jc+1:) v
+        {
+            let (wleft, wcur) = w.split_at_mut(il * ldw);
+            let wcol = &mut wcur[(il + 1)..(il + 1) + mv];
+            dsymv(Uplo::Lower, mv, 1.0, &a[(jc + 1) + (jc + 1) * lda..], lda, &v, 0.0, wcol);
+            if il > 0 {
+                let mut x = vec![0.0; il];
+                // x = W(il+1:m, 0:il)ᵀ v
+                dgemv(Trans::T, mv, il, 1.0, &wleft[il + 1..], ldw, &v, 0.0, &mut x);
+                // w_col -= A(jc+1:n, i0:jc) x
+                dgemv(Trans::N, mv, il, -1.0, &a[(jc + 1) + i0 * lda..], lda, &x, 1.0, wcol);
+                // x = A(jc+1:n, i0:jc)ᵀ v
+                dgemv(Trans::T, mv, il, 1.0, &a[(jc + 1) + i0 * lda..], lda, &v, 0.0, &mut x);
+                // w_col -= W(il+1:m, 0:il) x
+                dgemv(Trans::N, mv, il, -1.0, &wleft[il + 1..], ldw, &x, 1.0, wcol);
+            }
+            dscal(taui, wcol);
+            let ac = -0.5 * taui * ddot(wcol, &v);
+            daxpy(ac, &v, wcol);
+        }
+    }
+}
+
+/// Blocked lower tridiagonalization (LAPACK DSYTRD, uplo='L').
+pub fn dsytrd_lower(
+    n: usize,
+    a: &mut [f64],
+    lda: usize,
+    d: &mut [f64],
+    e: &mut [f64],
+    tau: &mut [f64],
+) {
+    dsytrd_lower_nb(n, a, lda, d, e, tau, NB)
+}
+
+/// Blocked tridiagonalization with explicit panel width (for tuning).
+#[allow(clippy::too_many_arguments)]
+pub fn dsytrd_lower_nb(
+    n: usize,
+    a: &mut [f64],
+    lda: usize,
+    d: &mut [f64],
+    e: &mut [f64],
+    tau: &mut [f64],
+    nb: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    let crossover = (2 * nb).max(4);
+    let mut i0 = 0usize;
+    if nb > 1 {
+        let mut w = vec![0.0; n * nb];
+        while n - i0 > crossover {
+            let m = n - i0;
+            dlatrd_lower(n, i0, nb, a, lda, e, tau, &mut w, m);
+            // trailing update: A(i0+nb:, i0+nb:) -= V Wᵀ + W Vᵀ
+            let rest = n - i0 - nb;
+            {
+                let (left, right) = a.split_at_mut((i0 + nb) * lda);
+                // V = A(i0+nb:n, i0:i0+nb) (unit-head reflectors already have
+                // their 1s stored in place within the panel)
+                dsyr2k(
+                    Uplo::Lower,
+                    rest,
+                    nb,
+                    -1.0,
+                    &left[(i0 + nb) + i0 * lda..],
+                    lda,
+                    &w[nb..],
+                    m,
+                    1.0,
+                    &mut right[i0 + nb..],
+                    lda,
+                );
+            }
+            // restore the subdiagonal entries overwritten with the implicit 1s
+            for il in 0..nb {
+                let jc = i0 + il;
+                a[(jc + 1) + jc * lda] = e[jc];
+                d[jc] = a[jc + jc * lda];
+            }
+            i0 += nb;
+        }
+    }
+    // unblocked finish on the trailing block
+    let rem = n - i0;
+    dsytd2_lower(rem, &mut a[i0 + i0 * lda..], lda, &mut d[i0..], &mut e[i0..], &mut tau[i0..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lapack::steqr::dsteqr;
+    use crate::matrix::{Matrix, SymTridiag};
+    use crate::util::rng::Rng;
+
+    /// Rebuild Q from the stored reflectors and check QᵀAQ = T and QᵀQ = I.
+    fn verify_reduction(a0: &Matrix, ared: &Matrix, d: &[f64], e: &[f64], tau: &[f64]) {
+        let n = a0.rows();
+        // Q = H_0 H_1 ... H_{n-3} applied to identity, v_i in A(i+2:, i)
+        let mut q = Matrix::identity(n);
+        for i in (0..n.saturating_sub(1)).rev() {
+            let m = n - i - 1;
+            let mut v = vec![0.0; m];
+            v[0] = 1.0;
+            for k in 1..m {
+                v[k] = ared[(i + 1 + k, i)];
+            }
+            // apply H_i to rows i+1.. of Q
+            let off = i + 1;
+            crate::lapack::householder::dlarf_left(
+                m,
+                n,
+                &v,
+                tau[i],
+                &mut q.as_mut_slice()[off..],
+                n,
+            );
+        }
+        // T = Qᵀ A Q
+        let t = q.transpose().matmul_naive(a0).matmul_naive(&q);
+        let tt = SymTridiag::new(d.to_vec(), e.to_vec()).to_dense();
+        assert!(
+            t.max_abs_diff(&tt) < 1e-10 * a0.frobenius_norm().max(1.0),
+            "QᵀAQ != T: {}",
+            t.max_abs_diff(&tt)
+        );
+        let qtq = q.transpose().matmul_naive(&q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(n)) < 1e-12);
+    }
+
+    #[test]
+    fn sytd2_reduces_small() {
+        let mut rng = Rng::new(1);
+        let n = 12;
+        let a0 = Matrix::randn_sym(n, &mut rng);
+        let mut a = a0.clone();
+        let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+        dsytd2_lower(n, a.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+        verify_reduction(&a0, &a, &d, &e, &tau);
+    }
+
+    #[test]
+    fn sytrd_blocked_matches_unblocked() {
+        let mut rng = Rng::new(2);
+        let n = 115; // several panels + unblocked tail
+        let a0 = Matrix::randn_sym(n, &mut rng);
+        let mut a1 = a0.clone();
+        let (mut d1, mut e1, mut t1) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+        dsytd2_lower(n, a1.as_mut_slice(), n, &mut d1, &mut e1, &mut t1);
+        let mut a2 = a0.clone();
+        let (mut d2, mut e2, mut t2) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+        dsytrd_lower(n, a2.as_mut_slice(), n, &mut d2, &mut e2, &mut t2);
+        for i in 0..n {
+            assert!((d1[i] - d2[i]).abs() < 1e-9, "d[{i}]: {} vs {}", d1[i], d2[i]);
+        }
+        for i in 0..n - 1 {
+            assert!((e1[i].abs() - e2[i].abs()).abs() < 1e-9, "e[{i}]");
+        }
+        verify_reduction(&a0, &a2, &d2, &e2, &t2);
+    }
+
+    #[test]
+    fn sytrd_preserves_spectrum() {
+        let mut rng = Rng::new(3);
+        let n = 60;
+        // matrix with known spectrum: Q diag Qᵀ built from random reflection
+        let a0 = Matrix::randn_sym(n, &mut rng);
+        let mut a = a0.clone();
+        let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+        dsytrd_lower(n, a.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+        // eigenvalues of T vs eigenvalues of A0 (via steqr on both paths)
+        let mut t = SymTridiag::new(d, e);
+        dsteqr(&mut t, None).unwrap();
+        // reduce A0 again via the unblocked path for an independent check
+        let mut a2 = a0.clone();
+        let (mut d2, mut e2, mut tau2) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+        dsytd2_lower(n, a2.as_mut_slice(), n, &mut d2, &mut e2, &mut tau2);
+        let mut t2 = SymTridiag::new(d2, e2);
+        dsteqr(&mut t2, None).unwrap();
+        for i in 0..n {
+            assert!(
+                (t.d[i] - t2.d[i]).abs() < 1e-8 * a0.frobenius_norm(),
+                "eig {i}: {} vs {}",
+                t.d[i],
+                t2.d[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sytrd_tridiagonal_input_is_fixed_point() {
+        // already-tridiagonal matrix: reflectors should be trivial
+        let n = 10;
+        let t = SymTridiag::new(
+            (0..n).map(|i| i as f64 + 1.0).collect(),
+            (0..n - 1).map(|i| 0.5 + i as f64 * 0.1).collect(),
+        );
+        let dense = t.to_dense();
+        let mut a = dense.clone();
+        let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+        dsytd2_lower(n, a.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+        for i in 0..n {
+            assert!((d[i] - t.d[i]).abs() < 1e-12);
+        }
+        for i in 0..n - 1 {
+            assert!((e[i].abs() - t.e[i].abs()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sytrd_handles_tiny_sizes() {
+        for n in [1usize, 2, 3] {
+            let mut rng = Rng::new(n as u64);
+            let a0 = Matrix::randn_sym(n, &mut rng);
+            let mut a = a0.clone();
+            let mut d = vec![0.0; n];
+            let mut e = vec![0.0; n.saturating_sub(1)];
+            let mut tau = vec![0.0; n.saturating_sub(1)];
+            dsytrd_lower(n, a.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+            if n >= 2 {
+                verify_reduction(&a0, &a, &d, &e, &tau);
+            } else {
+                assert_eq!(d[0], a0[(0, 0)]);
+            }
+        }
+    }
+}

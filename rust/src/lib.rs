@@ -1,0 +1,40 @@
+//! # gsyeig — dense symmetric-definite generalized eigensolvers
+//!
+//! A from-scratch reproduction of *"Solving Dense Generalized Eigenproblems
+//! on Multi-threaded Architectures"* (Aliaga, Bientinesi, Davidović,
+//! Di Napoli, Igual, Quintana-Ortí; Appl. Math. Comput. 2012) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The library solves `A X = B X Λ` for a small fraction `s ≪ n` of the
+//! spectrum of a dense symmetric pair `(A, B)` with `B` positive definite,
+//! via the paper's four variants: **TD** (direct tridiagonalization),
+//! **TT** (two-stage SBR reduction), **KE** (Lanczos on explicit `C`),
+//! **KI** (Lanczos with implicit `C`).
+//!
+//! Every substrate the paper depends on is implemented here: a BLAS
+//! (levels 1–3), the LAPACK subset of Table 1, the SBR toolbox, an
+//! ARPACK-substitute thick-restart Lanczos, a PLASMA-style tiled task
+//! runtime, a PJRT offload runtime (the GPU analog; executes HLO artifacts
+//! AOT-lowered from JAX+Pallas), and an eigenproblem job coordinator.
+//!
+//! Entry points: [`solver::GsyeigSolver`] for one problem,
+//! [`coordinator::Coordinator`] for job streams, the `gsyeig` binary for
+//! experiments, `rust/benches/` for the paper's tables and figures.
+
+pub mod bench;
+pub mod blas;
+pub mod cli;
+pub mod coordinator;
+pub mod lanczos;
+pub mod lapack;
+pub mod matrix;
+pub mod runtime;
+pub mod sbr;
+pub mod solver;
+pub mod taskpar;
+pub mod testing;
+pub mod util;
+pub mod workloads;
+
+pub use matrix::dense::Matrix;
+pub use solver::gsyeig::{GsyeigSolver, Problem, Solution, SolverConfig, Variant, Which};

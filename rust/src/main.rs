@@ -1,0 +1,237 @@
+//! `gsyeig` — CLI for the GSYEIG reproduction.
+//!
+//! ```text
+//! gsyeig solve      --workload md|dft --n 1000 --s 10 [--variant TD|TT|KE|KI] [--offload]
+//! gsyeig experiment table2|table3|table4|table6|table7|fig1|fig2|all [--quick]
+//! gsyeig runtime    --inventory            # Table 5 analog: artifact registry
+//! gsyeig serve      --jobs 8 --workers 2   # coordinator demo over a job stream
+//! ```
+
+use std::rc::Rc;
+
+use gsyeig::bench::{
+    fig_sweep, run_accuracy_table, run_stage_table, run_table4, ExperimentKind, ExperimentScale,
+};
+use gsyeig::cli::Args;
+use gsyeig::coordinator::{Coordinator, CoordinatorConfig, Job, JobSpec, WorkloadSpec};
+use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
+use gsyeig::solver::backend::NativeKernels;
+use gsyeig::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant};
+use gsyeig::solver::Accuracy;
+use gsyeig::workloads::{DftWorkload, MdWorkload};
+
+fn main() {
+    let args = Args::from_env();
+    match args.command_at(0) {
+        Some("solve") => cmd_solve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("runtime") => cmd_runtime(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            eprintln!(
+                "usage: gsyeig <solve|experiment|runtime|serve> [options]\n\
+                 see `rust/src/main.rs` header for the full synopsis"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_variant(s: &str) -> Variant {
+    match s {
+        "TD" => Variant::TD,
+        "TT" => Variant::TT,
+        "KE" => Variant::KE,
+        "KI" => Variant::KI,
+        other => {
+            eprintln!("unknown variant {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_solve(args: &Args) {
+    let n = args.get_usize("n", 400);
+    let workload = args.get("workload").unwrap_or("md");
+    let (problem, which, s, truth) = match workload {
+        "md" => {
+            let mut w = MdWorkload::with_n(n);
+            w.s = args.get_usize("s", w.s);
+            let s = w.s;
+            let (p, which, inv) = w.solver_problem();
+            (p, which, s, inv)
+        }
+        "dft" => {
+            let mut w = DftWorkload::with_n(n);
+            w.s = args.get_usize("s", w.s);
+            let s = w.s;
+            let (p, truth) = w.problem();
+            (p, w.which(), s, truth[..s].to_vec())
+        }
+        other => {
+            eprintln!("unknown workload {other} (md|dft)");
+            std::process::exit(2);
+        }
+    };
+    let variant = parse_variant(args.get("variant").unwrap_or("KE"));
+    let a0 = problem.a.clone();
+    let b0 = problem.b.clone();
+    let cfg = SolverConfig::new(variant, s, which);
+
+    let sol = if args.flag("offload") {
+        use gsyeig::solver::backend::Kernels;
+        let reg = Rc::new(ArtifactRegistry::load_default().expect("artifacts missing"));
+        let kernels = OffloadKernels::new(reg);
+        kernels.warm_up(problem.n()); // compile artifacts outside the timings
+        GsyeigSolver::with_kernels(cfg, kernels).solve(problem)
+    } else {
+        GsyeigSolver::native(cfg).solve(problem)
+    };
+
+    println!("variant {} on {workload} (n={n}, s={s}, backend={})", variant.name(), sol.backend);
+    println!("converged: {} matvecs: {}", sol.converged, sol.matvecs);
+    for (stage, d) in sol.stages.stages() {
+        println!("  {stage:>6}: {:8.3}s", d.as_secs_f64());
+    }
+    println!("  total : {:8.3}s", sol.total_seconds());
+    let acc = Accuracy::measure(&a0, &b0, &sol.eigenvalues, &sol.x);
+    println!("accuracy: orth {:.2E}  resid {:.2E}", acc.orthogonality, acc.residual);
+    let k = sol.eigenvalues.len().min(8);
+    println!("first {k} eigenvalues: {:?}", &sol.eigenvalues[..k]);
+    let k2 = k.min(truth.len());
+    println!("ground truth        : {:?}", &truth[..k2]);
+}
+
+fn cmd_experiment(args: &Args) {
+    let what = args.command_at(1).unwrap_or("all");
+    let scale =
+        if args.flag("quick") { ExperimentScale::quick() } else { ExperimentScale::from_env() };
+    let native = NativeKernels::default();
+    let all = Variant::ALL;
+
+    let offload = || -> OffloadKernels {
+        let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+        OffloadKernels::new(reg)
+    };
+
+    let run_t2_t3 = |kind: ExperimentKind| {
+        let t = run_stage_table(kind, &scale, &native, &all);
+        println!("{}", t.render("Table 2 analog (conventional libraries)"));
+        println!("{}", run_accuracy_table(&t, "Table 3 analog"));
+    };
+    let run_t6_t7 = |kind: ExperimentKind| {
+        let k = offload();
+        let t = run_stage_table(kind, &scale, &k, &all);
+        println!("{}", t.render("Table 6 analog (PJRT offload)"));
+        println!("{}", run_accuracy_table(&t, "Table 7 analog"));
+    };
+
+    match what {
+        "table2" | "table3" => {
+            run_t2_t3(ExperimentKind::Md);
+            run_t2_t3(ExperimentKind::Dft);
+        }
+        "table4" => {
+            println!("{}", run_table4(ExperimentKind::Md, &scale, 2, 128));
+            println!("{}", run_table4(ExperimentKind::Dft, &scale, 2, 128));
+        }
+        "table6" | "table7" => {
+            run_t6_t7(ExperimentKind::Md);
+            run_t6_t7(ExperimentKind::Dft);
+        }
+        "fig1" | "fig2" => {
+            let svals = fig_svals(&scale);
+            if what == "fig1" {
+                let (csv, txt) =
+                    fig_sweep(ExperimentKind::Md, &scale, &native, &svals, "Figure 1 analog (native)");
+                println!("{txt}\nCSV:\n{csv}");
+            } else {
+                let k = offload();
+                let (csv, txt) =
+                    fig_sweep(ExperimentKind::Md, &scale, &k, &svals, "Figure 2 analog (offload)");
+                println!("{txt}\nCSV:\n{csv}");
+            }
+        }
+        "all" => {
+            run_t2_t3(ExperimentKind::Md);
+            run_t2_t3(ExperimentKind::Dft);
+            println!("{}", run_table4(ExperimentKind::Md, &scale, 2, 128));
+            println!("{}", run_table4(ExperimentKind::Dft, &scale, 2, 128));
+            run_t6_t7(ExperimentKind::Md);
+            run_t6_t7(ExperimentKind::Dft);
+            let svals = fig_svals(&scale);
+            let (csv1, txt1) =
+                fig_sweep(ExperimentKind::Md, &scale, &native, &svals, "Figure 1 analog (native)");
+            println!("{txt1}\nCSV:\n{csv1}");
+            let k = offload();
+            let (csv2, txt2) =
+                fig_sweep(ExperimentKind::Md, &scale, &k, &svals, "Figure 2 analog (offload)");
+            println!("{txt2}\nCSV:\n{csv2}");
+        }
+        other => {
+            eprintln!("unknown experiment {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn fig_svals(scale: &ExperimentScale) -> Vec<usize> {
+    // the paper sweeps s up to a few % of n; mirror that relative range
+    let n = scale.md_n;
+    let mut v: Vec<usize> =
+        [n / 200, n / 100, n / 40, n / 20, n / 10].into_iter().map(|s| s.max(1)).collect();
+    v.dedup();
+    v
+}
+
+fn cmd_runtime(args: &Args) {
+    let reg = ArtifactRegistry::load_default().expect("run `make artifacts` first");
+    if args.flag("inventory") {
+        println!("PJRT platform: {}", reg.runtime.platform());
+        println!("device-memory budget: {} MiB", reg.device_memory_bytes / (1024 * 1024));
+        println!("{:<24} {:>8}  {:<28} outs", "artifact", "n", "inputs");
+        for e in reg.inventory() {
+            println!("{:<24} {:>8}  {:<28} {}", e.name, e.n, e.in_shapes.join(";"), e.n_outputs);
+        }
+    } else {
+        println!("try: gsyeig runtime --inventory");
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let jobs = args.get_usize("jobs", 6);
+    let workers = args.get_usize("workers", 2);
+    let n = args.get_usize("n", 300);
+    let coord = Coordinator::new(CoordinatorConfig { workers, ..Default::default() });
+    // an SCF-flavoured stream: alternating k-points sharing B per cycle
+    for id in 0..jobs as u64 {
+        let spec = JobSpec {
+            workload: WorkloadSpec::Dft { n, seed: 100 + id / 3 },
+            s: (n * 26 / 1000).max(1),
+            variant: None,
+            b_cache_key: Some(id / 3), // 3 "k-points" share each cycle's B
+        };
+        coord.submit(Job { id, spec }).ok().expect("queue closed");
+    }
+    coord.close();
+    let outcomes = coord.run_to_completion();
+    for o in &outcomes {
+        println!(
+            "job {:>3}: {} ({}) n={} s={} {:.2}s resid={:.1E} gs1-cached={} matvecs={}",
+            o.id,
+            o.variant.name(),
+            o.router_reason,
+            o.n,
+            o.s,
+            o.total_seconds,
+            o.accuracy.residual,
+            o.gs1_cached,
+            o.matvecs
+        );
+    }
+    let m = coord.metrics();
+    println!(
+        "jobs={} p50={:.2}s p95={:.2}s mean={:.2}s gs1-cache-hits={} matvecs={}",
+        m.jobs_done, m.latency_p50, m.latency_p95, m.latency_mean, m.gs1_cache_hits, m.matvecs_total
+    );
+}

@@ -1,0 +1,148 @@
+//! Symmetric band storage (the intermediate of the SBR two-stage path).
+//!
+//! Lower LAPACK band convention: a symmetric matrix with (half-)bandwidth
+//! `w` stores element `(i, j)` with `j <= i <= min(n-1, j+w)` at
+//! `ab[(i - j) + j * (w + 1)]`.  The paper's variant TT reduces the dense
+//! `C` to this form (TT1, routine DSYRDB) and then to tridiagonal (TT2,
+//! DSBRDT); the compact storage is what lets W overwrite `n x w` entries of
+//! A in the paper's storage accounting.
+
+use super::dense::Matrix;
+
+/// Symmetric banded matrix, lower storage, half-bandwidth `w`.
+#[derive(Clone, Debug)]
+pub struct SymBand {
+    n: usize,
+    w: usize,
+    /// `(w + 1) x n` column-major: `ab[(i - j) + j * (w + 1)]` for the
+    /// in-band element `(i, j)`, `i >= j`.
+    ab: Vec<f64>,
+}
+
+impl SymBand {
+    pub fn zeros(n: usize, w: usize) -> Self {
+        assert!(w < n.max(1));
+        SymBand { n, w, ab: vec![0.0; (w + 1) * n] }
+    }
+
+    /// Extract the band of a dense symmetric matrix (entries outside the
+    /// band are ignored — caller asserts they are negligible/zero).
+    pub fn from_dense(a: &Matrix, w: usize) -> Self {
+        let n = a.rows();
+        assert_eq!(n, a.cols());
+        let mut b = SymBand::zeros(n, w);
+        for j in 0..n {
+            for i in j..(j + w + 1).min(n) {
+                b.set(i, j, a[(i, j)]);
+            }
+        }
+        b
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.w
+    }
+
+    /// In-band accessor (i >= j, i - j <= w). Out-of-band reads return 0.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (i, j) = if i >= j { (i, j) } else { (j, i) };
+        if i - j > self.w {
+            0.0
+        } else {
+            self.ab[(i - j) + j * (self.w + 1)]
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        let (i, j) = if i >= j { (i, j) } else { (j, i) };
+        assert!(i - j <= self.w, "({i},{j}) outside bandwidth {}", self.w);
+        self.ab[(i - j) + j * (self.w + 1)] = v;
+    }
+
+    /// Reconstruct the full dense symmetric matrix.
+    pub fn to_dense(&self) -> Matrix {
+        let mut a = Matrix::zeros(self.n, self.n);
+        for j in 0..self.n {
+            for i in j..(j + self.w + 1).min(self.n) {
+                let v = self.get(i, j);
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    /// Max |entry| outside the band of a dense symmetric matrix — used by
+    /// tests to verify the band reduction actually annihilated everything.
+    pub fn off_band_norm(a: &Matrix, w: usize) -> f64 {
+        let n = a.rows();
+        let mut m = 0.0f64;
+        for j in 0..n {
+            for i in (j + w + 1)..n {
+                m = m.max(a[(i, j)].abs());
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(9);
+        let n = 8;
+        let w = 2;
+        // build a random symmetric banded dense matrix
+        let mut a = Matrix::randn_sym(n, &mut rng);
+        for j in 0..n {
+            for i in 0..n {
+                if i.abs_diff(j) > w {
+                    a[(i, j)] = 0.0;
+                }
+            }
+        }
+        let b = SymBand::from_dense(&a, w);
+        assert_eq!(b.to_dense().max_abs_diff(&a), 0.0);
+    }
+
+    #[test]
+    fn get_is_symmetric() {
+        let mut b = SymBand::zeros(5, 1);
+        b.set(2, 1, 3.5);
+        assert_eq!(b.get(2, 1), 3.5);
+        assert_eq!(b.get(1, 2), 3.5);
+    }
+
+    #[test]
+    fn out_of_band_reads_zero() {
+        let b = SymBand::zeros(5, 1);
+        assert_eq!(b.get(4, 0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_band_write_panics() {
+        let mut b = SymBand::zeros(5, 1);
+        b.set(3, 0, 1.0);
+    }
+
+    #[test]
+    fn off_band_norm_detects() {
+        let mut a = Matrix::zeros(4, 4);
+        a[(3, 0)] = 0.25;
+        assert_eq!(SymBand::off_band_norm(&a, 1), 0.25);
+        assert_eq!(SymBand::off_band_norm(&a, 3), 0.0);
+    }
+}

@@ -1,0 +1,286 @@
+//! Column-major dense matrix.
+
+use crate::util::rng::Rng;
+
+/// Column-major dense `rows x cols` matrix of `f64` with `ld == rows`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from a column-major data vector.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// Random i.i.d. standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    /// Random symmetric matrix.
+    pub fn randn_sym(n: usize, rng: &mut Rng) -> Self {
+        let mut m = Matrix::randn(n, n, rng);
+        m.symmetrize();
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Leading dimension (== rows for owned storage).
+    #[inline]
+    pub fn ld(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Column `j` as a slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// `(self + selfᵀ) / 2` in place (square only).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for j in 0..self.cols {
+            for i in 0..j {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    /// Copy the upper triangle onto the lower one (restore full symmetric
+    /// storage after an upper-only algorithm ran).
+    pub fn mirror_upper(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for j in 0..self.cols {
+            for i in 0..j {
+                self[(j, i)] = self[(i, j)];
+            }
+        }
+    }
+
+    /// Zero the strict lower triangle (e.g. after an upper-Cholesky).
+    pub fn zero_lower(&mut self) {
+        for j in 0..self.cols {
+            for i in (j + 1)..self.rows {
+                self[(i, j)] = 0.0;
+            }
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Extract a copy of the `nr x nc` submatrix at `(i0, j0)`.
+    pub fn submatrix(&self, i0: usize, j0: usize, nr: usize, nc: usize) -> Matrix {
+        Matrix::from_fn(nr, nc, |i, j| self[(i0 + i, j0 + j)])
+    }
+
+    /// Naive O(n³) product — the oracle the optimized BLAS is tested against.
+    pub fn matmul_naive(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut c = Matrix::zeros(self.rows, other.cols);
+        for j in 0..other.cols {
+            for p in 0..self.cols {
+                let bpj = other[(p, j)];
+                for i in 0..self.rows {
+                    c[(i, j)] += self[(i, p)] * bpj;
+                }
+            }
+        }
+        c
+    }
+
+    /// y = self * x (naive, oracle use only).
+    pub fn matvec_naive(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let xj = x[j];
+            let col = self.col(j);
+            for i in 0..self.rows {
+                y[i] += col[i] * xj;
+            }
+        }
+        y
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i + j * self.rows]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i + j * self.rows]
+    }
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(8);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > cmax { "..." } else { "" })?;
+        }
+        if self.rows > rmax {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_is_column_major() {
+        let m = Matrix::from_col_major(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(1, 0)], 2.0);
+        assert_eq!(m[(0, 1)], 3.0);
+        assert_eq!(m[(1, 1)], 4.0);
+    }
+
+    #[test]
+    fn identity_times_anything() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(5, 3, &mut rng);
+        let i5 = Matrix::identity(5);
+        assert_eq!(i5.matmul_naive(&a).max_abs_diff(&a), 0.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(4, 7, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let mut rng = Rng::new(3);
+        let mut a = Matrix::randn(6, 6, &mut rng);
+        a.symmetrize();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(a[(i, j)], a[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(5, 5, &mut rng);
+        let x: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let xm = Matrix::from_col_major(5, 1, x.clone());
+        let via_mm = a.matmul_naive(&xm);
+        let via_mv = a.matvec_naive(&x);
+        for i in 0..5 {
+            assert!((via_mm[(i, 0)] - via_mv[i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn submatrix_extracts() {
+        let a = Matrix::from_fn(4, 4, |i, j| (i * 10 + j) as f64);
+        let s = a.submatrix(1, 2, 2, 2);
+        assert_eq!(s[(0, 0)], 12.0);
+        assert_eq!(s[(1, 1)], 23.0);
+    }
+
+    #[test]
+    fn frobenius_of_identity() {
+        assert!((Matrix::identity(9).frobenius_norm() - 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn mirror_upper_copies() {
+        let mut a = Matrix::from_fn(3, 3, |i, j| if i <= j { 1.0 } else { 7.0 });
+        a.mirror_upper();
+        assert_eq!(a[(2, 0)], 1.0);
+        assert_eq!(a[(2, 1)], 1.0);
+    }
+}

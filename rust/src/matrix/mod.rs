@@ -1,0 +1,15 @@
+//! Dense, banded, and tridiagonal matrix storage.
+//!
+//! Everything is **column-major** with the LAPACK leading-dimension
+//! convention: element `(i, j)` of a matrix with leading dimension `lda`
+//! lives at `data[i + j * lda]`.  Submatrices are expressed as slice offsets
+//! (`&a[i0 + j0 * lda..]` with the same `lda`), which is exactly how the
+//! blocked LAPACK algorithms in `crate::lapack` walk their panels.
+
+pub mod band;
+pub mod dense;
+pub mod tridiag;
+
+pub use band::SymBand;
+pub use dense::Matrix;
+pub use tridiag::SymTridiag;

@@ -1,0 +1,192 @@
+//! Symmetric tridiagonal matrix `(d, e)` — the destination of both
+//! reduction paths (TD1, TT1+TT2) and the operand of the tridiagonal
+//! eigensolvers (TD2/TT3) and of the Lanczos projected problem.
+
+use super::dense::Matrix;
+
+/// Symmetric tridiagonal matrix: diagonal `d` (len n), off-diagonal `e`
+/// (len n-1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SymTridiag {
+    pub d: Vec<f64>,
+    pub e: Vec<f64>,
+}
+
+impl SymTridiag {
+    pub fn new(d: Vec<f64>, e: Vec<f64>) -> Self {
+        assert!(d.len() == e.len() + 1 || (d.is_empty() && e.is_empty()));
+        SymTridiag { d, e }
+    }
+
+    pub fn zeros(n: usize) -> Self {
+        SymTridiag { d: vec![0.0; n], e: vec![0.0; n.saturating_sub(1)] }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.d.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n();
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = self.d[i];
+            if i + 1 < n {
+                a[(i + 1, i)] = self.e[i];
+                a[(i, i + 1)] = self.e[i];
+            }
+        }
+        a
+    }
+
+    /// `||T||_1` (= infinity norm by symmetry) — used for convergence and
+    /// splitting thresholds in the eigensolvers.
+    pub fn norm1(&self) -> f64 {
+        let n = self.n();
+        let mut m = 0.0f64;
+        for i in 0..n {
+            let mut s = self.d[i].abs();
+            if i > 0 {
+                s += self.e[i - 1].abs();
+            }
+            if i + 1 < n {
+                s += self.e[i].abs();
+            }
+            m = m.max(s);
+        }
+        m
+    }
+
+    /// y = T x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = self.d[i] * x[i];
+            if i > 0 {
+                s += self.e[i - 1] * x[i - 1];
+            }
+            if i + 1 < n {
+                s += self.e[i] * x[i + 1];
+            }
+            y[i] = s;
+        }
+        y
+    }
+
+    /// Sturm count: number of eigenvalues strictly less than `x`.
+    ///
+    /// Standard LDLᵀ negative-pivot count with the LAPACK-style pivot
+    /// clamping to avoid division by zero; the backbone of the bisection
+    /// eigensolver (`lapack::stebz`).
+    pub fn sturm_count(&self, x: f64) -> usize {
+        let n = self.n();
+        let mut count = 0usize;
+        let mut q = 1.0f64;
+        let pivmin = f64::MIN_POSITIVE * self.norm1().max(1.0);
+        for i in 0..n {
+            let e2 = if i > 0 { self.e[i - 1] * self.e[i - 1] } else { 0.0 };
+            q = self.d[i] - x - if i > 0 { e2 / q } else { 0.0 };
+            if q.abs() < pivmin {
+                q = -pivmin;
+            }
+            if q < 0.0 {
+                count += 1;
+            }
+        }
+        count
+    }
+
+    /// Gershgorin interval containing the whole spectrum.
+    pub fn gershgorin(&self) -> (f64, f64) {
+        let n = self.n();
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for i in 0..n {
+            let mut r = 0.0;
+            if i > 0 {
+                r += self.e[i - 1].abs();
+            }
+            if i + 1 < n {
+                r += self.e[i].abs();
+            }
+            lo = lo.min(self.d[i] - r);
+            hi = hi.max(self.d[i] + r);
+        }
+        if n == 0 {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> SymTridiag {
+        // eigenvalues of this 1D Laplacian: 2 - 2cos(k*pi/(n+1))
+        SymTridiag::new(vec![2.0; 5], vec![-1.0; 4])
+    }
+
+    #[test]
+    fn sturm_counts_whole_spectrum() {
+        let t = toy();
+        let (lo, hi) = t.gershgorin();
+        assert_eq!(t.sturm_count(lo - 1.0), 0);
+        assert_eq!(t.sturm_count(hi + 1.0), 5);
+    }
+
+    #[test]
+    fn sturm_monotone() {
+        let t = toy();
+        let mut prev = 0;
+        for k in 0..50 {
+            let x = -1.0 + 6.0 * k as f64 / 49.0;
+            let c = t.sturm_count(x);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn sturm_matches_known_laplacian_eigenvalues() {
+        let t = toy();
+        let n = 5usize;
+        let eig: Vec<f64> = (1..=n)
+            .map(|k| 2.0 - 2.0 * (k as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos())
+            .collect();
+        for (k, &lam) in eig.iter().enumerate() {
+            assert_eq!(t.sturm_count(lam - 1e-9), k, "below eig {k}");
+            assert_eq!(t.sturm_count(lam + 1e-9), k + 1, "above eig {k}");
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let t = toy();
+        let x = vec![1.0, -2.0, 3.0, 0.5, 1.5];
+        let dense = t.to_dense();
+        let yd = dense.matvec_naive(&x);
+        let yt = t.matvec(&x);
+        for i in 0..5 {
+            assert!((yd[i] - yt[i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn gershgorin_contains_laplacian_spectrum() {
+        let t = toy();
+        let (lo, hi) = t.gershgorin();
+        assert!(lo <= 2.0 - 2.0 * (std::f64::consts::PI / 6.0).cos());
+        assert!(hi >= 2.0 + 2.0 * (std::f64::consts::PI * 5.0 / 6.0).cos().abs());
+    }
+
+    #[test]
+    fn norm1_of_laplacian() {
+        assert_eq!(toy().norm1(), 4.0);
+    }
+}

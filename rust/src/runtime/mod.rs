@@ -1,0 +1,22 @@
+//! PJRT offload runtime — the "modern multi-threaded library" of Section 5.
+//!
+//! At build time, `python/compile/aot.py` lowers the Layer-2 JAX graphs
+//! (with their Layer-1 Pallas kernels inlined) to HLO text; here the Rust
+//! coordinator loads those artifacts, compiles them once on the PJRT CPU
+//! client, and executes them on the request path — Python is never
+//! involved at run time.
+//!
+//! Structurally this is the paper's GPU configuration (Table 5/6): an
+//! on-node accelerator with its own memory space, a host↔device transfer
+//! boundary (host slices ↔ PJRT buffers), a fixed kernel inventory (the
+//! artifact registry — MAGMA/CUBLAS's routine tables), a device-memory
+//! budget that can refuse a problem (KI at DFT size in Table 6), and
+//! native fallback for everything else (the bold-face table entries).
+
+pub mod offload;
+pub mod pjrt;
+pub mod registry;
+
+pub use offload::OffloadKernels;
+pub use pjrt::PjrtRuntime;
+pub use registry::ArtifactRegistry;

@@ -1,0 +1,137 @@
+//! Thin wrapper over the `xla` crate's PJRT client: compile HLO-text
+//! artifacts, move data across the host↔device boundary, execute.
+//!
+//! Layout note: XLA buffers are row-major, our `Matrix` is column-major.
+//! Symmetric matrices upload/download as-is; general matrices (U, Y panels)
+//! are transposed at the boundary — part of the "transfer cost" the paper
+//! includes in its GPU timings.
+
+use anyhow::{Context, Result};
+
+use crate::matrix::Matrix;
+
+/// A compiled artifact ready to execute.
+pub struct CompiledGraph {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of outputs in the result tuple.
+    pub n_outputs: usize,
+    pub name: String,
+}
+
+/// PJRT CPU client + compile/transfer helpers.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text (the AOT interchange format — see `aot.py`) and
+    /// compile it for this client.
+    pub fn compile_hlo_text(&self, path: &std::path::Path, n_outputs: usize) -> Result<CompiledGraph> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        Ok(CompiledGraph {
+            exe,
+            n_outputs,
+            name: path.file_stem().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+
+    /// Host → device: dense matrix, transposed to row-major.
+    pub fn upload_matrix(&self, m: &Matrix) -> Result<xla::PjRtBuffer> {
+        let (r, c) = (m.rows(), m.cols());
+        let mut row_major = vec![0.0f64; r * c];
+        for j in 0..c {
+            let col = m.col(j);
+            for i in 0..r {
+                row_major[i * c + j] = col[i];
+            }
+        }
+        Ok(self.client.buffer_from_host_buffer::<f64>(&row_major, &[r, c], None)?)
+    }
+
+    /// Host → device: symmetric matrix — no transpose needed.
+    pub fn upload_symmetric(&self, m: &Matrix) -> Result<xla::PjRtBuffer> {
+        let n = m.rows();
+        Ok(self.client.buffer_from_host_buffer::<f64>(m.as_slice(), &[n, n], None)?)
+    }
+
+    /// Host → device: vector.
+    pub fn upload_vec(&self, v: &[f64]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f64>(v, &[v.len()], None)?)
+    }
+
+    /// Host → device: raw row-major array with explicit dims.
+    pub fn upload_raw(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f64>(data, dims, None)?)
+    }
+
+    /// Host → device: scalar.
+    pub fn upload_scalar(&self, v: f64) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f64>(&[v], &[], None)?)
+    }
+
+    /// Execute on device buffers; returns the un-tupled output literals.
+    pub fn execute(&self, g: &CompiledGraph, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = g.exe.execute_b(args).with_context(|| format!("executing {}", g.name))?;
+        let lit = outs[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == g.n_outputs,
+            "{}: expected {} outputs, got {}",
+            g.name,
+            g.n_outputs,
+            parts.len()
+        );
+        Ok(parts)
+    }
+
+    /// Device → host: literal holding an (r x c) row-major array, into a
+    /// column-major Matrix.
+    pub fn literal_to_matrix(lit: &xla::Literal, r: usize, c: usize) -> Result<Matrix> {
+        let data = lit.to_vec::<f64>()?;
+        anyhow::ensure!(data.len() == r * c, "size mismatch: {} vs {r}x{c}", data.len());
+        let mut m = Matrix::zeros(r, c);
+        for i in 0..r {
+            for j in 0..c {
+                m[(i, j)] = data[i * c + j];
+            }
+        }
+        Ok(m)
+    }
+
+    /// Device → host: vector literal.
+    pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f64>> {
+        Ok(lit.to_vec::<f64>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let rt = match PjrtRuntime::cpu() {
+            Ok(rt) => rt,
+            Err(e) => panic!("PJRT CPU client unavailable: {e}"),
+        };
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(5, 3, &mut rng);
+        let buf = rt.upload_matrix(&m).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        let back = PjrtRuntime::literal_to_matrix(&lit, 5, 3).unwrap();
+        assert!(back.max_abs_diff(&m) < 1e-15);
+    }
+}

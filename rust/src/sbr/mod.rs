@@ -1,0 +1,20 @@
+//! SBR toolbox substitute: the two-stage reduction of variant TT.
+//!
+//! * [`syrdb`] — dense → band (`Q₁ᵀ C Q₁ = W`, paper op TT1, SBR DSYRDB):
+//!   QR panels below the band + blocked two-sided WY updates, all Level-3.
+//! * [`sbrdt`] — band → tridiagonal (`Q₂ᵀ W Q₂ = T`, paper op TT2, SBR
+//!   DSBRDT): Givens bulge-chasing with the rotations optionally
+//!   accumulated into the explicitly built `Q₁` — the `n³` accumulation
+//!   term the paper identifies as TT's downfall (§2.2, §4.2).
+//!
+//! The paper's blocking-factor guidance (`32 ≤ w ≪ n`, §2.2) is the default
+//! bandwidth here too.
+
+pub mod sbrdt;
+pub mod syrdb;
+
+pub use sbrdt::sbrdt;
+pub use syrdb::syrdb;
+
+/// Default bandwidth, per the paper's experimental guidance.
+pub const DEFAULT_BANDWIDTH: usize = 32;

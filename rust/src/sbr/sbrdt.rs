@@ -1,0 +1,222 @@
+//! Band → tridiagonal reduction by Givens bulge-chasing (SBR DSBRDT,
+//! op TT2; Rutishauser/Schwarz scheme, EISPACK BANDR class).
+//!
+//! The bandwidth is peeled one diagonal at a time (`b → b-1 → … → 1`): for
+//! each column the outermost in-band element is annihilated by a rotation of
+//! its two neighbouring rows/columns, and the resulting bulge is chased off
+//! the bottom of the matrix in strides of `b`.  Rotations touch only an
+//! O(b) window of the matrix, keeping the reduction itself lower-order —
+//! but each rotation applied to the accumulated `Q` costs O(n), which is
+//! the n³-class accumulation term the paper blames for variant TT's loss
+//! (§2.2: "recovering Y … adds 7n³/3 + 2n²s flops").
+
+use crate::matrix::{Matrix, SymTridiag};
+
+/// Givens rotation (c, s) with  [c  s; -s  c]ᵀ [f; g] = [r; 0].
+#[inline]
+fn givens(f: f64, g: f64) -> (f64, f64) {
+    if g == 0.0 {
+        (1.0, 0.0)
+    } else {
+        let r = f.hypot(g);
+        (f / r, g / r)
+    }
+}
+
+/// Apply the rotation to rows p,q (p<q) of symmetric `a`, restricted to the
+/// column window `[lo, hi)`, then the mirror column update — preserving
+/// symmetry exactly by operating on one triangle and mirroring.
+#[inline]
+fn rot_sym(a: &mut Matrix, p: usize, q: usize, c: f64, s: f64, lo: usize, hi: usize) {
+    let n = a.rows();
+    let (lo, hi) = (lo.min(n), hi.min(n));
+    // rows p and q over the window (full dense storage)
+    for j in lo..hi {
+        let apj = a[(p, j)];
+        let aqj = a[(q, j)];
+        a[(p, j)] = c * apj + s * aqj;
+        a[(q, j)] = -s * apj + c * aqj;
+    }
+    // columns p and q over the window
+    for i in lo..hi {
+        let aip = a[(i, p)];
+        let aiq = a[(i, q)];
+        a[(i, p)] = c * aip + s * aiq;
+        a[(i, q)] = -s * aip + c * aiq;
+    }
+}
+
+/// Reduce the symmetric matrix `a` (full storage, bandwidth `w` — entries
+/// outside the band must already be numerically zero, e.g. from [`super::syrdb`])
+/// to tridiagonal form.  Returns `(T, rotations)` and, if `q` is given,
+/// accumulates every rotation into it from the right (`q := q · G`), so that
+/// on exit `qᵀ A_band q = T` composes with the caller's earlier factors.
+pub fn sbrdt(a: &mut Matrix, w: usize, mut q: Option<&mut Matrix>) -> (SymTridiag, usize) {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut nrot = 0usize;
+
+    for b in (2..=w.min(n.saturating_sub(1))).rev() {
+        // eliminate the outermost diagonal (offset b) column by column
+        for col in 0..n.saturating_sub(b) {
+            // the element to annihilate sits at (col + b, col); chase the
+            // bulge down in strides of b.
+            let mut r = col + b; // row of the offending element
+            let mut c0 = col; // its column
+            while r < n {
+                let f = a[(r - 1, c0)];
+                let g = a[(r, c0)];
+                if g == 0.0 {
+                    break;
+                }
+                let (cc, ss) = givens(f, g);
+                // the rotation touches rows/cols r-1, r; in-band window
+                // spans [r-1-b, r+b+1) plus the bulge cell one stride down.
+                let lo = (r - 1).saturating_sub(b + 1);
+                let hi = (r + b + 2).min(n);
+                rot_sym(a, r - 1, r, cc, ss, lo, hi);
+                nrot += 1;
+                if let Some(qm) = &mut q {
+                    // q := q G (rotate columns r-1, r) — O(n) per rotation:
+                    // the accumulation cost the paper's analysis highlights.
+                    let rows = qm.rows();
+                    for i in 0..rows {
+                        let qip = qm[(i, r - 1)];
+                        let qiq = qm[(i, r)];
+                        qm[(i, r - 1)] = cc * qip + ss * qiq;
+                        qm[(i, r)] = -ss * qip + cc * qiq;
+                    }
+                }
+                // mixing rows (r-1, r) extends row r-1 out to column r+b:
+                // the bulge lands at (r + b, r - 1), offset b+1 — the next
+                // element to annihilate, one stride of b further down.
+                c0 = r - 1;
+                r += b;
+            }
+        }
+    }
+
+    // extract the tridiagonal
+    let mut t = SymTridiag::zeros(n);
+    for i in 0..n {
+        t.d[i] = a[(i, i)];
+        if i + 1 < n {
+            t.e[i] = a[(i + 1, i)];
+        }
+    }
+    (t, nrot)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lapack::steqr::dsterf;
+    use crate::lapack::sytrd::dsytd2_lower;
+    use crate::matrix::SymBand;
+    use crate::util::rng::Rng;
+
+    fn banded_sym(n: usize, w: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut a = Matrix::randn_sym(n, &mut rng);
+        for j in 0..n {
+            for i in 0..n {
+                if i.abs_diff(j) > w {
+                    a[(i, j)] = 0.0;
+                }
+            }
+        }
+        a
+    }
+
+    fn spectrum_dense(a: &Matrix) -> Vec<f64> {
+        let n = a.rows();
+        let mut ad = a.clone();
+        let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+        dsytd2_lower(n, ad.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+        let mut t = SymTridiag::new(d, e);
+        dsterf(&mut t).unwrap();
+        t.d
+    }
+
+    #[test]
+    fn tridiagonalizes_band() {
+        let n = 30;
+        let w = 4;
+        let a0 = banded_sym(n, w, 1);
+        let mut a = a0.clone();
+        let (t, nrot) = sbrdt(&mut a, w, None);
+        assert!(nrot > 0);
+        // everything outside the tridiagonal is annihilated
+        assert!(SymBand::off_band_norm(&a, 1) < 1e-10 * a0.frobenius_norm());
+        // spectrum preserved
+        let se = spectrum_dense(&a0);
+        let mut tt = t.clone();
+        dsterf(&mut tt).unwrap();
+        for i in 0..n {
+            assert!((se[i] - tt.d[i]).abs() < 1e-9 * a0.frobenius_norm(), "eig {i}");
+        }
+    }
+
+    #[test]
+    fn accumulated_q_transforms() {
+        let n = 22;
+        let w = 3;
+        let a0 = banded_sym(n, w, 2);
+        let mut a = a0.clone();
+        let mut q = Matrix::identity(n);
+        let (t, _) = sbrdt(&mut a, w, Some(&mut q));
+        // orthogonality
+        let qtq = q.transpose().matmul_naive(&q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(n)) < 1e-11);
+        // Qᵀ A0 Q == T
+        let qaq = q.transpose().matmul_naive(&a0).matmul_naive(&q);
+        assert!(
+            qaq.max_abs_diff(&t.to_dense()) < 1e-10 * a0.frobenius_norm(),
+            "diff {}",
+            qaq.max_abs_diff(&t.to_dense())
+        );
+    }
+
+    #[test]
+    fn already_tridiagonal_is_untouched() {
+        let n = 15;
+        let a0 = banded_sym(n, 1, 3);
+        let mut a = a0.clone();
+        let (t, nrot) = sbrdt(&mut a, 1, None);
+        assert_eq!(nrot, 0);
+        assert!(t.to_dense().max_abs_diff(&a0) < 1e-15);
+    }
+
+    #[test]
+    fn wide_band_nearly_dense() {
+        // w = n-2: nearly dense input still reduces correctly
+        let n = 14;
+        let w = n - 2;
+        let a0 = banded_sym(n, w, 4);
+        let mut a = a0.clone();
+        let mut q = Matrix::identity(n);
+        let (t, _) = sbrdt(&mut a, w, Some(&mut q));
+        let qaq = q.transpose().matmul_naive(&a0).matmul_naive(&q);
+        assert!(qaq.max_abs_diff(&t.to_dense()) < 1e-10 * a0.frobenius_norm());
+    }
+
+    #[test]
+    fn composes_with_syrdb() {
+        use crate::sbr::syrdb;
+        let n = 36;
+        let w = 5;
+        let mut rng = Rng::new(5);
+        let a0 = Matrix::randn_sym(n, &mut rng);
+        let mut a = a0.clone();
+        let mut q1 = Matrix::identity(n);
+        syrdb(&mut a, w, Some(&mut q1));
+        let (t, _) = sbrdt(&mut a, w, Some(&mut q1));
+        // (Q1·Q2)ᵀ A0 (Q1·Q2) == T — the full TT path transform
+        let qaq = q1.transpose().matmul_naive(&a0).matmul_naive(&q1);
+        assert!(
+            qaq.max_abs_diff(&t.to_dense()) < 1e-9 * a0.frobenius_norm(),
+            "TT compose diff {}",
+            qaq.max_abs_diff(&t.to_dense())
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! Accuracy metrics of the paper's Tables 3 and 7:
+//!
+//! * B-orthogonality  `‖I − Xᵀ B X‖_F / ‖B‖_F`
+//! * relative residual `‖A X − B X Λ‖_F / max(‖A‖_F, ‖B‖_F)`
+
+use crate::blas::{dgemm, Trans};
+use crate::matrix::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Accuracy {
+    /// `‖I − XᵀBX‖_F / ‖B‖_F`
+    pub orthogonality: f64,
+    /// `‖AX − BXΛ‖_F / max(‖A‖_F, ‖B‖_F)`
+    pub residual: f64,
+}
+
+impl Accuracy {
+    /// Evaluate both metrics for the computed eigenpairs `(lams, x)` of the
+    /// pencil `(a, b)`.
+    pub fn measure(a: &Matrix, b: &Matrix, lams: &[f64], x: &Matrix) -> Accuracy {
+        let n = a.rows();
+        let s = x.cols();
+        assert_eq!(lams.len(), s);
+
+        // BX (n x s)
+        let mut bx = Matrix::zeros(n, s);
+        dgemm(Trans::N, Trans::N, n, s, n, 1.0, b.as_slice(), n, x.as_slice(), n, 0.0, bx.as_mut_slice(), n);
+
+        // orthogonality: Xᵀ (BX) - I
+        let mut xtbx = Matrix::zeros(s, s);
+        dgemm(Trans::T, Trans::N, s, s, n, 1.0, x.as_slice(), n, bx.as_slice(), n, 0.0, xtbx.as_mut_slice(), s);
+        for i in 0..s {
+            xtbx[(i, i)] -= 1.0;
+        }
+        let orthogonality = xtbx.frobenius_norm() / b.frobenius_norm().max(f64::MIN_POSITIVE);
+
+        // residual: AX - BX Λ
+        let mut ax = Matrix::zeros(n, s);
+        dgemm(Trans::N, Trans::N, n, s, n, 1.0, a.as_slice(), n, x.as_slice(), n, 0.0, ax.as_mut_slice(), n);
+        for j in 0..s {
+            let lam = lams[j];
+            let bxj = bx.col(j).to_vec();
+            let axj = ax.col_mut(j);
+            for i in 0..n {
+                axj[i] -= lam * bxj[i];
+            }
+        }
+        let residual =
+            ax.frobenius_norm() / a.frobenius_norm().max(b.frobenius_norm()).max(f64::MIN_POSITIVE);
+
+        Accuracy { orthogonality, residual }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_eigenpairs_score_near_zero() {
+        // standard problem (B = I): use an exactly diagonal A
+        let n = 12;
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = i as f64 + 1.0;
+        }
+        let b = Matrix::identity(n);
+        let s = 4;
+        let mut x = Matrix::zeros(n, s);
+        for j in 0..s {
+            x[(j, j)] = 1.0;
+        }
+        let lams: Vec<f64> = (0..s).map(|i| i as f64 + 1.0).collect();
+        let acc = Accuracy::measure(&a, &b, &lams, &x);
+        assert!(acc.orthogonality < 1e-15);
+        assert!(acc.residual < 1e-15);
+    }
+
+    #[test]
+    fn wrong_eigenvalues_score_badly() {
+        let n = 10;
+        let a = Matrix::identity(n);
+        let b = Matrix::identity(n);
+        let mut x = Matrix::zeros(n, 2);
+        x[(0, 0)] = 1.0;
+        x[(1, 1)] = 1.0;
+        let acc = Accuracy::measure(&a, &b, &[5.0, 7.0], &x);
+        assert!(acc.residual > 0.5);
+    }
+
+    #[test]
+    fn non_orthogonal_vectors_detected() {
+        let n = 8;
+        let a = Matrix::identity(n);
+        let b = Matrix::identity(n);
+        let mut x = Matrix::zeros(n, 2);
+        x[(0, 0)] = 1.0;
+        x[(0, 1)] = 1.0; // same direction: XᵀX != I
+        let acc = Accuracy::measure(&a, &b, &[1.0, 1.0], &x);
+        assert!(acc.orthogonality > 0.1);
+    }
+
+    #[test]
+    fn scale_invariance_of_residual_metric() {
+        let mut rng = Rng::new(1);
+        let n = 10;
+        let a = Matrix::randn_sym(n, &mut rng);
+        let b = Matrix::identity(n);
+        let x = Matrix::randn(n, 2, &mut rng);
+        let l = vec![1.0, 2.0];
+        let acc1 = Accuracy::measure(&a, &b, &l, &x);
+        // scaling A and Λ by 10 scales the residual and the normalizer alike
+        let mut a10 = a.clone();
+        for v in a10.as_mut_slice() {
+            *v *= 10.0;
+        }
+        let l10 = vec![10.0, 20.0];
+        let acc2 = Accuracy::measure(&a10, &b, &l10, &x);
+        assert!((acc1.residual - acc2.residual).abs() < 0.05 * acc1.residual.max(1e-300));
+    }
+}

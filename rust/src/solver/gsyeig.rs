@@ -1,0 +1,225 @@
+//! Top-level GSYEIG solver API.
+
+use crate::lanczos::thick_restart::Want;
+use crate::matrix::Matrix;
+use crate::util::timer::StageTimer;
+
+use super::backend::{Kernels, NativeKernels};
+use super::{ke, ki, td, tt};
+
+/// The four solver variants of the paper (§2).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Variant {
+    /// Tridiagonal-reduction, direct tridiagonalization.
+    TD,
+    /// Tridiagonal-reduction, two-stage (dense→band→tridiagonal).
+    TT,
+    /// Krylov-subspace, explicit `C`.
+    KE,
+    /// Krylov-subspace, implicit operation on `C`.
+    KI,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 4] = [Variant::TD, Variant::TT, Variant::KE, Variant::KI];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::TD => "TD",
+            Variant::TT => "TT",
+            Variant::KE => "KE",
+            Variant::KI => "KI",
+        }
+    }
+}
+
+/// Which end of the generalized spectrum is wanted.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Which {
+    Smallest,
+    Largest,
+}
+
+impl Which {
+    pub(crate) fn want(&self) -> Want {
+        match self {
+            Which::Smallest => Want::Smallest,
+            Which::Largest => Want::Largest,
+        }
+    }
+}
+
+/// Solver configuration.  Defaults follow the paper's experimental setup:
+/// tol = 0 ("the stopping threshold of DSAUPD was set to the default"),
+/// bandwidth 32 for TT (§2.2), auto Krylov basis `m`.
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    pub variant: Variant,
+    /// Number of wanted eigenpairs `s`.
+    pub s: usize,
+    pub which: Which,
+    /// TT bandwidth `w` (the paper: `32 ≤ w ≪ n`).
+    pub bandwidth: usize,
+    /// Krylov basis size `m` (0 = auto: `max(2s+16, 3s/2+8)`).
+    pub krylov_m: usize,
+    /// Krylov relative tolerance (0 = machine precision, ARPACK default).
+    pub krylov_tol: f64,
+    /// Cap on operator applications for the Krylov variants.
+    pub max_matvecs: usize,
+    /// Use the blocked DSYGST for GS2 instead of the two-TRSM construction.
+    pub gs2_sygst: bool,
+    pub seed: u64,
+}
+
+impl SolverConfig {
+    pub fn new(variant: Variant, s: usize, which: Which) -> Self {
+        SolverConfig {
+            variant,
+            s,
+            which,
+            bandwidth: crate::sbr::DEFAULT_BANDWIDTH,
+            krylov_m: 0,
+            krylov_tol: 0.0,
+            max_matvecs: 500_000,
+            gs2_sygst: false,
+            seed: 0xEE6_1A9,
+        }
+    }
+}
+
+/// A symmetric-definite generalized eigenproblem `A X = B X Λ`
+/// (A symmetric, B SPD; both consumed — the solvers overwrite them, exactly
+/// like the paper's in-place storage accounting in §2).
+#[derive(Clone)]
+pub struct Problem {
+    pub a: Matrix,
+    pub b: Matrix,
+}
+
+impl Problem {
+    pub fn new(a: Matrix, b: Matrix) -> Self {
+        assert_eq!(a.rows(), a.cols());
+        assert_eq!(b.rows(), b.cols());
+        assert_eq!(a.rows(), b.rows());
+        Problem { a, b }
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// The paper's MD trick (§3.1): solve the inverse pencil `(B, A)` for
+    /// the *largest* eigenpairs to accelerate Lanczos convergence; the
+    /// wanted eigenvalues of `(A, B)` are the reciprocals.
+    pub fn inverse_pencil(self) -> Problem {
+        Problem { a: self.b, b: self.a }
+    }
+}
+
+/// Result of a solve: eigenvalues ordered from the wanted end inward
+/// (ascending for `Smallest`, descending for `Largest`), generalized
+/// eigenvectors, per-stage wall-clock, and Krylov statistics.
+pub struct Solution {
+    pub eigenvalues: Vec<f64>,
+    /// Generalized eigenvectors X (n x s), B-orthonormal.
+    pub x: Matrix,
+    pub stages: StageTimer,
+    /// Operator applications (Krylov variants; 0 for TD/TT).
+    pub matvecs: usize,
+    /// Restart cycles (Krylov variants).
+    pub restarts: usize,
+    pub converged: bool,
+    pub backend: &'static str,
+}
+
+impl Solution {
+    pub fn total_seconds(&self) -> f64 {
+        self.stages.total().as_secs_f64()
+    }
+}
+
+/// The solver front-end: a config plus a kernel backend.
+pub struct GsyeigSolver<K: Kernels = NativeKernels> {
+    pub config: SolverConfig,
+    pub kernels: K,
+}
+
+impl GsyeigSolver<NativeKernels> {
+    /// Conventional-library build (the paper's Table 2 configuration).
+    pub fn native(config: SolverConfig) -> Self {
+        let gs2 = config.gs2_sygst;
+        GsyeigSolver { config, kernels: NativeKernels { gs2_sygst: gs2 } }
+    }
+}
+
+impl<K: Kernels> GsyeigSolver<K> {
+    pub fn with_kernels(config: SolverConfig, kernels: K) -> Self {
+        GsyeigSolver { config, kernels }
+    }
+
+    /// Solve the problem with the configured variant.
+    pub fn solve(&self, problem: Problem) -> Solution {
+        assert!(problem.n() >= 2, "problem too small");
+        assert!(self.config.s >= 1 && self.config.s <= problem.n());
+        match self.config.variant {
+            Variant::TD => td::solve(&self.config, &self.kernels, problem),
+            Variant::TT => tt::solve(&self.config, &self.kernels, problem),
+            Variant::KE => ke::solve(&self.config, &self.kernels, problem),
+            Variant::KI => ki::solve(&self.config, &self.kernels, problem),
+        }
+    }
+}
+
+/// Shared GS1 stage: Cholesky of B (returns U, timed).
+pub(crate) fn stage_gs1<K: Kernels>(
+    kernels: &K,
+    timer: &mut StageTimer,
+    mut b: Matrix,
+) -> Matrix {
+    timer.time("GS1", || {
+        kernels.cholesky(&mut b).expect("B must be positive definite");
+    });
+    b
+}
+
+/// Shared subset-extraction helper: pick the wanted `s` indices of an
+/// ascending spectrum of length n.
+pub(crate) fn wanted_indices(n: usize, s: usize, which: Which) -> (usize, usize, bool) {
+    match which {
+        // il..=iu ascending; `false` = no reversal
+        Which::Smallest => (0, s - 1, false),
+        // take the top s, then reverse so index 0 is the largest
+        Which::Largest => (n - s, n - 1, true),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wanted_indices_smallest() {
+        assert_eq!(wanted_indices(100, 5, Which::Smallest), (0, 4, false));
+    }
+
+    #[test]
+    fn wanted_indices_largest() {
+        assert_eq!(wanted_indices(100, 5, Which::Largest), (95, 99, true));
+    }
+
+    #[test]
+    fn inverse_pencil_swaps() {
+        let a = Matrix::identity(3);
+        let mut b = Matrix::identity(3);
+        b[(0, 0)] = 2.0;
+        let p = Problem::new(a, b).inverse_pencil();
+        assert_eq!(p.a[(0, 0)], 2.0);
+        assert_eq!(p.b[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn variant_names() {
+        let names: Vec<_> = Variant::ALL.iter().map(|v| v.name()).collect();
+        assert_eq!(names, vec!["TD", "TT", "KE", "KI"]);
+    }
+}

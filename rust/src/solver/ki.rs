@@ -1,0 +1,118 @@
+//! Variant KI: Krylov-subspace iteration operating on `C` implicitly
+//! (§2.3).
+//!
+//! GS1 only — `C` is never formed (no GS2!), saving the 2n³ construction at
+//! the price of doubling the per-iteration cost: each operator application
+//! is `U⁻ᵀ(A(U⁻¹w))` = two `dtrsv` (KI1/KI3) + one `dsymv` (KI2), 4n²
+//! flops.  The paper's Table 2 shows this trade losing badly when the
+//! iteration count is high (DFT: 4 261 iterations → KI1+KI3 dominate).
+
+use crate::lanczos::thick_restart::{lanczos_solve, LanczosConfig};
+use crate::util::timer::StageTimer;
+
+use super::backend::Kernels;
+use super::gsyeig::{stage_gs1, Problem, Solution, SolverConfig};
+
+pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> Solution {
+    let mut timer = StageTimer::new();
+    let Problem { a, b } = problem;
+
+    // GS1 only: KI skips GS2 entirely
+    let u = stage_gs1(kernels, &mut timer, b);
+
+    // Krylov iteration with the implicit operator; backends may refuse
+    // (device-memory budget — Table 6's KI@DFT case) and fall back native.
+    let native = crate::solver::backend::NativeKernels::default();
+    let op = match kernels.implicit_op(&a, &u) {
+        Some(op) => op,
+        None => {
+            timer.add("fallback_native_op", std::time::Duration::ZERO);
+            native.implicit_op(&a, &u).unwrap()
+        }
+    };
+    let mut lcfg = LanczosConfig::new(cfg.s, cfg.which.want());
+    lcfg.m = cfg.krylov_m;
+    lcfg.tol = cfg.krylov_tol;
+    lcfg.max_matvecs = cfg.max_matvecs;
+    lcfg.seed = cfg.seed;
+    let res = lanczos_solve(op.as_ref(), &lcfg);
+    op.drain_stages(&mut timer);
+    timer.add(
+        "KI4",
+        res.stage_times.get("lanczos_recurrence").unwrap_or_default()
+            + res.stage_times.get("lanczos_restart").unwrap_or_default(),
+    );
+    timer.add("KI5", res.stage_times.get("ritz_assembly").unwrap_or_default());
+
+    // BT1
+    let mut x = res.vectors;
+    timer.time("BT1", || kernels.back_transform(&u, &mut x));
+
+    Solution {
+        eigenvalues: res.eigenvalues,
+        x,
+        stages: timer,
+        matvecs: res.matvecs,
+        restarts: res.restarts,
+        converged: res.converged,
+        backend: kernels.name(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::accuracy::Accuracy;
+    use crate::solver::gsyeig::{GsyeigSolver, Variant, Which};
+    use crate::workloads::spectra::generate_problem;
+
+    #[test]
+    fn ki_recovers_known_eigenvalues() {
+        let n = 80;
+        let lams: Vec<f64> = (0..n).map(|i| 2.0 + 3.0 * i as f64).collect();
+        let (p, truth) = generate_problem(n, &lams, 60.0, 31);
+        let cfg = SolverConfig::new(Variant::KI, 4, Which::Largest);
+        let sol = GsyeigSolver::native(cfg).solve(p.clone());
+        assert!(sol.converged);
+        for i in 0..4 {
+            assert!(
+                (sol.eigenvalues[i] - truth[n - 1 - i]).abs() < 1e-6,
+                "eig {i}: {} vs {}",
+                sol.eigenvalues[i],
+                truth[n - 1 - i]
+            );
+        }
+        let acc = Accuracy::measure(&p.a, &p.b, &sol.eigenvalues, &sol.x);
+        assert!(acc.residual < 1e-8, "residual {}", acc.residual);
+    }
+
+    #[test]
+    fn ki_has_no_gs2_stage() {
+        let n = 40;
+        let lams: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let (p, _) = generate_problem(n, &lams, 10.0, 32);
+        let sol = GsyeigSolver::native(SolverConfig::new(Variant::KI, 3, Which::Largest)).solve(p);
+        assert!(sol.stages.get("GS2").is_none(), "KI must not build C");
+        for k in ["GS1", "KI1", "KI2", "KI3", "KI4", "KI5", "BT1"] {
+            assert!(sol.stages.get(k).is_some(), "{k} missing");
+        }
+    }
+
+    #[test]
+    fn ki_and_ke_agree() {
+        let n = 60;
+        let lams: Vec<f64> = (0..n).map(|i| (i as f64 - 10.0) * 1.7).collect();
+        let (p, _) = generate_problem(n, &lams, 25.0, 33);
+        let ki = GsyeigSolver::native(SolverConfig::new(Variant::KI, 4, Which::Smallest))
+            .solve(p.clone());
+        let ke = GsyeigSolver::native(SolverConfig::new(Variant::KE, 4, Which::Smallest)).solve(p);
+        for i in 0..4 {
+            assert!(
+                (ki.eigenvalues[i] - ke.eigenvalues[i]).abs() < 1e-6,
+                "eig {i}: {} vs {}",
+                ki.eigenvalues[i],
+                ke.eigenvalues[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The four GSYEIG solver variants of the paper, behind one API.
+//!
+//! | Variant | Pipeline (paper Table 1 keys) |
+//! |---|---|
+//! | **TD** | GS1 → GS2 → TD1 (sytrd) → TD2 (stebz+stein) → TD3 (ormtr) → BT1 |
+//! | **TT** | GS1 → GS2 → TT1 (syrdb+Q₁) → TT2 (sbrdt+acc) → TT3 → TT4 → BT1 |
+//! | **KE** | GS1 → GS2 → KE1/KE2 (Lanczos on explicit C) → KE3 → BT1 |
+//! | **KI** | GS1 → KI1–KI4 (Lanczos, C implicit) → KI5 → BT1 |
+//!
+//! Every stage is wall-clock-timed under its paper key, so the experiment
+//! drivers regenerate Tables 2/6 rows directly from [`Solution::stages`].
+
+pub mod accuracy;
+pub mod backend;
+pub mod gsyeig;
+pub mod ke;
+pub mod ki;
+pub mod td;
+pub mod tt;
+
+pub use accuracy::Accuracy;
+pub use backend::{Kernels, NativeKernels};
+pub use gsyeig::{GsyeigSolver, Problem, Solution, SolverConfig, Variant, Which};

@@ -1,0 +1,147 @@
+//! Variant TD: tridiagonal-reduction with direct tridiagonalization (§2.2).
+//!
+//! GS1 (Cholesky) → GS2 (explicit C) → TD1 (DSYTRD, 4n³/3 flops, half
+//! BLAS-2) → TD2 (subset tridiagonal eigensolver, the MR³ slot) → TD3
+//! (DORMTR back-transform, 2n²s) → BT1 (X := U⁻¹Y).
+//!
+//! Q is never formed: reflectors are applied from their compact storage —
+//! the storage economy §2.2 credits this variant with.
+
+use crate::blas::Trans;
+use crate::lapack::ormtr::dormtr_lower;
+use crate::lapack::stebz::dstebz;
+use crate::lapack::stein::dstein;
+use crate::lapack::sytrd::dsytrd_lower;
+use crate::matrix::{Matrix, SymTridiag};
+use crate::util::timer::StageTimer;
+
+use super::backend::Kernels;
+use super::gsyeig::{stage_gs1, wanted_indices, Problem, Solution, SolverConfig};
+
+pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> Solution {
+    let n = problem.n();
+    let s = cfg.s;
+    let mut timer = StageTimer::new();
+    let Problem { a, b } = problem;
+
+    // GS1: B = UᵀU
+    let u = stage_gs1(kernels, &mut timer, b);
+    // GS2: C := U⁻ᵀ A U⁻¹ (overwrites A)
+    let mut c = a;
+    timer.time("GS2", || kernels.build_c(&mut c, &u));
+
+    // TD1: QᵀCQ = T
+    let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+    timer.time("TD1", || {
+        dsytrd_lower(n, c.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+    });
+
+    // TD2: subset eigenpairs of T (bisection + inverse iteration — the MR³
+    // slot; O(ns)-class, negligible vs the reductions, as Table 2 shows).
+    let t = SymTridiag::new(d, e);
+    let (il, iu, reversed) = wanted_indices(n, s, cfg.which);
+    let (lams, z) = timer.time("TD2", || {
+        let lams = dstebz(&t, il, iu);
+        let z = dstein(&t, &lams);
+        (lams, z)
+    });
+
+    // TD3: Y := QZ
+    let mut y = z;
+    timer.time("TD3", || {
+        dormtr_lower(Trans::N, n, s, c.as_slice(), n, &tau, y.as_mut_slice(), n);
+    });
+
+    // BT1: X := U⁻¹Y
+    timer.time("BT1", || kernels.back_transform(&u, &mut y));
+
+    // order from the wanted end
+    let (eigenvalues, x) = order_from_wanted_end(lams, y, reversed);
+
+    Solution {
+        eigenvalues,
+        x,
+        stages: timer,
+        matvecs: 0,
+        restarts: 0,
+        converged: true,
+        backend: kernels.name(),
+    }
+}
+
+/// Reverse (eigenvalues, columns) when the wanted end is the top.
+pub(crate) fn order_from_wanted_end(
+    lams: Vec<f64>,
+    x: Matrix,
+    reversed: bool,
+) -> (Vec<f64>, Matrix) {
+    if !reversed {
+        return (lams, x);
+    }
+    let s = lams.len();
+    let n = x.rows();
+    let mut lr = lams;
+    lr.reverse();
+    let mut xr = Matrix::zeros(n, s);
+    for j in 0..s {
+        xr.col_mut(j).copy_from_slice(x.col(s - 1 - j));
+    }
+    (lr, xr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::accuracy::Accuracy;
+    use crate::solver::gsyeig::{GsyeigSolver, Variant, Which};
+    use crate::workloads::spectra::generate_problem;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn td_recovers_known_smallest_eigenvalues() {
+        let n = 80;
+        let lams: Vec<f64> = (0..n).map(|i| 0.5 + i as f64).collect();
+        let (p, truth) = generate_problem(n, &lams, 100.0, 7);
+        let cfg = SolverConfig::new(Variant::TD, 5, Which::Smallest);
+        let sol = GsyeigSolver::native(cfg).solve(p.clone());
+        for i in 0..5 {
+            assert!(
+                (sol.eigenvalues[i] - truth[i]).abs() < 1e-7,
+                "eig {i}: {} vs {}",
+                sol.eigenvalues[i],
+                truth[i]
+            );
+        }
+        let acc = Accuracy::measure(&p.a, &p.b, &sol.eigenvalues, &sol.x);
+        assert!(acc.residual < 1e-11, "residual {}", acc.residual);
+        assert!(acc.orthogonality < 1e-11, "orth {}", acc.orthogonality);
+    }
+
+    #[test]
+    fn td_largest_end() {
+        let n = 60;
+        let lams: Vec<f64> = (0..n).map(|i| (i as f64).mul_add(0.3, -4.0)).collect();
+        let (p, truth) = generate_problem(n, &lams, 50.0, 8);
+        let cfg = SolverConfig::new(Variant::TD, 4, Which::Largest);
+        let sol = GsyeigSolver::native(cfg).solve(p);
+        for i in 0..4 {
+            assert!(
+                (sol.eigenvalues[i] - truth[n - 1 - i]).abs() < 1e-7,
+                "eig {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn td_stage_keys_present() {
+        let mut rng = Rng::new(1);
+        let n = 40;
+        let lams: Vec<f64> = (0..n).map(|i| 1.0 + i as f64 + rng.uniform()).collect();
+        let (p, _) = generate_problem(n, &lams, 10.0, 9);
+        let sol = GsyeigSolver::native(SolverConfig::new(Variant::TD, 3, Which::Smallest)).solve(p);
+        for k in ["GS1", "GS2", "TD1", "TD2", "TD3", "BT1"] {
+            assert!(sol.stages.get(k).is_some(), "{k} missing");
+        }
+        assert_eq!(sol.matvecs, 0);
+    }
+}

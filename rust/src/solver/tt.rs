@@ -1,0 +1,142 @@
+//! Variant TT: tridiagonal-reduction with two-stage tridiagonalization
+//! (§2.2) — the SBR path.
+//!
+//! GS1 → GS2 → TT1 (dense→band, all BLAS-3, plus the explicit 4n³/3-flop
+//! construction of Q₁) → TT2 (band→tridiagonal bulge chasing, rotations
+//! accumulated into Q₁ — the n³-class term that sinks this variant in the
+//! paper's Table 2) → TT3 (subset tridiagonal eigensolver) → TT4
+//! (Y := (Q₁Q₂)Z, 2n²s) → BT1.
+
+use crate::blas::{dgemm, Trans};
+use crate::lapack::stebz::dstebz;
+use crate::lapack::stein::dstein;
+use crate::matrix::Matrix;
+use crate::sbr::{sbrdt, syrdb};
+use crate::util::timer::StageTimer;
+
+use super::backend::Kernels;
+use super::gsyeig::{stage_gs1, wanted_indices, Problem, Solution, SolverConfig};
+use super::td::order_from_wanted_end;
+
+pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> Solution {
+    let n = problem.n();
+    let s = cfg.s;
+    let w = cfg.bandwidth.clamp(1, n.saturating_sub(2).max(1));
+    let mut timer = StageTimer::new();
+    let Problem { a, b } = problem;
+
+    // GS1 + GS2
+    let u = stage_gs1(kernels, &mut timer, b);
+    let mut c = a;
+    timer.time("GS2", || kernels.build_c(&mut c, &u));
+
+    // TT1: Q₁ᵀ C Q₁ = W (band) with Q₁ explicitly accumulated
+    let mut q1 = Matrix::identity(n);
+    timer.time("TT1", || syrdb(&mut c, w, Some(&mut q1)));
+
+    // TT2: Q₂ᵀ W Q₂ = T, rotations folded into Q₁ (the paper's "accumulated
+    // from the right into the previously constructed Q₁")
+    let (t, _nrot) = timer.time("TT2", || sbrdt(&mut c, w, Some(&mut q1)));
+
+    // TT3: subset eigenpairs of T
+    let (il, iu, reversed) = wanted_indices(n, s, cfg.which);
+    let (lams, z) = timer.time("TT3", || {
+        let lams = dstebz(&t, il, iu);
+        let z = dstein(&t, &lams);
+        (lams, z)
+    });
+
+    // TT4: Y := (Q₁Q₂) Z  (Q₁ already holds the product)
+    let mut y = Matrix::zeros(n, s);
+    timer.time("TT4", || {
+        dgemm(
+            Trans::N,
+            Trans::N,
+            n,
+            s,
+            n,
+            1.0,
+            q1.as_slice(),
+            n,
+            z.as_slice(),
+            n,
+            0.0,
+            y.as_mut_slice(),
+            n,
+        );
+    });
+
+    // BT1
+    timer.time("BT1", || kernels.back_transform(&u, &mut y));
+
+    let (eigenvalues, x) = order_from_wanted_end(lams, y, reversed);
+    Solution {
+        eigenvalues,
+        x,
+        stages: timer,
+        matvecs: 0,
+        restarts: 0,
+        converged: true,
+        backend: kernels.name(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::accuracy::Accuracy;
+    use crate::solver::gsyeig::{GsyeigSolver, Variant, Which};
+    use crate::workloads::spectra::generate_problem;
+
+    #[test]
+    fn tt_recovers_known_eigenvalues() {
+        let n = 70;
+        let lams: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7) - 3.0).collect();
+        let (p, truth) = generate_problem(n, &lams, 80.0, 11);
+        let mut cfg = SolverConfig::new(Variant::TT, 5, Which::Smallest);
+        cfg.bandwidth = 6;
+        let sol = GsyeigSolver::native(cfg).solve(p.clone());
+        for i in 0..5 {
+            assert!(
+                (sol.eigenvalues[i] - truth[i]).abs() < 1e-7,
+                "eig {i}: {} vs {}",
+                sol.eigenvalues[i],
+                truth[i]
+            );
+        }
+        let acc = Accuracy::measure(&p.a, &p.b, &sol.eigenvalues, &sol.x);
+        assert!(acc.residual < 1e-10, "residual {}", acc.residual);
+        assert!(acc.orthogonality < 1e-10, "orth {}", acc.orthogonality);
+    }
+
+    #[test]
+    fn tt_matches_td() {
+        let n = 50;
+        let lams: Vec<f64> = (0..n).map(|i| (i * i) as f64 * 0.01 + 1.0).collect();
+        let (p, _) = generate_problem(n, &lams, 30.0, 12);
+        let mut cfg_tt = SolverConfig::new(Variant::TT, 4, Which::Largest);
+        cfg_tt.bandwidth = 8;
+        let sol_tt = GsyeigSolver::native(cfg_tt).solve(p.clone());
+        let sol_td =
+            GsyeigSolver::native(SolverConfig::new(Variant::TD, 4, Which::Largest)).solve(p);
+        for i in 0..4 {
+            assert!(
+                (sol_tt.eigenvalues[i] - sol_td.eigenvalues[i]).abs() < 1e-8,
+                "eig {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn tt_stage_keys_present() {
+        let n = 40;
+        let lams: Vec<f64> = (0..n).map(|i| i as f64 + 2.0).collect();
+        let (p, _) = generate_problem(n, &lams, 10.0, 13);
+        let mut cfg = SolverConfig::new(Variant::TT, 3, Which::Smallest);
+        cfg.bandwidth = 4;
+        let sol = GsyeigSolver::native(cfg).solve(p);
+        for k in ["GS1", "GS2", "TT1", "TT2", "TT3", "TT4", "BT1"] {
+            assert!(sol.stages.get(k).is_some(), "{k} missing");
+        }
+    }
+}

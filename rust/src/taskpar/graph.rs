@@ -1,0 +1,192 @@
+//! Task DAG with automatic dependency inference from read/write sets —
+//! the SuperMatrix/PLASMA dataflow analysis.
+//!
+//! Tasks are registered in program order with the tile ids they read and
+//! write; the builder wires RAW, WAR and WAW edges.  Executing the DAG in
+//! any dependency-respecting order then yields the same result as the
+//! sequential program — the property the property-based tests check.
+
+use std::collections::HashMap;
+
+pub type TaskFn = Box<dyn FnOnce() + Send>;
+
+pub struct TaskNode {
+    pub run: TaskFn,
+    pub label: String,
+    /// Indices of tasks that must complete first.
+    pub deps: Vec<usize>,
+    /// Tasks unblocked by this one (filled by the builder).
+    pub dependents: Vec<usize>,
+}
+
+/// DAG statistics — the parallelism analysis reported in the Table 4 bench.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DagStats {
+    pub tasks: usize,
+    /// Length (in tasks) of the longest dependency chain.
+    pub critical_path: usize,
+    /// Max number of tasks simultaneously ready under greedy level order —
+    /// an upper bound on exploitable parallelism (cores that could be busy).
+    pub max_width: usize,
+    /// tasks / critical_path: average available parallelism.
+    pub avg_parallelism: f64,
+}
+
+#[derive(Default)]
+struct ResourceState {
+    last_writer: Option<usize>,
+    readers_since_write: Vec<usize>,
+}
+
+/// Builder + container for a task DAG.
+#[derive(Default)]
+pub struct TaskGraph {
+    pub nodes: Vec<TaskNode>,
+    resources: HashMap<usize, ResourceState>,
+}
+
+impl TaskGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a task with its resource access sets (tile ids).  Returns
+    /// the task index.
+    pub fn add(
+        &mut self,
+        label: impl Into<String>,
+        reads: &[usize],
+        writes: &[usize],
+        run: impl FnOnce() + Send + 'static,
+    ) -> usize {
+        let id = self.nodes.len();
+        let mut deps: Vec<usize> = Vec::new();
+        for &r in reads {
+            let st = self.resources.entry(r).or_default();
+            if let Some(w) = st.last_writer {
+                deps.push(w); // RAW
+            }
+            st.readers_since_write.push(id);
+        }
+        for &w in writes {
+            let st = self.resources.entry(w).or_default();
+            if let Some(prev) = st.last_writer {
+                deps.push(prev); // WAW
+            }
+            for &rd in &st.readers_since_write {
+                if rd != id {
+                    deps.push(rd); // WAR
+                }
+            }
+            st.last_writer = Some(id);
+            st.readers_since_write.clear();
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        self.nodes.push(TaskNode { run: Box::new(run), label: label.into(), deps: deps.clone(), dependents: vec![] });
+        for d in deps {
+            self.nodes[d].dependents.push(id);
+        }
+        id
+    }
+
+    /// Compute the DAG statistics (before execution).
+    pub fn stats(&self) -> DagStats {
+        let n = self.nodes.len();
+        // level = 1 + max(level of deps): computable in id order because
+        // deps always point backwards.
+        let mut level = vec![0usize; n];
+        let mut width: HashMap<usize, usize> = HashMap::new();
+        for i in 0..n {
+            let l = self.nodes[i].deps.iter().map(|&d| level[d]).max().map_or(1, |m| m + 1);
+            level[i] = l;
+            *width.entry(l).or_default() += 1;
+        }
+        let critical_path = level.iter().copied().max().unwrap_or(0);
+        let max_width = width.values().copied().max().unwrap_or(0);
+        DagStats {
+            tasks: n,
+            critical_path,
+            max_width,
+            avg_parallelism: if critical_path > 0 { n as f64 / critical_path as f64 } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn raw_dependency_wired() {
+        let mut g = TaskGraph::new();
+        let a = g.add("w", &[], &[1], || {});
+        let b = g.add("r", &[1], &[], || {});
+        assert_eq!(g.nodes[b].deps, vec![a]);
+    }
+
+    #[test]
+    fn war_dependency_wired() {
+        let mut g = TaskGraph::new();
+        let r = g.add("r", &[1], &[], || {});
+        let w = g.add("w", &[], &[1], || {});
+        assert_eq!(g.nodes[w].deps, vec![r]);
+    }
+
+    #[test]
+    fn waw_dependency_wired() {
+        let mut g = TaskGraph::new();
+        let w1 = g.add("w1", &[], &[1], || {});
+        let w2 = g.add("w2", &[], &[1], || {});
+        assert_eq!(g.nodes[w2].deps, vec![w1]);
+    }
+
+    #[test]
+    fn independent_tasks_have_no_deps() {
+        let mut g = TaskGraph::new();
+        g.add("a", &[1], &[2], || {});
+        let b = g.add("b", &[3], &[4], || {});
+        assert!(g.nodes[b].deps.is_empty());
+    }
+
+    #[test]
+    fn stats_chain_vs_fan() {
+        // pure chain
+        let mut g = TaskGraph::new();
+        g.add("a", &[], &[1], || {});
+        g.add("b", &[], &[1], || {});
+        g.add("c", &[], &[1], || {});
+        let s = g.stats();
+        assert_eq!(s.critical_path, 3);
+        assert_eq!(s.max_width, 1);
+        // fan
+        let mut g2 = TaskGraph::new();
+        let root = g2.add("root", &[], &[0], || {});
+        for k in 1..=5 {
+            g2.add(format!("leaf{k}"), &[0], &[k], || {});
+        }
+        let s2 = g2.stats();
+        assert_eq!(s2.critical_path, 2);
+        assert_eq!(s2.max_width, 5);
+        let _ = root;
+    }
+
+    #[test]
+    fn execution_respects_order() {
+        // counter must observe writer-before-reader
+        let flag = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        let f1 = Arc::clone(&flag);
+        g.add("w", &[], &[7], move || f1.store(42, Ordering::SeqCst));
+        let f2 = Arc::clone(&flag);
+        let observed = Arc::new(AtomicUsize::new(0));
+        let o2 = Arc::clone(&observed);
+        g.add("r", &[7], &[], move || {
+            o2.store(f2.load(Ordering::SeqCst), Ordering::SeqCst)
+        });
+        crate::taskpar::scheduler::run_graph(g, 3);
+        assert_eq!(observed.load(Ordering::SeqCst), 42);
+    }
+}

@@ -1,0 +1,21 @@
+//! Tiled task-parallel runtime — the PLASMA / libflame+SuperMatrix analog
+//! of the paper's Section 5.1 (Table 4).
+//!
+//! Matrices are partitioned into square tiles; each kernel invocation on a
+//! tile becomes a task node in a dependency DAG derived from the tasks'
+//! read/write sets (RAW, WAR, WAW — the SuperMatrix analysis); a worker
+//! pool executes ready tasks.  On this single-core testbed the runtime
+//! cannot show wall-clock speedups (DESIGN.md §Hardware-Adaptation); the
+//! Table 4 bench therefore also reports the *DAG statistics* — task count,
+//! available width, critical-path length — that quantify the parallelism
+//! the paper's 8-core machine exploits.
+
+pub mod graph;
+pub mod ops;
+pub mod scheduler;
+pub mod tile;
+
+pub use graph::{DagStats, TaskGraph};
+pub use ops::{tiled_potrf, tiled_sygst_trsm};
+pub use scheduler::run_graph;
+pub use tile::TiledMatrix;

@@ -1,0 +1,250 @@
+//! Tiled algorithms on the task runtime: the two stages the task-parallel
+//! libraries actually provide in the paper (Table 4) — GS1 (Cholesky,
+//! PLASMA_DPOTRF / FLA_CHOL) and GS2 (FLA_SYGST; here the two-TRSM
+//! construction, tiled).
+
+use crate::blas::{dgemm, dsyrk, dtrsm, Diag, Side, Trans, Uplo};
+use crate::lapack::potrf::dpotrf_upper;
+use crate::matrix::Matrix;
+
+use super::graph::{DagStats, TaskGraph};
+use super::scheduler::run_graph;
+use super::tile::TiledMatrix;
+
+/// Tiled upper Cholesky: on return the upper tiles of `a` hold U.
+/// Returns the DAG stats (for the Table 4 parallelism report).
+pub fn tiled_potrf(a: &TiledMatrix, workers: usize) -> DagStats {
+    let nt = a.nt;
+    let mut g = TaskGraph::new();
+    for k in 0..nt {
+        // POTRF on the diagonal tile
+        let tkk = a.tile(k, k);
+        g.add(
+            format!("POTRF({k})"),
+            &[],
+            &[a.tile_id(k, k)],
+            move || {
+                let mut t = tkk.lock().unwrap();
+                let n = t.rows();
+                let ld = n;
+                dpotrf_upper(n, t.as_mut_slice(), ld).expect("tile SPD");
+                t.zero_lower();
+            },
+        );
+        // row of TRSMs
+        for j in (k + 1)..nt {
+            let tkk = a.tile(k, k);
+            let tkj = a.tile(k, j);
+            g.add(
+                format!("TRSM({k},{j})"),
+                &[a.tile_id(k, k)],
+                &[a.tile_id(k, j)],
+                move || {
+                    let u = tkk.lock().unwrap();
+                    let mut b = tkj.lock().unwrap();
+                    let m = u.rows();
+                    let n2 = b.cols();
+                    let (us, ld) = (u.as_slice(), m);
+                    dtrsm(Side::Left, Uplo::Upper, Trans::T, Diag::NonUnit, m, n2, 1.0, us, ld, b.as_mut_slice(), m);
+                },
+            );
+        }
+        // trailing updates
+        for i in (k + 1)..nt {
+            for j in i..nt {
+                let tki = a.tile(k, i);
+                let tkj = a.tile(k, j);
+                let tij = a.tile(i, j);
+                let diag = i == j;
+                g.add(
+                    format!("UPD({k},{i},{j})"),
+                    &[a.tile_id(k, i), a.tile_id(k, j)],
+                    &[a.tile_id(i, j)],
+                    move || {
+                        let pi = tki.lock().unwrap();
+                        let mut c = tij.lock().unwrap();
+                        let kdim = pi.rows();
+                        let m = pi.cols();
+                        if diag {
+                            dsyrk(Uplo::Upper, Trans::T, m, kdim, -1.0, pi.as_slice(), kdim, 1.0, c.as_mut_slice(), m);
+                        } else {
+                            let pj = tkj.lock().unwrap();
+                            let n2 = pj.cols();
+                            dgemm(Trans::T, Trans::N, m, n2, kdim, -1.0, pi.as_slice(), kdim, pj.as_slice(), kdim, 1.0, c.as_mut_slice(), m);
+                        }
+                    },
+                );
+            }
+        }
+    }
+    let stats = g.stats();
+    run_graph(g, workers);
+    stats
+}
+
+/// Tiled GS2 (two-TRSM construction): `a := U⁻ᵀ a U⁻¹` with `u` holding the
+/// Cholesky factor in its upper tiles.  `a` is full symmetric storage.
+pub fn tiled_sygst_trsm(a: &TiledMatrix, u: &TiledMatrix, workers: usize) -> DagStats {
+    assert_eq!(a.nt, u.nt);
+    let nt = a.nt;
+    // resource key spaces: A tiles [0, nt²), U tiles [nt², 2nt²)
+    let aid = |i: usize, j: usize| i * nt + j;
+    let uid = |i: usize, j: usize| nt * nt + i * nt + j;
+
+    let mut g = TaskGraph::new();
+    // ---- step 1: A := U⁻ᵀ A (row-block forward substitution)
+    for i in 0..nt {
+        for j in 0..nt {
+            for p in 0..i {
+                let upi = u.tile(p, i);
+                let apj = a.tile(p, j);
+                let aij = a.tile(i, j);
+                g.add(
+                    format!("L-GEMM({i},{j},{p})"),
+                    &[uid(p, i), aid(p, j)],
+                    &[aid(i, j)],
+                    move || {
+                        let up = upi.lock().unwrap();
+                        let ap = apj.lock().unwrap();
+                        let mut c = aij.lock().unwrap();
+                        let kdim = up.rows();
+                        let m = up.cols();
+                        let n2 = ap.cols();
+                        dgemm(Trans::T, Trans::N, m, n2, kdim, -1.0, up.as_slice(), kdim, ap.as_slice(), kdim, 1.0, c.as_mut_slice(), m);
+                    },
+                );
+            }
+            let uii = u.tile(i, i);
+            let aij = a.tile(i, j);
+            g.add(
+                format!("L-TRSM({i},{j})"),
+                &[uid(i, i)],
+                &[aid(i, j)],
+                move || {
+                    let ut = uii.lock().unwrap();
+                    let mut c = aij.lock().unwrap();
+                    let m = ut.rows();
+                    let n2 = c.cols();
+                    dtrsm(Side::Left, Uplo::Upper, Trans::T, Diag::NonUnit, m, n2, 1.0, ut.as_slice(), m, c.as_mut_slice(), m);
+                },
+            );
+        }
+    }
+    // ---- step 2: A := A U⁻¹ (column-block forward substitution)
+    for j in 0..nt {
+        for i in 0..nt {
+            for p in 0..j {
+                let upj = u.tile(p, j);
+                let aip = a.tile(i, p);
+                let aij = a.tile(i, j);
+                g.add(
+                    format!("R-GEMM({i},{j},{p})"),
+                    &[uid(p, j), aid(i, p)],
+                    &[aid(i, j)],
+                    move || {
+                        let up = upj.lock().unwrap();
+                        let ap = aip.lock().unwrap();
+                        let mut c = aij.lock().unwrap();
+                        let m = ap.rows();
+                        let kdim = ap.cols();
+                        let n2 = up.cols();
+                        dgemm(Trans::N, Trans::N, m, n2, kdim, -1.0, ap.as_slice(), m, up.as_slice(), kdim, 1.0, c.as_mut_slice(), m);
+                    },
+                );
+            }
+            let ujj = u.tile(j, j);
+            let aij = a.tile(i, j);
+            g.add(
+                format!("R-TRSM({i},{j})"),
+                &[uid(j, j)],
+                &[aid(i, j)],
+                move || {
+                    let ut = ujj.lock().unwrap();
+                    let mut c = aij.lock().unwrap();
+                    let m = c.rows();
+                    let n2 = ut.rows();
+                    dtrsm(Side::Right, Uplo::Upper, Trans::N, Diag::NonUnit, m, n2, 1.0, ut.as_slice(), n2, c.as_mut_slice(), m);
+                },
+            );
+        }
+    }
+    let stats = g.stats();
+    run_graph(g, workers);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lapack::sygst::sygst_trsm;
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, rng: &mut Rng) -> Matrix {
+        let g = Matrix::randn(n, n, rng);
+        let mut b = g.transpose().matmul_naive(&g);
+        for i in 0..n {
+            b[(i, i)] += n as f64;
+        }
+        b
+    }
+
+    #[test]
+    fn tiled_potrf_matches_dense() {
+        let mut rng = Rng::new(1);
+        for (n, nb) in [(48, 16), (50, 16), (30, 7)] {
+            let b = spd(n, &mut rng);
+            let t = TiledMatrix::from_dense(&b, nb);
+            let stats = tiled_potrf(&t, 3);
+            assert!(stats.tasks > 0);
+            let mut got = t.to_dense();
+            got.zero_lower();
+            let mut expect = b.clone();
+            dpotrf_upper(n, expect.as_mut_slice(), n).unwrap();
+            expect.zero_lower();
+            assert!(
+                got.max_abs_diff(&expect) < 1e-9 * b.frobenius_norm(),
+                "n={n} nb={nb}: {}",
+                got.max_abs_diff(&expect)
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_sygst_matches_dense() {
+        let mut rng = Rng::new(2);
+        let n = 45;
+        let nb = 12;
+        let a = Matrix::randn_sym(n, &mut rng);
+        let b = spd(n, &mut rng);
+        let mut u = b.clone();
+        dpotrf_upper(n, u.as_mut_slice(), n).unwrap();
+        u.zero_lower();
+        let mut expect = a.clone();
+        sygst_trsm(n, expect.as_mut_slice(), n, u.as_slice(), n);
+
+        let at = TiledMatrix::from_dense(&a, nb);
+        let ut = TiledMatrix::from_dense(&u, nb);
+        let stats = tiled_sygst_trsm(&at, &ut, 3);
+        assert!(stats.tasks > 0);
+        let mut got = at.to_dense();
+        got.symmetrize(); // dense path symmetrizes too
+        assert!(
+            got.max_abs_diff(&expect) < 1e-8 * expect.frobenius_norm().max(1.0),
+            "diff {}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn dag_width_grows_with_tiles() {
+        let mut rng = Rng::new(3);
+        let b = spd(64, &mut rng);
+        let t2 = TiledMatrix::from_dense(&b, 32); // 2x2 tiles
+        let s2 = tiled_potrf(&t2, 2);
+        let b2 = spd(64, &mut rng);
+        let t8 = TiledMatrix::from_dense(&b2, 8); // 8x8 tiles
+        let s8 = tiled_potrf(&t8, 2);
+        assert!(s8.max_width > s2.max_width, "{} vs {}", s8.max_width, s2.max_width);
+        assert!(s8.avg_parallelism > s2.avg_parallelism);
+    }
+}

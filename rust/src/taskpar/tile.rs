@@ -1,0 +1,95 @@
+//! Square-tiled matrix storage for the task-parallel runtime.
+
+use std::sync::{Arc, Mutex};
+
+use crate::matrix::Matrix;
+
+/// An n x n matrix split into nt x nt tiles of size up to nb (edge tiles
+/// are ragged).  Tiles are individually lockable so independent tasks can
+//  run concurrently.
+#[derive(Clone)]
+pub struct TiledMatrix {
+    pub n: usize,
+    pub nb: usize,
+    pub nt: usize,
+    /// Row-major grid of tiles; tile (i, j) covers rows `i*nb ..` and
+    /// columns `j*nb ..`.
+    tiles: Vec<Arc<Mutex<Matrix>>>,
+}
+
+impl TiledMatrix {
+    pub fn from_dense(a: &Matrix, nb: usize) -> Self {
+        let n = a.rows();
+        assert_eq!(n, a.cols());
+        assert!(nb >= 1);
+        let nt = n.div_ceil(nb);
+        let mut tiles = Vec::with_capacity(nt * nt);
+        for ti in 0..nt {
+            for tj in 0..nt {
+                let r0 = ti * nb;
+                let c0 = tj * nb;
+                let nr = nb.min(n - r0);
+                let nc = nb.min(n - c0);
+                tiles.push(Arc::new(Mutex::new(a.submatrix(r0, c0, nr, nc))));
+            }
+        }
+        TiledMatrix { n, nb, nt, tiles }
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut a = Matrix::zeros(self.n, self.n);
+        for ti in 0..self.nt {
+            for tj in 0..self.nt {
+                let t = self.tile(ti, tj);
+                let t = t.lock().unwrap();
+                let r0 = ti * self.nb;
+                let c0 = tj * self.nb;
+                for j in 0..t.cols() {
+                    for i in 0..t.rows() {
+                        a[(r0 + i, c0 + j)] = t[(i, j)];
+                    }
+                }
+            }
+        }
+        a
+    }
+
+    #[inline]
+    pub fn tile(&self, i: usize, j: usize) -> Arc<Mutex<Matrix>> {
+        Arc::clone(&self.tiles[i * self.nt + j])
+    }
+
+    /// Linear tile id, used as the resource key for dependency analysis.
+    #[inline]
+    pub fn tile_id(&self, i: usize, j: usize) -> usize {
+        i * self.nt + j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(10, 10, &mut rng);
+        for nb in [1, 3, 4, 10, 16] {
+            let t = TiledMatrix::from_dense(&a, nb);
+            assert_eq!(t.to_dense().max_abs_diff(&a), 0.0, "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn ragged_edges() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(7, 7, &mut rng);
+        let t = TiledMatrix::from_dense(&a, 3);
+        assert_eq!(t.nt, 3);
+        let corner = t.tile(2, 2);
+        let c = corner.lock().unwrap();
+        assert_eq!((c.rows(), c.cols()), (1, 1));
+        assert_eq!(c[(0, 0)], a[(6, 6)]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Miniature property-based testing harness (the offline crate set has no
+//! proptest — DESIGN.md substitution #6).
+//!
+//! A property is a closure over a seeded [`crate::util::rng::Rng`]; the
+//! runner executes it across many derived seeds and reports the first
+//! failing seed, which reproduces deterministically:
+//!
+//! ```
+//! use gsyeig::testing::check_property;
+//! check_property("dot is symmetric", 64, |rng| {
+//!     let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+//!     let y: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+//!     let a = gsyeig::blas::ddot(&x, &y);
+//!     let b = gsyeig::blas::ddot(&y, &x);
+//!     if (a - b).abs() > 1e-12 { return Err(format!("{a} vs {b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `prop` across `cases` derived seeds; panic with the failing seed on
+/// the first counterexample.
+pub fn check_property(
+    name: &str,
+    cases: usize,
+    mut prop: impl FnMut(&mut Rng) -> Result<(), String>,
+) {
+    // honour an env override to reproduce one failing case quickly
+    if let Ok(seed) = std::env::var("GSYEIG_PROP_SEED") {
+        if let Ok(seed) = seed.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!("property '{name}' failed at seed {seed}: {msg}");
+            }
+            return;
+        }
+    }
+    for case in 0..cases {
+        let seed = 0x9E37_79B9u64.wrapping_mul(case as u64 + 1) ^ 0xA5A5_5A5A;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}; rerun with \
+                 GSYEIG_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Random problem dimension in `[lo, hi]` (inclusive).
+pub fn dim_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_property("trivial", 10, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check_property("fails", 10, |rng| {
+            if rng.uniform() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn dim_in_bounds() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..100 {
+            let d = dim_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&d));
+        }
+    }
+}

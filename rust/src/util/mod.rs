@@ -1,0 +1,5 @@
+//! Shared infrastructure: PRNG, timers, table formatting.
+
+pub mod rng;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,171 @@
+//! Paper-style ASCII table formatting for the experiment drivers and
+//! benches.  Produces the row/column layout of Tables 2–7 plus CSV export
+//! for the figure sweeps (Figures 1 and 2).
+
+/// A simple right-aligned table with a header row.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Format seconds like the paper: `-` for stages a variant does not run.
+    pub fn sec(v: Option<f64>) -> String {
+        match v {
+            Some(x) => format!("{x:.2}"),
+            None => "-".to_string(),
+        }
+    }
+
+    /// Scientific notation like the accuracy tables (e.g. `6.68E-21`).
+    pub fn sci(v: f64) -> String {
+        format!("{v:.2E}")
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |out: &mut String| {
+            for wi in &w {
+                out.push('+');
+                out.push_str(&"-".repeat(wi + 2));
+            }
+            out.push_str("+\n");
+        };
+        line(&mut out);
+        for (i, h) in self.headers.iter().enumerate() {
+            out.push_str(&format!("| {:>width$} ", h, width = w[i]));
+        }
+        out.push_str("|\n");
+        line(&mut out);
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                out.push_str(&format!("| {:>width$} ", c, width = w[i]));
+            }
+            out.push_str("|\n");
+        }
+        line(&mut out);
+        out
+    }
+
+    /// CSV export (for the figure sweeps / external plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Minimal ASCII line plot for the figure benches (time vs s series).
+pub fn ascii_plot(title: &str, xs: &[f64], series: &[(&str, Vec<f64>)]) -> String {
+    const W: usize = 64;
+    const H: usize = 16;
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let xmin = xs.first().copied().unwrap_or(0.0);
+    let xmax = xs.last().copied().unwrap_or(1.0).max(xmin + 1e-12);
+    let mut grid = vec![vec![' '; W]; H];
+    let marks = ['*', 'o', '+', 'x', '#'];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (x, y) in xs.iter().zip(ys) {
+            let cx = (((x - xmin) / (xmax - xmin)) * (W - 1) as f64).round() as usize;
+            let cy = ((y / ymax) * (H - 1) as f64).round() as usize;
+            let row = H - 1 - cy.min(H - 1);
+            grid[row][cx.min(W - 1)] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("-- {title} (ymax={ymax:.2}s) --\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(W));
+    out.push('\n');
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{} {}", marks[i % marks.len()], n))
+        .collect();
+    out.push_str(&format!("x: s in [{xmin}, {xmax}]   {}\n", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_rows() {
+        let mut t = Table::new("t", &["Key", "TD", "KE"]);
+        t.row(vec!["GS1".into(), "6.60".into(), "6.60".into()]);
+        t.row(vec!["Tot.".into(), "103.24".into(), "39.88".into()]);
+        let s = t.render();
+        assert!(s.contains("GS1") && s.contains("103.24") && s.contains("Tot."));
+    }
+
+    #[test]
+    fn sec_formats_missing_as_dash() {
+        assert_eq!(Table::sec(None), "-");
+        assert_eq!(Table::sec(Some(1.2345)), "1.23");
+    }
+
+    #[test]
+    fn sci_matches_paper_style() {
+        let s = Table::sci(6.68e-21);
+        assert!(s.starts_with("6.68E-21"), "{s}");
+    }
+
+    #[test]
+    fn csv_roundtrip_columns() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn plot_contains_legend() {
+        let p = ascii_plot("fig", &[1.0, 2.0], &[("TD", vec![0.5, 0.6])]);
+        assert!(p.contains("TD"));
+    }
+}

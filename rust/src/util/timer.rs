@@ -1,0 +1,111 @@
+//! Stage timing: the per-stage wall-clock accounting behind every table in
+//! the paper (GS1, GS2, TD1–TD3, TT1–TT4, KE1–KE3, KI1–KI5, BT1).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates named stage durations; stages may be entered repeatedly
+/// (e.g. KE1 once per Lanczos iteration) and their durations add up, exactly
+/// like the per-stage rows of Tables 2/6.
+#[derive(Default, Debug, Clone)]
+pub struct StageTimer {
+    acc: BTreeMap<&'static str, Duration>,
+    order: Vec<&'static str>,
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` under stage `name`.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    /// Add an externally measured duration to a stage.
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        if !self.acc.contains_key(name) {
+            self.order.push(name);
+        }
+        *self.acc.entry(name).or_default() += d;
+    }
+
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.acc.get(name).copied()
+    }
+
+    pub fn seconds(&self, name: &str) -> f64 {
+        self.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Stages in first-entered order with their totals.
+    pub fn stages(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.order.iter().map(move |k| (*k, self.acc[k]))
+    }
+
+    pub fn total(&self) -> Duration {
+        self.acc.values().sum()
+    }
+
+    /// Merge another timer into this one (used when sub-solvers report up).
+    pub fn merge(&mut self, other: &StageTimer) {
+        for (k, d) in other.stages() {
+            self.add(k, d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_repeated_stages() {
+        let mut t = StageTimer::new();
+        t.add("KE1", Duration::from_millis(5));
+        t.add("KE1", Duration::from_millis(7));
+        assert_eq!(t.get("KE1"), Some(Duration::from_millis(12)));
+    }
+
+    #[test]
+    fn preserves_first_entered_order() {
+        let mut t = StageTimer::new();
+        t.add("GS1", Duration::from_millis(1));
+        t.add("GS2", Duration::from_millis(1));
+        t.add("GS1", Duration::from_millis(1));
+        let names: Vec<_> = t.stages().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["GS1", "GS2"]);
+    }
+
+    #[test]
+    fn total_sums_all() {
+        let mut t = StageTimer::new();
+        t.add("a", Duration::from_millis(3));
+        t.add("b", Duration::from_millis(4));
+        assert_eq!(t.total(), Duration::from_millis(7));
+    }
+
+    #[test]
+    fn time_measures_something() {
+        let mut t = StageTimer::new();
+        let x = t.time("work", || (0..1000).sum::<u64>());
+        assert_eq!(x, 499500);
+        assert!(t.get("work").is_some());
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = StageTimer::new();
+        a.add("GS1", Duration::from_millis(2));
+        let mut b = StageTimer::new();
+        b.add("GS1", Duration::from_millis(3));
+        b.add("BT1", Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.get("GS1"), Some(Duration::from_millis(5)));
+        assert_eq!(a.get("BT1"), Some(Duration::from_millis(1)));
+    }
+}

@@ -1,0 +1,20 @@
+//! Synthetic workload generators standing in for the paper's two
+//! applications (DESIGN.md substitutions #1 and #2):
+//!
+//! * [`md`] — molecular-dynamics NMA (iMod, n = 9 997 in the paper):
+//!   both A and B SPD, ~1 % smallest eigenpairs wanted, solved through the
+//!   inverse pencil `(B, A)` for the largest end (§3.1's trick).
+//! * [`dft`] — density-functional-theory (FLEUR GeSb₂Te₄, n = 17 243):
+//!   indefinite A, lowest ~2.6 % of the spectrum wanted.
+//!
+//! Both are built by [`spectra::generate_problem`], which manufactures a
+//! pencil with an *exactly known* generalized spectrum, so every experiment
+//! can be validated against ground truth — something the paper's real data
+//! files cannot offer.
+
+pub mod dft;
+pub mod md;
+pub mod spectra;
+
+pub use dft::DftWorkload;
+pub use md::MdWorkload;

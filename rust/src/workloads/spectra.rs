@@ -1,0 +1,156 @@
+//! Pencil manufacturing with exactly known generalized spectra.
+//!
+//! Construction: pick the wanted spectrum `Λ`, a random orthogonal `Q`
+//! (Householder product), and a random SPD `B` with controlled condition
+//! number; factor `B = UᵀU`.  Then
+//!
+//! ```text
+//!   M := Q Λ Qᵀ            (symmetric with spectrum Λ)
+//!   A := Uᵀ M U            (congruence)
+//! ```
+//!
+//! gives `A X = B X Λ` with eigenvalues exactly `Λ` and eigenvectors
+//! `X = U⁻¹Q` — because `U⁻ᵀ A U⁻¹ = M`.  The solvers never see the
+//! factors; they receive plain dense `(A, B)`.
+
+use crate::blas::{dgemm, Trans};
+use crate::lapack::householder::{dgeqr2, dlarf_left};
+use crate::matrix::Matrix;
+use crate::solver::gsyeig::Problem;
+use crate::util::rng::Rng;
+
+/// Random orthogonal matrix from the QR of a Gaussian matrix (Haar-ish;
+/// reflectors applied to the identity).
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Matrix {
+    let mut g = Matrix::randn(n, n, rng);
+    let mut tau = vec![0.0; n];
+    dgeqr2(n, n, g.as_mut_slice(), n, &mut tau);
+    let mut q = Matrix::identity(n);
+    for k in (0..n).rev() {
+        let m = n - k;
+        let mut v = vec![0.0; m];
+        v[0] = 1.0;
+        for i in 1..m {
+            v[i] = g[(k + i, k)];
+        }
+        let off = k + k * n;
+        dlarf_left(m, m, &v, tau[k], &mut q.as_mut_slice()[off..], n);
+    }
+    q
+}
+
+/// Symmetric matrix with the given spectrum: `Q diag(lams) Qᵀ`.
+pub fn sym_with_spectrum(lams: &[f64], rng: &mut Rng) -> Matrix {
+    let n = lams.len();
+    let q = random_orthogonal(n, rng);
+    // Q Λ (scale columns), then (QΛ) Qᵀ
+    let mut ql = q.clone();
+    for j in 0..n {
+        let l = lams[j];
+        for v in ql.col_mut(j) {
+            *v *= l;
+        }
+    }
+    let mut m = Matrix::zeros(n, n);
+    dgemm(Trans::N, Trans::T, n, n, n, 1.0, ql.as_slice(), n, q.as_slice(), n, 0.0, m.as_mut_slice(), n);
+    m.symmetrize();
+    m
+}
+
+/// Random SPD matrix with log-spaced spectrum in `[1, cond]`.
+pub fn spd_with_condition(n: usize, cond: f64, rng: &mut Rng) -> Matrix {
+    let lams: Vec<f64> = (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1).max(1) as f64;
+            cond.powf(t)
+        })
+        .collect();
+    sym_with_spectrum(&lams, rng)
+}
+
+/// Build `(A, B)` with generalized spectrum exactly `lams` (B has condition
+/// `cond_b`).  Returns the problem and the **ascending** true spectrum.
+pub fn generate_problem(
+    n: usize,
+    lams: &[f64],
+    cond_b: f64,
+    seed: u64,
+) -> (Problem, Vec<f64>) {
+    assert_eq!(lams.len(), n);
+    let mut rng = Rng::new(seed);
+    let b = spd_with_condition(n, cond_b, &mut rng);
+    let mut u = b.clone();
+    crate::lapack::potrf::dpotrf_upper(n, u.as_mut_slice(), n).expect("B SPD by construction");
+    u.zero_lower();
+    let m = sym_with_spectrum(lams, &mut rng);
+    // A = Uᵀ M U
+    let mut um = Matrix::zeros(n, n);
+    dgemm(Trans::T, Trans::N, n, n, n, 1.0, u.as_slice(), n, m.as_slice(), n, 0.0, um.as_mut_slice(), n);
+    let mut a = Matrix::zeros(n, n);
+    dgemm(Trans::N, Trans::N, n, n, n, 1.0, um.as_slice(), n, u.as_slice(), n, 0.0, a.as_mut_slice(), n);
+    a.symmetrize();
+    let mut truth = lams.to_vec();
+    truth.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    (Problem::new(a, b), truth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lapack::syev::dsyev;
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Rng::new(1);
+        let q = random_orthogonal(20, &mut rng);
+        let qtq = q.transpose().matmul_naive(&q);
+        assert!(qtq.max_abs_diff(&Matrix::identity(20)) < 1e-12);
+    }
+
+    #[test]
+    fn sym_with_spectrum_has_it() {
+        let mut rng = Rng::new(2);
+        let lams: Vec<f64> = (0..15).map(|i| i as f64 - 7.0).collect();
+        let m = sym_with_spectrum(&lams, &mut rng);
+        let (w, _) = dsyev(&m).unwrap();
+        for i in 0..15 {
+            assert!((w[i] - lams[i]).abs() < 1e-10, "eig {i}");
+        }
+    }
+
+    #[test]
+    fn spd_condition_controlled() {
+        let mut rng = Rng::new(3);
+        let b = spd_with_condition(12, 100.0, &mut rng);
+        let (w, _) = dsyev(&b).unwrap();
+        assert!(w[0] > 0.0);
+        let cond = w[11] / w[0];
+        assert!((cond - 100.0).abs() < 1.0, "cond {cond}");
+    }
+
+    #[test]
+    fn generated_problem_has_prescribed_generalized_spectrum() {
+        let n = 30;
+        let lams: Vec<f64> = (0..n).map(|i| 0.1 * i as f64 + 0.5).collect();
+        let (p, truth) = generate_problem(n, &lams, 50.0, 4);
+        // verify with an independent method: eig of U^{-T} A U^{-1}
+        let mut u = p.b.clone();
+        crate::lapack::potrf::dpotrf_upper(n, u.as_mut_slice(), n).unwrap();
+        u.zero_lower();
+        let mut c = p.a.clone();
+        crate::lapack::sygst::sygst_trsm(n, c.as_mut_slice(), n, u.as_slice(), n);
+        let (w, _) = dsyev(&c).unwrap();
+        for i in 0..n {
+            assert!((w[i] - truth[i]).abs() < 1e-8, "eig {i}: {} vs {}", w[i], truth[i]);
+        }
+    }
+
+    #[test]
+    fn b_is_positive_definite() {
+        let n = 25;
+        let lams: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let (p, _) = generate_problem(n, &lams, 1000.0, 5);
+        let mut u = p.b.clone();
+        assert!(crate::lapack::potrf::dpotrf_upper(n, u.as_mut_slice(), n).is_ok());
+    }
+}

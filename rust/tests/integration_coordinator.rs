@@ -1,0 +1,120 @@
+//! Integration tests for the Layer-3 coordinator: job streams, router
+//! policy, factor cache, and backpressure under concurrency.
+
+use gsyeig::coordinator::{
+    select_variant, Coordinator, CoordinatorConfig, Job, JobSpec, RouterConfig, WorkloadSpec,
+};
+use gsyeig::solver::gsyeig::{Variant, Which};
+use gsyeig::workloads::spectra::generate_problem;
+
+fn inline_spec(n: usize, s: usize, seed: u64) -> JobSpec {
+    let lams: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+    let (p, _) = generate_problem(n, &lams, 20.0, seed);
+    JobSpec {
+        workload: WorkloadSpec::Inline { a: p.a, b: p.b, which: Which::Smallest },
+        s,
+        variant: None,
+        b_cache_key: None,
+    }
+}
+
+#[test]
+fn mixed_job_stream_completes_in_order() {
+    let coord = Coordinator::new(CoordinatorConfig { workers: 3, ..Default::default() });
+    let mut expected = Vec::new();
+    for id in 0..8u64 {
+        let n = 60 + 10 * (id as usize % 3);
+        coord.submit(Job { id, spec: inline_spec(n, 2, id) }).ok().unwrap();
+        expected.push(id);
+    }
+    coord.close();
+    let out = coord.run_to_completion();
+    let ids: Vec<u64> = out.iter().map(|o| o.id).collect();
+    assert_eq!(ids, expected, "outcomes must be sorted by id");
+    assert!(out.iter().all(|o| o.converged));
+    assert_eq!(coord.metrics().jobs_done, 8);
+}
+
+#[test]
+fn workload_specs_realize_and_solve() {
+    let coord = Coordinator::new(CoordinatorConfig::default());
+    coord
+        .submit(Job { id: 0, spec: JobSpec { workload: WorkloadSpec::Md { n: 90, seed: 1 }, s: 2, variant: None, b_cache_key: None } })
+        .ok()
+        .unwrap();
+    coord
+        .submit(Job { id: 1, spec: JobSpec { workload: WorkloadSpec::Dft { n: 100, seed: 2 }, s: 3, variant: None, b_cache_key: None } })
+        .ok()
+        .unwrap();
+    coord.close();
+    let out = coord.run_to_completion();
+    assert_eq!(out.len(), 2);
+    for o in &out {
+        assert!(o.accuracy.residual < 1e-8, "job {}: {}", o.id, o.accuracy.residual);
+    }
+}
+
+#[test]
+fn router_policy_matches_paper_rules() {
+    let cfg = RouterConfig::default();
+    // the paper's headline: few percent of the spectrum -> Krylov
+    assert_eq!(select_variant(1724, 45, &cfg).0, Variant::KE);
+    // large fraction -> reduction
+    assert_eq!(select_variant(500, 200, &cfg).0, Variant::TD);
+    // memory-starved -> implicit Krylov
+    let tiny = RouterConfig { host_memory_bytes: 1 << 20, ..cfg };
+    assert_eq!(select_variant(400, 4, &tiny).0, Variant::KI);
+}
+
+#[test]
+fn scf_style_stream_hits_factor_cache() {
+    let n = 70;
+    let lams: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+    let (p, _) = generate_problem(n, &lams, 20.0, 7);
+    let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+    for id in 0..4u64 {
+        let spec = JobSpec {
+            workload: WorkloadSpec::Inline { a: p.a.clone(), b: p.b.clone(), which: Which::Smallest },
+            s: 2,
+            variant: Some(Variant::TD),
+            b_cache_key: Some(1),
+        };
+        coord.submit(Job { id, spec }).ok().unwrap();
+    }
+    coord.close();
+    let out = coord.run_to_completion();
+    let hits = out.iter().filter(|o| o.gs1_cached).count();
+    assert_eq!(hits, 3);
+    assert_eq!(coord.metrics().gs1_cache_hits, 3);
+}
+
+#[test]
+fn queue_backpressure_bounds_depth() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        queue_capacity: 2,
+        ..Default::default()
+    });
+    // producer thread pushes more jobs than capacity while workers drain
+    std::thread::scope(|scope| {
+        let c = &coord;
+        scope.spawn(move || {
+            for id in 0..6u64 {
+                c.submit(Job { id, spec: inline_spec(50, 2, id) }).ok().unwrap();
+            }
+            c.close();
+        });
+        let out = c.run_to_completion();
+        assert_eq!(out.len(), 6);
+    });
+}
+
+#[test]
+fn outcome_vectors_are_b_orthonormal() {
+    let coord = Coordinator::new(CoordinatorConfig::default());
+    coord.submit(Job { id: 0, spec: inline_spec(80, 3, 9) }).ok().unwrap();
+    coord.close();
+    let out = coord.run_to_completion();
+    assert_eq!(out[0].x.cols(), 3);
+    assert!(out[0].accuracy.orthogonality < 1e-10);
+}

@@ -1,0 +1,115 @@
+//! Integration tests for the PJRT offload runtime: full solves through the
+//! AOT artifacts at an artifact size, fallback behaviour, and the Table 5
+//! inventory.  Requires `make artifacts` (the manifest ships sizes 256,
+//! 1000 and 1724 by default).
+
+use std::rc::Rc;
+
+use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
+use gsyeig::solver::accuracy::Accuracy;
+use gsyeig::solver::backend::Kernels;
+use gsyeig::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant, Which};
+use gsyeig::workloads::spectra::generate_problem;
+
+const N_ART: usize = 256; // an artifact size in the default manifest
+
+fn registry() -> Rc<ArtifactRegistry> {
+    Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"))
+}
+
+#[test]
+fn inventory_covers_required_ops() {
+    let reg = registry();
+    for op in [
+        "cholesky",
+        "build_c",
+        "matvec_explicit",
+        "matvec_implicit",
+        "back_transform",
+        "gemm",
+    ] {
+        assert!(reg.has(op, N_ART), "artifact {op}@{N_ART} missing");
+    }
+    assert!(reg.inventory().len() >= 6);
+}
+
+#[test]
+fn offloaded_solve_matches_truth_all_variants() {
+    let lams: Vec<f64> = (0..N_ART).map(|i| i as f64 + 1.0).collect();
+    let (p, truth) = generate_problem(N_ART, &lams, 50.0, 21);
+    let reg = registry();
+    for variant in Variant::ALL {
+        let kernels = OffloadKernels::new(Rc::clone(&reg));
+        let cfg = SolverConfig::new(variant, 3, Which::Smallest);
+        let sol = GsyeigSolver::with_kernels(cfg, kernels).solve(p.clone());
+        for i in 0..3 {
+            assert!(
+                (sol.eigenvalues[i] - truth[i]).abs() < 1e-6,
+                "{} eig {i}: {} vs {}",
+                variant.name(),
+                sol.eigenvalues[i],
+                truth[i]
+            );
+        }
+        let acc = Accuracy::measure(&p.a, &p.b, &sol.eigenvalues, &sol.x);
+        assert!(acc.residual < 1e-8, "{} residual {}", variant.name(), acc.residual);
+        assert_eq!(sol.backend, "offload");
+    }
+}
+
+#[test]
+fn non_artifact_size_falls_back_and_still_solves() {
+    let n = 123;
+    let lams: Vec<f64> = (0..n).map(|i| i as f64 + 2.0).collect();
+    let (p, truth) = generate_problem(n, &lams, 20.0, 22);
+    let kernels = OffloadKernels::new(registry());
+    let cfg = SolverConfig::new(Variant::KE, 2, Which::Smallest);
+    let solver = GsyeigSolver::with_kernels(cfg, kernels);
+    let sol = solver.solve(p);
+    for i in 0..2 {
+        assert!((sol.eigenvalues[i] - truth[i]).abs() < 1e-6, "eig {i}");
+    }
+    // every offloadable stage must have fallen back
+    let fb = solver.kernels.native_fallback_stages();
+    for stage in ["GS1", "GS2", "KE1", "BT1"] {
+        assert!(fb.contains(&stage), "{stage} not reported as fallback: {fb:?}");
+    }
+}
+
+#[test]
+fn device_memory_budget_forces_ki_fallback_at_scale() {
+    // Table 6's KI@DFT case, shrunk: budget that fits one but not two
+    // operands at N_ART
+    let mut reg = ArtifactRegistry::load_default().unwrap();
+    reg.set_device_memory(N_ART * N_ART * 8 + 4096);
+    let reg = Rc::new(reg);
+    let lams: Vec<f64> = (0..N_ART).map(|i| i as f64 + 1.0).collect();
+    let (p, truth) = generate_problem(N_ART, &lams, 50.0, 23);
+    let kernels = OffloadKernels::new(reg);
+    let cfg = SolverConfig::new(Variant::KI, 2, Which::Smallest);
+    let solver = GsyeigSolver::with_kernels(cfg, kernels);
+    let sol = solver.solve(p);
+    // correct result via the native fallback operator
+    for i in 0..2 {
+        assert!((sol.eigenvalues[i] - truth[i]).abs() < 1e-6);
+    }
+    assert!(
+        solver.kernels.native_fallback_stages().contains(&"KI123"),
+        "KI must be reported as fallen back"
+    );
+    // the native operator reports the split KI1/KI2/KI3 stages
+    assert!(sol.stages.get("KI1").is_some());
+}
+
+#[test]
+fn offload_and_native_accuracy_comparable() {
+    // Table 7 vs Table 3: no qualitative accuracy difference
+    let lams: Vec<f64> = (0..N_ART).map(|i| (i as f64) * 0.7 - 10.0).collect();
+    let (p, _) = generate_problem(N_ART, &lams, 80.0, 24);
+    let cfg = SolverConfig::new(Variant::KE, 4, Which::Smallest);
+    let nat = GsyeigSolver::native(cfg.clone()).solve(p.clone());
+    let off = GsyeigSolver::with_kernels(cfg, OffloadKernels::new(registry())).solve(p.clone());
+    let acc_n = Accuracy::measure(&p.a, &p.b, &nat.eigenvalues, &nat.x);
+    let acc_o = Accuracy::measure(&p.a, &p.b, &off.eigenvalues, &off.x);
+    assert!(acc_o.residual < 100.0 * acc_n.residual.max(1e-15), "offload accuracy degraded");
+}

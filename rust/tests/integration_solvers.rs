@@ -1,0 +1,151 @@
+//! Integration tests: the four solver variants end-to-end on both paper
+//! workloads, validated against manufactured ground truth.
+
+use gsyeig::solver::accuracy::Accuracy;
+use gsyeig::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant, Which};
+use gsyeig::workloads::spectra::generate_problem;
+use gsyeig::workloads::{DftWorkload, MdWorkload};
+
+const MD_N: usize = 150;
+const DFT_N: usize = 160;
+
+#[test]
+fn all_variants_solve_md_workload() {
+    let w = MdWorkload { n: MD_N, s: 3, seed: 11 };
+    let (problem, which, truth_inv) = w.solver_problem();
+    for variant in Variant::ALL {
+        let cfg = SolverConfig::new(variant, w.s, which);
+        let sol = GsyeigSolver::native(cfg).solve(problem.clone());
+        assert!(sol.converged, "{} did not converge", variant.name());
+        for i in 0..w.s {
+            let rel = (sol.eigenvalues[i] - truth_inv[i]).abs() / truth_inv[i];
+            assert!(rel < 1e-6, "{} eig {i}: rel err {rel}", variant.name());
+        }
+        let acc = Accuracy::measure(&problem.a, &problem.b, &sol.eigenvalues, &sol.x);
+        assert!(acc.residual < 1e-9, "{} residual {}", variant.name(), acc.residual);
+        assert!(acc.orthogonality < 1e-9, "{} orth {}", variant.name(), acc.orthogonality);
+    }
+}
+
+#[test]
+fn all_variants_solve_dft_workload() {
+    let w = DftWorkload { n: DFT_N, s: 4, seed: 12 };
+    let (problem, truth) = w.problem();
+    for variant in Variant::ALL {
+        let cfg = SolverConfig::new(variant, w.s, w.which());
+        let sol = GsyeigSolver::native(cfg).solve(problem.clone());
+        assert!(sol.converged, "{} did not converge", variant.name());
+        for i in 0..w.s {
+            assert!(
+                (sol.eigenvalues[i] - truth[i]).abs() < 1e-6,
+                "{} eig {i}: {} vs {}",
+                variant.name(),
+                sol.eigenvalues[i],
+                truth[i]
+            );
+        }
+        let acc = Accuracy::measure(&problem.a, &problem.b, &sol.eigenvalues, &sol.x);
+        assert!(acc.residual < 1e-8, "{} residual {}", variant.name(), acc.residual);
+    }
+}
+
+#[test]
+fn variants_agree_pairwise() {
+    let n = 130;
+    let lams: Vec<f64> = (0..n).map(|i| (i as f64).powf(1.3) - 20.0).collect();
+    let (p, _) = generate_problem(n, &lams, 60.0, 13);
+    let mut sols = Vec::new();
+    for variant in Variant::ALL {
+        let cfg = SolverConfig::new(variant, 5, Which::Smallest);
+        sols.push(GsyeigSolver::native(cfg).solve(p.clone()));
+    }
+    for i in 1..sols.len() {
+        for k in 0..5 {
+            assert!(
+                (sols[0].eigenvalues[k] - sols[i].eigenvalues[k]).abs() < 1e-6,
+                "variant {i} eig {k} disagrees"
+            );
+        }
+    }
+}
+
+#[test]
+fn tt_bandwidth_sweep_consistent() {
+    let n = 90;
+    let lams: Vec<f64> = (0..n).map(|i| i as f64 * 0.5 + 1.0).collect();
+    let (p, truth) = generate_problem(n, &lams, 40.0, 14);
+    for w in [2, 4, 8, 16, 32] {
+        let mut cfg = SolverConfig::new(Variant::TT, 3, Which::Smallest);
+        cfg.bandwidth = w;
+        let sol = GsyeigSolver::native(cfg).solve(p.clone());
+        for i in 0..3 {
+            assert!(
+                (sol.eigenvalues[i] - truth[i]).abs() < 1e-7,
+                "bandwidth {w} eig {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gs2_sygst_variant_end_to_end() {
+    // the blocked DSYGST alternative must produce the same answers
+    let n = 100;
+    let lams: Vec<f64> = (0..n).map(|i| i as f64 + 0.5).collect();
+    let (p, truth) = generate_problem(n, &lams, 30.0, 15);
+    let mut cfg = SolverConfig::new(Variant::TD, 4, Which::Smallest);
+    cfg.gs2_sygst = true;
+    let sol = GsyeigSolver::native(cfg).solve(p);
+    for i in 0..4 {
+        assert!((sol.eigenvalues[i] - truth[i]).abs() < 1e-7, "eig {i}");
+    }
+}
+
+#[test]
+fn md_inverse_trick_equals_direct_smallest() {
+    // solving (B, A) for largest must equal solving (A, B) for smallest
+    let w = MdWorkload { n: 100, s: 3, seed: 16 };
+    let (forward, truth) = w.problem();
+    let (inverse, which, _) = w.solver_problem();
+    let direct =
+        GsyeigSolver::native(SolverConfig::new(Variant::TD, 3, Which::Smallest)).solve(forward);
+    let inv = GsyeigSolver::native(SolverConfig::new(Variant::KE, 3, which)).solve(inverse);
+    for i in 0..3 {
+        let via_inverse = 1.0 / inv.eigenvalues[i];
+        assert!(
+            (direct.eigenvalues[i] - via_inverse).abs() < 1e-6,
+            "eig {i}: direct {} vs 1/mu {}",
+            direct.eigenvalues[i],
+            via_inverse
+        );
+        assert!((direct.eigenvalues[i] - truth[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn stage_totals_are_consistent() {
+    let w = DftWorkload { n: 120, s: 3, seed: 17 };
+    let (p, _) = w.problem();
+    let sol = GsyeigSolver::native(SolverConfig::new(Variant::KE, 3, w.which())).solve(p);
+    let stage_sum: f64 = sol.stages.stages().map(|(_, d)| d.as_secs_f64()).sum();
+    assert!((stage_sum - sol.total_seconds()).abs() < 1e-9);
+    assert!(sol.matvecs > 0);
+}
+
+#[test]
+fn larger_s_costs_more_for_krylov() {
+    // the Figure 1 trend at integration-test scale
+    let n = 200;
+    let w_small = DftWorkload { n, s: 2, seed: 18 };
+    let w_large = DftWorkload { n, s: 12, seed: 18 };
+    let (p1, _) = w_small.problem();
+    let (p2, _) = w_large.problem();
+    let s1 = GsyeigSolver::native(SolverConfig::new(Variant::KE, 2, Which::Smallest)).solve(p1);
+    let s2 = GsyeigSolver::native(SolverConfig::new(Variant::KE, 12, Which::Smallest)).solve(p2);
+    assert!(
+        s2.matvecs > s1.matvecs,
+        "matvecs must grow with s: {} vs {}",
+        s2.matvecs,
+        s1.matvecs
+    );
+}

@@ -1,0 +1,197 @@
+//! Property-based tests (hand-rolled harness, `gsyeig::testing`) over the
+//! numerical and coordination invariants the system rests on.
+
+use gsyeig::blas::{dgemm, Trans};
+use gsyeig::coordinator::{select_variant, RouterConfig};
+use gsyeig::lanczos::operator::ExplicitOp;
+use gsyeig::lanczos::thick_restart::{lanczos_solve, LanczosConfig, Want};
+use gsyeig::lapack::potrf::dpotrf_upper;
+use gsyeig::lapack::steqr::dsterf;
+use gsyeig::lapack::sygst::sygst_trsm;
+use gsyeig::lapack::sytrd::dsytrd_lower;
+use gsyeig::matrix::{Matrix, SymTridiag};
+use gsyeig::solver::gsyeig::Variant;
+use gsyeig::taskpar::{tiled_potrf, TiledMatrix};
+use gsyeig::testing::{check_property, dim_in};
+use gsyeig::util::rng::Rng;
+
+fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+    let g = Matrix::randn(n, n, rng);
+    let mut b = g.transpose().matmul_naive(&g);
+    for i in 0..n {
+        b[(i, i)] += n as f64 + 1.0;
+    }
+    b
+}
+
+#[test]
+fn prop_potrf_reconstructs() {
+    check_property("UᵀU == B after dpotrf", 25, |rng| {
+        let n = dim_in(rng, 2, 80);
+        let b = random_spd(n, rng);
+        let mut u = b.clone();
+        dpotrf_upper(n, u.as_mut_slice(), n).map_err(|e| e.to_string())?;
+        u.zero_lower();
+        let utu = u.transpose().matmul_naive(&u);
+        let err = utu.max_abs_diff(&b) / b.frobenius_norm();
+        if err > 1e-11 {
+            return Err(format!("n={n} err={err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sygst_congruence() {
+    check_property("Uᵀ C U == A after sygst", 20, |rng| {
+        let n = dim_in(rng, 2, 70);
+        let a = Matrix::randn_sym(n, rng);
+        let b = random_spd(n, rng);
+        let mut u = b.clone();
+        dpotrf_upper(n, u.as_mut_slice(), n).map_err(|e| e.to_string())?;
+        u.zero_lower();
+        let mut c = a.clone();
+        sygst_trsm(n, c.as_mut_slice(), n, u.as_slice(), n);
+        let utcu = u.transpose().matmul_naive(&c).matmul_naive(&u);
+        let err = utcu.max_abs_diff(&a) / a.frobenius_norm().max(1.0);
+        if err > 1e-9 {
+            return Err(format!("n={n} err={err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sytrd_preserves_trace_and_frobenius() {
+    check_property("tridiagonalization preserves trace/‖·‖F", 20, |rng| {
+        let n = dim_in(rng, 2, 90);
+        let a = Matrix::randn_sym(n, rng);
+        let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
+        let frob2: f64 = a.as_slice().iter().map(|x| x * x).sum();
+        let mut w = a.clone();
+        let (mut d, mut e, mut tau) =
+            (vec![0.0; n], vec![0.0; n.saturating_sub(1)], vec![0.0; n.saturating_sub(1)]);
+        dsytrd_lower(n, w.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+        let t_trace: f64 = d.iter().sum();
+        let t_frob2: f64 =
+            d.iter().map(|x| x * x).sum::<f64>() + 2.0 * e.iter().map(|x| x * x).sum::<f64>();
+        if (trace - t_trace).abs() > 1e-9 * trace.abs().max(1.0) {
+            return Err(format!("trace {trace} vs {t_trace}"));
+        }
+        if (frob2 - t_frob2).abs() > 1e-8 * frob2.max(1.0) {
+            return Err(format!("frob² {frob2} vs {t_frob2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_steqr_eigenvalues_in_gershgorin() {
+    check_property("tridiagonal eigenvalues within Gershgorin bounds", 30, |rng| {
+        let n = dim_in(rng, 1, 60);
+        let t = SymTridiag::new(
+            (0..n).map(|_| rng.normal() * 3.0).collect(),
+            (0..n.saturating_sub(1)).map(|_| rng.normal()).collect(),
+        );
+        let (lo, hi) = t.gershgorin();
+        let mut tt = t.clone();
+        dsterf(&mut tt).map_err(|e| e.to_string())?;
+        for (i, &lam) in tt.d.iter().enumerate() {
+            if lam < lo - 1e-10 || lam > hi + 1e-10 {
+                return Err(format!("eig {i} = {lam} outside [{lo}, {hi}]"));
+            }
+        }
+        // also ascending
+        for i in 1..n {
+            if tt.d[i] < tt.d[i - 1] {
+                return Err("not sorted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lanczos_ritz_values_bounded_by_extremes() {
+    check_property("Ritz values within the operator's spectrum bounds", 10, |rng| {
+        let n = dim_in(rng, 20, 60);
+        let a = Matrix::randn_sym(n, rng);
+        let op = ExplicitOp::new(&a);
+        let mut cfg = LanczosConfig::new(3, Want::Largest);
+        cfg.seed = rng.next_u64();
+        let r = lanczos_solve(&op, &cfg);
+        // Gershgorin bound of the dense matrix
+        let mut hi = f64::NEG_INFINITY;
+        let mut lo = f64::INFINITY;
+        for i in 0..n {
+            let radius: f64 = (0..n).filter(|&j| j != i).map(|j| a[(i, j)].abs()).sum();
+            hi = hi.max(a[(i, i)] + radius);
+            lo = lo.min(a[(i, i)] - radius);
+        }
+        for &lam in &r.eigenvalues {
+            if lam > hi + 1e-8 || lam < lo - 1e-8 {
+                return Err(format!("ritz {lam} outside [{lo}, {hi}]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_potrf_equals_dense() {
+    check_property("tiled potrf == dense potrf", 12, |rng| {
+        let n = dim_in(rng, 4, 70);
+        let nb = dim_in(rng, 2, n.max(3) - 1);
+        let b = random_spd(n, rng);
+        let t = TiledMatrix::from_dense(&b, nb);
+        tiled_potrf(&t, 1 + rng.below(3));
+        let mut got = t.to_dense();
+        got.zero_lower();
+        let mut expect = b.clone();
+        dpotrf_upper(n, expect.as_mut_slice(), n).map_err(|e| e.to_string())?;
+        expect.zero_lower();
+        let err = got.max_abs_diff(&expect) / b.frobenius_norm();
+        if err > 1e-10 {
+            return Err(format!("n={n} nb={nb} err={err}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_total_and_memory_safe() {
+    check_property("router respects memory budget and never picks TT", 200, |rng| {
+        let n = dim_in(rng, 10, 50_000);
+        let s = 1 + rng.below(n);
+        let mem = 1usize << (18 + rng.below(16));
+        let cfg = RouterConfig { host_memory_bytes: mem, krylov_fraction: 0.05 };
+        let (v, _) = select_variant(n, s, &cfg);
+        if v == Variant::TT {
+            return Err("TT selected".into());
+        }
+        // if the explicit-C footprint exceeds memory, must be KI
+        if 3 * n * n * 8 > mem && v != Variant::KI {
+            return Err(format!("n={n} mem={mem}: picked {:?}", v));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_matches_naive() {
+    check_property("blocked dgemm == naive matmul", 20, |rng| {
+        let m = dim_in(rng, 1, 60);
+        let k = dim_in(rng, 1, 60);
+        let n = dim_in(rng, 1, 60);
+        let a = Matrix::randn(m, k, rng);
+        let b = Matrix::randn(k, n, rng);
+        let expect = a.matmul_naive(&b);
+        let mut c = Matrix::zeros(m, n);
+        dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, c.as_mut_slice(), m);
+        let err = c.max_abs_diff(&expect);
+        if err > 1e-10 * (k as f64) {
+            return Err(format!("{m}x{k}x{n}: {err}"));
+        }
+        Ok(())
+    });
+}
