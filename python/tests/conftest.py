@@ -1,7 +1,13 @@
+import os
+import sys
+
 import numpy as np
 import pytest
 
 import jax
+
+# make `from compile import ...` work when pytest runs from the repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 jax.config.update("jax_enable_x64", True)
 

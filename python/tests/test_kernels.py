@@ -7,6 +7,8 @@ flops in the same precision, only tiled).
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import gemm, ref, symv

@@ -2,14 +2,12 @@
 //! the PJRT round-trip latency — the baseline and tracking numbers for the
 //! EXPERIMENTS.md §Perf iteration log.
 
-use std::rc::Rc;
 use std::time::Instant;
 
 use gsyeig::blas::{dgemm, dsymv, dtrsm, Diag, Side, Trans, Uplo};
 use gsyeig::lapack::potrf::dpotrf_upper;
 use gsyeig::lapack::sytrd::dsytrd_lower;
 use gsyeig::matrix::Matrix;
-use gsyeig::runtime::ArtifactRegistry;
 use gsyeig::util::rng::Rng;
 
 fn time_gflops(name: &str, flops: f64, reps: usize, mut f: impl FnMut()) {
@@ -64,11 +62,18 @@ fn main() {
         });
     }
 
-    // PJRT round-trip: per-iteration cost of the offloaded KE1 matvec
+    pjrt_roundtrip_microbench(&mut rng);
+}
+
+/// PJRT round-trip: per-iteration cost of the offloaded KE1 matvec.
+#[cfg(feature = "pjrt")]
+fn pjrt_roundtrip_microbench(rng: &mut Rng) {
+    use gsyeig::runtime::ArtifactRegistry;
+    use std::rc::Rc;
     if let Ok(reg) = ArtifactRegistry::load_default() {
         let reg = Rc::new(reg);
         let n = 256;
-        let c = Matrix::randn_sym(n, &mut rng);
+        let c = Matrix::randn_sym(n, rng);
         if let Ok(op) = gsyeig::runtime::offload::OffloadExplicitOp::new(Rc::clone(&reg), &c) {
             use gsyeig::lanczos::operator::SymOp;
             let x: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
@@ -88,4 +93,9 @@ fn main() {
     } else {
         println!("(artifacts missing — skipping PJRT microbench; run `make artifacts`)");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_roundtrip_microbench(_rng: &mut Rng) {
+    println!("(PJRT microbench needs --features pjrt — skipping)");
 }

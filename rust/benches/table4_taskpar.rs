@@ -1,6 +1,13 @@
 //! Table 4: GS1/GS2 on the sequential kernels vs the tiled task-parallel
-//! runtime (PLASMA / libflame+SuperMatrix analog), plus DAG statistics.
-use gsyeig::bench::{run_table4, ExperimentKind, ExperimentScale};
+//! runtime (PLASMA / libflame+SuperMatrix analog), plus DAG statistics and
+//! the paper's core experimental axis — wall-clock speedup vs threads for
+//! the tiled Cholesky on a ≥1024×1024 problem.
+//!
+//! Knobs: `GSYEIG_SCALE` (problem scale for the Table 4 analog) and
+//! `GSYEIG_SWEEP_N` (sweep matrix size, default 1024).  The sweep pins
+//! each row's budget to exactly its thread count (that's the axis being
+//! measured), so `GSYEIG_THREADS` deliberately does not apply to it.
+use gsyeig::bench::{run_table4, run_table4_thread_sweep, ExperimentKind, ExperimentScale};
 
 fn main() {
     let scale = ExperimentScale::from_env();
@@ -9,4 +16,9 @@ fn main() {
             println!("{}", run_table4(kind, &scale, 2, nb));
         }
     }
+    let sweep_n: usize = std::env::var("GSYEIG_SWEEP_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    println!("{}", run_table4_thread_sweep(sweep_n, 128, &[1, 2, 4, 8]));
 }

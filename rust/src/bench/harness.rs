@@ -4,6 +4,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::matrix::Matrix;
 use crate::solver::accuracy::Accuracy;
 use crate::solver::backend::Kernels;
 use crate::solver::gsyeig::{GsyeigSolver, Problem, Solution, SolverConfig, Variant, Which};
@@ -295,7 +296,7 @@ pub fn run_table4(kind: ExperimentKind, scale: &ExperimentScale, workers: usize,
 
     let mut t = Table::new(
         &format!("Table 4 analog — {} (n={n}, nb={nb}, workers={workers})", kind.label()),
-        &["Key", "sequential", "task-parallel", "DAG tasks", "width", "crit.path", "avg par"],
+        &["Key", "sequential", "task-parallel", "DAG tasks", "width", "crit.path", "avg par", "meas eff"],
     );
     t.row(vec![
         "GS1".into(),
@@ -305,6 +306,7 @@ pub fn run_table4(kind: ExperimentKind, scale: &ExperimentScale, workers: usize,
         s1.max_width.to_string(),
         s1.critical_path.to_string(),
         format!("{:.1}", s1.avg_parallelism),
+        format!("{:.2}", s1.parallel_efficiency),
     ]);
     t.row(vec![
         "GS2".into(),
@@ -314,12 +316,58 @@ pub fn run_table4(kind: ExperimentKind, scale: &ExperimentScale, workers: usize,
         s2.max_width.to_string(),
         s2.critical_path.to_string(),
         format!("{:.1}", s2.avg_parallelism),
+        format!("{:.2}", s2.parallel_efficiency),
     ]);
     let mut out = t.render();
     out.push_str(&format!(
-        "  tiled-vs-sequential GS2 relative error: {err:.2e}\n  NOTE: 1-core testbed — \
-         wall-clock parity is expected; the DAG width/critical-path columns show the\n  \
-         parallelism an 8-core machine (the paper's) would exploit. See DESIGN.md.\n"
+        "  tiled-vs-sequential GS2 relative error: {err:.2e}\n  DAG width/crit.path = available \
+         parallelism; 'meas eff' = measured busy/(wall*workers).\n  For the wall-clock \
+         speedup-vs-threads axis, see the thread sweep (DESIGN.md §Hardware-Adaptation).\n"
+    ));
+    out
+}
+
+/// The paper's core experimental axis: wall-clock of the tiled Cholesky
+/// (GS1, the Table 4 representative) as a function of the thread count.
+/// Each row runs `tiled_potrf` on a fresh SPD matrix under a scoped
+/// [`crate::util::parallel`] budget of exactly `t` threads (so the 1-thread
+/// row is a true serial baseline) and reports speedup and efficiency
+/// against it.
+pub fn run_table4_thread_sweep(n: usize, nb: usize, threads: &[usize]) -> String {
+    use crate::util::parallel;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(0x7AB4);
+    let mut b = Matrix::randn_sym(n, &mut rng);
+    for i in 0..n {
+        // diagonal shift n dominates the ±2√n spectrum of the random part
+        b[(i, i)] += n as f64;
+    }
+    let mut t = Table::new(
+        &format!("Table 4 thread sweep — tiled Cholesky GS1 (n={n}, nb={nb})"),
+        &["threads", "seconds", "speedup", "efficiency", "meas DAG eff"],
+    );
+    let mut base = None::<f64>;
+    for &w in threads {
+        let w = w.max(1);
+        let tiled = TiledMatrix::from_dense(&b, nb);
+        let t0 = std::time::Instant::now();
+        let stats = parallel::with_threads(w, || tiled_potrf(&tiled, w));
+        let secs = t0.elapsed().as_secs_f64();
+        let b0 = *base.get_or_insert(secs);
+        let speedup = if secs > 0.0 { b0 / secs } else { 0.0 };
+        t.row(vec![
+            w.to_string(),
+            format!("{secs:.3}"),
+            format!("{speedup:.2}"),
+            format!("{:.2}", speedup / w as f64),
+            format!("{:.2}", stats.parallel_efficiency),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "  host parallelism: {} threads (speedup saturates there — \
+         DESIGN.md §Hardware-Adaptation)\n",
+        std::thread::available_parallelism().map_or(1, |p| p.get())
     ));
     out
 }
@@ -386,6 +434,13 @@ mod tests {
         let scale = ExperimentScale::quick();
         let out = run_table4(ExperimentKind::Md, &scale, 2, 64);
         assert!(out.contains("GS1") && out.contains("GS2"));
+    }
+
+    #[test]
+    fn table4_thread_sweep_quick() {
+        let out = run_table4_thread_sweep(160, 64, &[1, 2]);
+        assert!(out.contains("speedup"), "{out}");
+        assert!(out.contains("threads"), "{out}");
     }
 
     #[test]

@@ -4,6 +4,6 @@
 pub mod harness;
 
 pub use harness::{
-    fig_sweep, run_accuracy_table, run_stage_table, run_table4, ExperimentKind, ExperimentScale,
-    StageTable,
+    fig_sweep, run_accuracy_table, run_stage_table, run_table4, run_table4_thread_sweep,
+    ExperimentKind, ExperimentScale, StageTable,
 };

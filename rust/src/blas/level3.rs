@@ -4,6 +4,17 @@
 //! microkernel over contiguous columns); `dtrsm` is blocked on the
 //! triangular dimension with `dgemm` updates — these two carry GS2, BT1 and
 //! the Q-accumulations, i.e. every Level-3 row of the paper's Table 1.
+//!
+//! Large `dgemm` calls split their C column panels across the
+//! [`crate::util::parallel`] thread budget — the multi-threaded-BLAS role
+//! of the paper's platform.  `dtrsm`/`dsyrk` inherit the parallelism
+//! through their trailing `dgemm` updates, so every blocked consumer
+//! (Cholesky, DSYGST, SBR, back-transform) scales without further changes.
+//! Each column of C is produced by exactly one worker with the same
+//! arithmetic as the serial loop, so results are bitwise independent of
+//! the thread count.
+
+use crate::util::parallel;
 
 use super::{Diag, Side, Trans, Uplo};
 
@@ -14,6 +25,10 @@ const MB: usize = 256;
 const KB: usize = 256;
 /// Triangular-block size for blocked `dtrsm`.
 const TRSM_NB: usize = 64;
+/// Minimum m*n*k products before a gemm is worth forking threads for
+/// (~2 MFLOP: roughly a millisecond of microkernel work — well above the
+/// scoped-thread spawn cost).
+const PAR_MIN_WORK: usize = 1 << 20;
 
 /// C := alpha op(A) op(B) + beta C, C is m x n, op(A) m x k, op(B) k x n.
 #[allow(clippy::too_many_arguments)]
@@ -49,15 +64,22 @@ pub fn dgemm(
         return;
     }
     match (transa, transb) {
-        (Trans::N, Trans::N) => gemm_nn(m, n, k, alpha, a, lda, b, ldb, c, ldc),
+        (Trans::N, Trans::N) => {
+            if m * n * k >= PAR_MIN_WORK && n >= 2 && parallel::current_threads() > 1 {
+                par_columns(m, n, c, ldc, |j0, ncols, panel| {
+                    gemm_nn(m, ncols, k, alpha, a, lda, &b[j0 * ldb..], ldb, panel, ldc);
+                });
+            } else {
+                gemm_nn(m, n, k, alpha, a, lda, b, ldb, c, ldc);
+            }
+        }
         (Trans::T, Trans::N) => {
-            // C[i,j] += alpha * dot(A[:,i], B[:,j]); contiguous dots.
-            for j in 0..n {
-                let bcol = &b[j * ldb..j * ldb + k];
-                for i in 0..m {
-                    let acol = &a[i * lda..i * lda + k];
-                    c[i + j * ldc] += alpha * super::ddot(acol, bcol);
-                }
+            if m * n * k >= PAR_MIN_WORK && n >= 2 && parallel::current_threads() > 1 {
+                par_columns(m, n, c, ldc, |j0, ncols, panel| {
+                    gemm_tn(m, ncols, k, alpha, a, lda, &b[j0 * ldb..], ldb, panel, ldc);
+                });
+            } else {
+                gemm_tn(m, n, k, alpha, a, lda, b, ldb, c, ldc);
             }
         }
         (Trans::N, Trans::T) => {
@@ -85,6 +107,49 @@ pub fn dgemm(
                     c[i + j * ldc] += alpha * s;
                 }
             }
+        }
+    }
+}
+
+/// Split the columns of C into contiguous panels (chunks that are whole
+/// multiples of `ldc`, so each panel is a disjoint `&mut` region) and run
+/// `f(first_col, ncols, panel)` on the pieces across the thread budget.
+fn par_columns<F>(m: usize, n: usize, c: &mut [f64], ldc: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f64]) + Sync,
+{
+    let t = parallel::current_threads().min(n);
+    let cols_per = n.div_ceil(t);
+    // trim to the exact extent gemm panels index so the last chunk has the
+    // expected (ncols-1)*ldc + m length
+    let used = &mut c[..(n - 1) * ldc + m];
+    parallel::parallel_chunks(used, cols_per * ldc, |ci, panel| {
+        let j0 = ci * cols_per;
+        let ncols = cols_per.min(n - j0);
+        f(j0, ncols, panel);
+    });
+}
+
+/// C += alpha op(A) B with A transposed: C[i,j] += alpha * dot(A[:,i],
+/// B[:,j]) over contiguous columns of A and B.
+#[allow(clippy::too_many_arguments)]
+fn gemm_tn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    for j in 0..n {
+        let bcol = &b[j * ldb..j * ldb + k];
+        for i in 0..m {
+            let acol = &a[i * lda..i * lda + k];
+            c[i + j * ldc] += alpha * super::ddot(acol, bcol);
         }
     }
 }
@@ -744,6 +809,36 @@ mod tests {
             dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, c.as_mut_slice(), m);
             assert!(c.max_abs_diff(&expect) < 1e-10, "m={m} n={n} k={k}");
         }
+    }
+
+    #[test]
+    fn parallel_gemm_bitwise_matches_serial() {
+        use crate::util::parallel::with_threads;
+        let mut rng = Rng::new(21);
+        // above PAR_MIN_WORK so the threaded path actually engages
+        let (m, n, k) = (128, 96, 128);
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let mut c1 = Matrix::zeros(m, n);
+        with_threads(1, || {
+            dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, c1.as_mut_slice(), m);
+        });
+        let mut c4 = Matrix::zeros(m, n);
+        with_threads(4, || {
+            dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, c4.as_mut_slice(), m);
+        });
+        assert_eq!(c1.max_abs_diff(&c4), 0.0, "NN panels must be bitwise equal");
+
+        let at = a.transpose();
+        let mut d1 = Matrix::zeros(m, n);
+        with_threads(1, || {
+            dgemm(Trans::T, Trans::N, m, n, k, 1.0, at.as_slice(), k, b.as_slice(), k, 0.0, d1.as_mut_slice(), m);
+        });
+        let mut d4 = Matrix::zeros(m, n);
+        with_threads(4, || {
+            dgemm(Trans::T, Trans::N, m, n, k, 1.0, at.as_slice(), k, b.as_slice(), k, 0.0, d4.as_mut_slice(), m);
+        });
+        assert_eq!(d1.max_abs_diff(&d4), 0.0, "TN panels must be bitwise equal");
     }
 
     #[test]

@@ -1,8 +1,18 @@
 //! The coordinator server: worker pool over the job queue, with router
 //! integration and a Cholesky-factor cache for SCF-style job streams.
+//!
+//! Concurrent jobs and intra-job threads share one budget: each worker
+//! runs its jobs under `current_threads() / workers` via
+//! [`crate::util::parallel::with_threads`], so a 2-worker coordinator on
+//! an 8-thread budget gives every solver 4 BLAS threads instead of letting
+//! `workers × threads` oversubscribe the machine (DESIGN.md
+//! §Threading-Model).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+
+use crate::util::parallel;
 
 use crate::lapack::LapackError;
 use crate::matrix::Matrix;
@@ -35,7 +45,8 @@ struct CachingKernels {
     inner: NativeKernels,
     cache: Arc<Mutex<HashMap<u64, Matrix>>>,
     key: Option<u64>,
-    hit: std::cell::Cell<bool>,
+    // atomic, not Cell: Kernels implementations must be Send + Sync
+    hit: AtomicBool,
 }
 
 impl Kernels for CachingKernels {
@@ -44,7 +55,7 @@ impl Kernels for CachingKernels {
             if let Some(u) = self.cache.lock().unwrap().get(&key) {
                 if u.rows() == b.rows() {
                     *b = u.clone();
-                    self.hit.set(true);
+                    self.hit.store(true, Ordering::Relaxed);
                     return Ok(());
                 }
             }
@@ -120,19 +131,24 @@ impl Coordinator {
     /// outcomes sorted by job id.
     pub fn run_to_completion(&self) -> Vec<JobOutcome> {
         let factor_cache: Arc<Mutex<HashMap<u64, Matrix>>> = Arc::new(Mutex::new(HashMap::new()));
+        let workers = self.config.workers.max(1);
+        // one shared thread budget: workers × per-job threads ≤ the budget
+        let per_worker_threads = (parallel::current_threads() / workers).max(1);
         std::thread::scope(|scope| {
-            for _ in 0..self.config.workers.max(1) {
+            for _ in 0..workers {
                 let queue = Arc::clone(&self.queue);
                 let results = Arc::clone(&self.results);
                 let metrics = Arc::clone(&self.metrics);
                 let cache = Arc::clone(&factor_cache);
                 let router_cfg = self.config.router;
                 scope.spawn(move || {
-                    while let Some(job) = queue.pop() {
-                        let outcome = execute_job(job, &cache, &router_cfg);
-                        metrics.record(outcome.total_seconds, outcome.gs1_cached, outcome.matvecs);
-                        results.lock().unwrap().push(outcome);
-                    }
+                    parallel::with_threads(per_worker_threads, || {
+                        while let Some(job) = queue.pop() {
+                            let outcome = execute_job(job, &cache, &router_cfg);
+                            metrics.record(outcome.total_seconds, outcome.gs1_cached, outcome.matvecs);
+                            results.lock().unwrap().push(outcome);
+                        }
+                    })
                 });
             }
         });
@@ -162,7 +178,7 @@ fn execute_job(
         inner: NativeKernels::default(),
         cache: Arc::clone(cache),
         key: job.spec.b_cache_key,
-        hit: std::cell::Cell::new(false),
+        hit: AtomicBool::new(false),
     };
     let cfg = SolverConfig::new(variant, s, which);
     let solver = GsyeigSolver::with_kernels(cfg, kernels);
@@ -182,7 +198,7 @@ fn execute_job(
         total_seconds: total,
         matvecs: sol.matvecs,
         converged: sol.converged,
-        gs1_cached: solver.kernels.hit.get(),
+        gs1_cached: solver.kernels.hit.load(Ordering::Relaxed),
     }
 }
 

@@ -6,20 +6,34 @@
 //! verifies ("the execution time of the tridiagonal eigensolver is
 //! negligible, validating the choice of MR³").  See DESIGN.md
 //! (substitution #4) for why bisection+invit substitutes for MR³ here.
+//!
+//! Bisection is the MR³-SMP poster child for parallelism: every eigenvalue
+//! is located by an independent Sturm-count search, so the index range is
+//! simply split across the [`crate::util::parallel`] thread budget.  The
+//! per-index arithmetic is unchanged, so results are **bitwise identical**
+//! at every thread count (asserted by `tests/prop_threading.rs`).
 
 use crate::matrix::SymTridiag;
+use crate::util::parallel;
+
+/// Minimum `n * subset_size` before bisection is worth forking threads for;
+/// below this the whole subset is microseconds of Sturm counts and the
+/// scoped-thread spawn cost would dominate (coordinator job streams of
+/// small solves hit this path constantly).
+const PAR_MIN_WORK: usize = 2048;
 
 /// Compute eigenvalues `il..=iu` (0-based, ascending order) of `t` by
 /// Sturm-count bisection.  Each eigenvalue is located independently to
-/// nearly machine precision.
+/// nearly machine precision; independent indices run in parallel.
 pub fn dstebz(t: &SymTridiag, il: usize, iu: usize) -> Vec<f64> {
     let n = t.n();
     assert!(il <= iu && iu < n, "index range {il}..={iu} out of 0..{n}");
     let (glo, ghi) = t.gershgorin();
     let span = (ghi - glo).max(f64::MIN_POSITIVE);
     let abs_tol = f64::EPSILON * (glo.abs().max(ghi.abs()) + span).max(1.0);
-    let mut out = Vec::with_capacity(iu - il + 1);
-    for k in il..=iu {
+    let m = iu - il + 1;
+    let locate = |j: usize| -> f64 {
+        let k = il + j;
         // invariant: count(lo) <= k < count(hi)
         let mut lo = glo - span * 1e-6 - abs_tol;
         let mut hi = ghi + span * 1e-6 + abs_tol;
@@ -35,9 +49,14 @@ pub fn dstebz(t: &SymTridiag, il: usize, iu: usize) -> Vec<f64> {
                 lo = mid;
             }
         }
-        out.push(0.5 * (lo + hi));
+        0.5 * (lo + hi)
+    };
+    // same closure either way, so results stay bitwise identical
+    if n * m < PAR_MIN_WORK {
+        (0..m).map(locate).collect()
+    } else {
+        parallel::parallel_map(m, locate)
     }
-    out
 }
 
 /// Count eigenvalues in the half-open interval `[a, b)`.

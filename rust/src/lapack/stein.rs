@@ -15,6 +15,9 @@ use crate::util::rng::Rng;
 /// cluster and their vectors mutually re-orthogonalized.
 const CLUSTER_REL_GAP: f64 = 1e-3;
 const MAX_SWEEPS: usize = 5;
+/// Minimum `n * s` before the cluster loop is worth forking threads for
+/// (mirrors `stebz::PAR_MIN_WORK`).
+const PAR_MIN_WORK: usize = 2048;
 
 /// Solve (T - lam I) x = b via LU with partial pivoting; near-zero pivots
 /// are perturbed (standard inverse-iteration practice — the shift *is* an
@@ -94,61 +97,104 @@ fn solve_shifted(t: &SymTridiag, lam: f64, b: &[f64], pivmin: f64) -> Vec<f64> {
 
 /// Eigenvectors for the given (ascending) eigenvalues of `t`; returns an
 /// n x s column-orthonormal matrix.
+///
+/// Parallel decomposition (MR³-SMP): the eigenvalue list is partitioned
+/// into clusters at the `CLUSTER_REL_GAP` boundaries; clusters are
+/// independent (no cross-cluster re-orthogonalization) and run across the
+/// [`crate::util::parallel`] thread budget, while vectors *within* a
+/// cluster stay sequential because each is re-orthogonalized against its
+/// predecessors.  Every vector seeds its own PRNG from its global index,
+/// so the result is independent of the thread count.
 pub fn dstein(t: &SymTridiag, lambdas: &[f64]) -> Matrix {
     let n = t.n();
     let s = lambdas.len();
     let mut z = Matrix::zeros(n, s);
+    if s == 0 {
+        return z;
+    }
     let norm = t.norm1().max(f64::MIN_POSITIVE);
     let pivmin = f64::EPSILON * norm * 1e-3;
-    let mut rng = Rng::new(0x57E1_Eu64);
-    let mut cluster_start = 0usize;
 
-    for j in 0..s {
-        if j > 0 && (lambdas[j] - lambdas[j - 1]).abs() > CLUSTER_REL_GAP * norm {
-            cluster_start = j;
+    // cluster boundaries: [start, end) index ranges of near-equal values
+    let mut clusters: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    for j in 1..s {
+        if (lambdas[j] - lambdas[j - 1]).abs() > CLUSTER_REL_GAP * norm {
+            clusters.push((start, j));
+            start = j;
         }
-        // random start keeps components along the target eigenvector
-        let mut x: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
-        let inv_scale = 1.0 / dnrm2(&x);
-        for v in x.iter_mut() {
-            *v *= inv_scale;
+    }
+    clusters.push((start, s));
+
+    // split Z's column-major storage into one disjoint panel per cluster
+    let mut panels: Vec<(usize, &mut [f64])> = Vec::with_capacity(clusters.len());
+    let mut rest = z.as_mut_slice();
+    for &(cs, ce) in &clusters {
+        let (head, tail) = rest.split_at_mut((ce - cs) * n);
+        panels.push((cs, head));
+        rest = tail;
+    }
+
+    let run_cluster = |(cs, panel): (usize, &mut [f64])| {
+        let width = panel.len() / n;
+        for local_j in 0..width {
+            let j = cs + local_j;
+            let (done, cur) = panel.split_at_mut(local_j * n);
+            let out = &mut cur[..n];
+            // per-vector PRNG: deterministic at any thread count
+            let mut rng = Rng::new(0x57E1_Eu64 ^ (j as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            // random start keeps components along the target eigenvector
+            let mut x: Vec<f64> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let inv_scale = 1.0 / dnrm2(&x);
+            for v in x.iter_mut() {
+                *v *= inv_scale;
+            }
+            for sweep in 0..MAX_SWEEPS {
+                let mut y = solve_shifted(t, lambdas[j], &x, pivmin);
+                // re-orthogonalize within the cluster (earlier panel columns)
+                for zp in done.chunks_exact(n) {
+                    let proj = ddot(&y, zp);
+                    for (yi, zi) in y.iter_mut().zip(zp) {
+                        *yi -= proj * zi;
+                    }
+                }
+                let ny = dnrm2(&y);
+                if ny == 0.0 {
+                    // degenerate start; re-randomize
+                    for v in x.iter_mut() {
+                        *v = rng.uniform_in(-1.0, 1.0);
+                    }
+                    continue;
+                }
+                let inv = 1.0 / ny;
+                for (xi, yi) in x.iter_mut().zip(&y) {
+                    *xi = yi * inv;
+                }
+                // growth test: one sweep usually suffices; after the 2nd
+                // sweep accept unconditionally unless the residual is poor.
+                if sweep >= 1 {
+                    let tx = t.matvec(&x);
+                    let mut rmax = 0.0f64;
+                    for i in 0..n {
+                        rmax = rmax.max((tx[i] - lambdas[j] * x[i]).abs());
+                    }
+                    if rmax <= 1e-12 * norm || sweep == MAX_SWEEPS - 1 {
+                        break;
+                    }
+                }
+            }
+            out.copy_from_slice(&x);
         }
-        for sweep in 0..MAX_SWEEPS {
-            let mut y = solve_shifted(t, lambdas[j], &x, pivmin);
-            // re-orthogonalize within the cluster
-            for p in cluster_start..j {
-                let zp = z.col(p);
-                let proj = ddot(&y, zp);
-                for (yi, zi) in y.iter_mut().zip(zp) {
-                    *yi -= proj * zi;
-                }
-            }
-            let ny = dnrm2(&y);
-            if ny == 0.0 {
-                // degenerate start; re-randomize
-                for v in x.iter_mut() {
-                    *v = rng.uniform_in(-1.0, 1.0);
-                }
-                continue;
-            }
-            let inv = 1.0 / ny;
-            for (xi, yi) in x.iter_mut().zip(&y) {
-                *xi = yi * inv;
-            }
-            // growth test: one sweep usually suffices; after the 2nd sweep
-            // accept unconditionally unless the residual is still poor.
-            if sweep >= 1 {
-                let tx = t.matvec(&x);
-                let mut rmax = 0.0f64;
-                for i in 0..n {
-                    rmax = rmax.max((tx[i] - lambdas[j] * x[i]).abs());
-                }
-                if rmax <= 1e-12 * norm || sweep == MAX_SWEEPS - 1 {
-                    break;
-                }
-            }
+    };
+    // tiny subsets (coordinator streams of small jobs): the whole invit is
+    // microseconds of work — run the clusters in place rather than paying
+    // thread spawns.  Same closure either way, so results are unchanged.
+    if n * s < PAR_MIN_WORK {
+        for p in panels {
+            run_cluster(p);
         }
-        z.col_mut(j).copy_from_slice(&x);
+    } else {
+        crate::util::parallel::parallel_items(panels, run_cluster);
     }
     z
 }

@@ -6,17 +6,26 @@
 //! gsyeig runtime    --inventory            # Table 5 analog: artifact registry
 //! gsyeig serve      --jobs 8 --workers 2   # coordinator demo over a job stream
 //! ```
+//!
+//! Threading: every subcommand honours `GSYEIG_THREADS` (default: all
+//! available cores) — see DESIGN.md §Threading-Model.  The one exception
+//! is the Table 4 thread sweep, which pins each row's budget to its own
+//! thread count by design.  The `--offload` paths need the `pjrt` cargo
+//! feature (DESIGN.md §Hardware-Adaptation).
 
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 use gsyeig::bench::{
-    fig_sweep, run_accuracy_table, run_stage_table, run_table4, ExperimentKind, ExperimentScale,
+    fig_sweep, run_accuracy_table, run_stage_table, run_table4, run_table4_thread_sweep,
+    ExperimentKind, ExperimentScale,
 };
 use gsyeig::cli::Args;
 use gsyeig::coordinator::{Coordinator, CoordinatorConfig, Job, JobSpec, WorkloadSpec};
+#[cfg(feature = "pjrt")]
 use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
 use gsyeig::solver::backend::NativeKernels;
-use gsyeig::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant};
+use gsyeig::solver::gsyeig::{GsyeigSolver, Problem, Solution, SolverConfig, Variant};
 use gsyeig::solver::Accuracy;
 use gsyeig::workloads::{DftWorkload, MdWorkload};
 
@@ -50,6 +59,21 @@ fn parse_variant(s: &str) -> Variant {
     }
 }
 
+#[cfg(feature = "pjrt")]
+fn solve_offload(cfg: SolverConfig, problem: Problem) -> Solution {
+    use gsyeig::solver::backend::Kernels;
+    let reg = Rc::new(ArtifactRegistry::load_default().expect("artifacts missing"));
+    let kernels = OffloadKernels::new(reg);
+    kernels.warm_up(problem.n()); // compile artifacts outside the timings
+    GsyeigSolver::with_kernels(cfg, kernels).solve(problem)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn solve_offload(_cfg: SolverConfig, _problem: Problem) -> Solution {
+    eprintln!("--offload needs the PJRT runtime: build with --features pjrt (see DESIGN.md)");
+    std::process::exit(2);
+}
+
 fn cmd_solve(args: &Args) {
     let n = args.get_usize("n", 400);
     let workload = args.get("workload").unwrap_or("md");
@@ -79,11 +103,7 @@ fn cmd_solve(args: &Args) {
     let cfg = SolverConfig::new(variant, s, which);
 
     let sol = if args.flag("offload") {
-        use gsyeig::solver::backend::Kernels;
-        let reg = Rc::new(ArtifactRegistry::load_default().expect("artifacts missing"));
-        let kernels = OffloadKernels::new(reg);
-        kernels.warm_up(problem.n()); // compile artifacts outside the timings
-        GsyeigSolver::with_kernels(cfg, kernels).solve(problem)
+        solve_offload(cfg, problem)
     } else {
         GsyeigSolver::native(cfg).solve(problem)
     };
@@ -102,6 +122,37 @@ fn cmd_solve(args: &Args) {
     println!("ground truth        : {:?}", &truth[..k2]);
 }
 
+/// Tables 6/7 (offload stage timings + accuracy) for one experiment.
+#[cfg(feature = "pjrt")]
+fn run_offload_tables(scale: &ExperimentScale) {
+    let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let k = OffloadKernels::new(reg);
+    for kind in [ExperimentKind::Md, ExperimentKind::Dft] {
+        let t = run_stage_table(kind, scale, &k, &Variant::ALL);
+        println!("{}", t.render("Table 6 analog (PJRT offload)"));
+        println!("{}", run_accuracy_table(&t, "Table 7 analog"));
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_offload_tables(_scale: &ExperimentScale) {
+    println!("(tables 6/7 need the PJRT runtime — build with --features pjrt; skipping)");
+}
+
+/// Figure 2 (offload sweep over s).
+#[cfg(feature = "pjrt")]
+fn run_offload_fig2(scale: &ExperimentScale, svals: &[usize]) {
+    let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let k = OffloadKernels::new(reg);
+    let (csv, txt) = fig_sweep(ExperimentKind::Md, scale, &k, svals, "Figure 2 analog (offload)");
+    println!("{txt}\nCSV:\n{csv}");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_offload_fig2(_scale: &ExperimentScale, _svals: &[usize]) {
+    println!("(figure 2 needs the PJRT runtime — build with --features pjrt; skipping)");
+}
+
 fn cmd_experiment(args: &Args) {
     let what = args.command_at(1).unwrap_or("all");
     let scale =
@@ -109,21 +160,16 @@ fn cmd_experiment(args: &Args) {
     let native = NativeKernels::default();
     let all = Variant::ALL;
 
-    let offload = || -> OffloadKernels {
-        let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
-        OffloadKernels::new(reg)
-    };
-
     let run_t2_t3 = |kind: ExperimentKind| {
         let t = run_stage_table(kind, &scale, &native, &all);
         println!("{}", t.render("Table 2 analog (conventional libraries)"));
         println!("{}", run_accuracy_table(&t, "Table 3 analog"));
     };
-    let run_t6_t7 = |kind: ExperimentKind| {
-        let k = offload();
-        let t = run_stage_table(kind, &scale, &k, &all);
-        println!("{}", t.render("Table 6 analog (PJRT offload)"));
-        println!("{}", run_accuracy_table(&t, "Table 7 analog"));
+    let run_t4 = || {
+        println!("{}", run_table4(ExperimentKind::Md, &scale, 2, 128));
+        println!("{}", run_table4(ExperimentKind::Dft, &scale, 2, 128));
+        let sweep_n = scale.md_n.max(256);
+        println!("{}", run_table4_thread_sweep(sweep_n, 128, &[1, 2, 4, 8]));
     };
 
     match what {
@@ -131,14 +177,8 @@ fn cmd_experiment(args: &Args) {
             run_t2_t3(ExperimentKind::Md);
             run_t2_t3(ExperimentKind::Dft);
         }
-        "table4" => {
-            println!("{}", run_table4(ExperimentKind::Md, &scale, 2, 128));
-            println!("{}", run_table4(ExperimentKind::Dft, &scale, 2, 128));
-        }
-        "table6" | "table7" => {
-            run_t6_t7(ExperimentKind::Md);
-            run_t6_t7(ExperimentKind::Dft);
-        }
+        "table4" => run_t4(),
+        "table6" | "table7" => run_offload_tables(&scale),
         "fig1" | "fig2" => {
             let svals = fig_svals(&scale);
             if what == "fig1" {
@@ -146,27 +186,19 @@ fn cmd_experiment(args: &Args) {
                     fig_sweep(ExperimentKind::Md, &scale, &native, &svals, "Figure 1 analog (native)");
                 println!("{txt}\nCSV:\n{csv}");
             } else {
-                let k = offload();
-                let (csv, txt) =
-                    fig_sweep(ExperimentKind::Md, &scale, &k, &svals, "Figure 2 analog (offload)");
-                println!("{txt}\nCSV:\n{csv}");
+                run_offload_fig2(&scale, &svals);
             }
         }
         "all" => {
             run_t2_t3(ExperimentKind::Md);
             run_t2_t3(ExperimentKind::Dft);
-            println!("{}", run_table4(ExperimentKind::Md, &scale, 2, 128));
-            println!("{}", run_table4(ExperimentKind::Dft, &scale, 2, 128));
-            run_t6_t7(ExperimentKind::Md);
-            run_t6_t7(ExperimentKind::Dft);
+            run_t4();
+            run_offload_tables(&scale);
             let svals = fig_svals(&scale);
             let (csv1, txt1) =
                 fig_sweep(ExperimentKind::Md, &scale, &native, &svals, "Figure 1 analog (native)");
             println!("{txt1}\nCSV:\n{csv1}");
-            let k = offload();
-            let (csv2, txt2) =
-                fig_sweep(ExperimentKind::Md, &scale, &k, &svals, "Figure 2 analog (offload)");
-            println!("{txt2}\nCSV:\n{csv2}");
+            run_offload_fig2(&scale, &svals);
         }
         other => {
             eprintln!("unknown experiment {other}");
@@ -184,6 +216,7 @@ fn fig_svals(scale: &ExperimentScale) -> Vec<usize> {
     v
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_runtime(args: &Args) {
     let reg = ArtifactRegistry::load_default().expect("run `make artifacts` first");
     if args.flag("inventory") {
@@ -196,6 +229,11 @@ fn cmd_runtime(args: &Args) {
     } else {
         println!("try: gsyeig runtime --inventory");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_runtime(_args: &Args) {
+    println!("the runtime inventory needs the PJRT runtime — build with --features pjrt");
 }
 
 fn cmd_serve(args: &Args) {

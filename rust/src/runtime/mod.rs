@@ -13,10 +13,24 @@
 //! budget that can refuse a problem (KI at DFT size in Table 6), and
 //! native fallback for everything else (the bold-face table entries).
 
+//! The offload runtime depends on the external `xla` (PJRT bindings) and
+//! `anyhow` crates, which the offline build environment cannot fetch; the
+//! whole subsystem is therefore gated behind the off-by-default `pjrt`
+//! cargo feature (DESIGN.md §Hardware-Adaptation).  Build with
+//! `--features pjrt` after adding those dependencies to `rust/Cargo.toml`
+//! in a networked environment; every solver path falls back to the native
+//! kernels when the feature is off.
+
+#[cfg(feature = "pjrt")]
 pub mod offload;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod registry;
 
+#[cfg(feature = "pjrt")]
 pub use offload::OffloadKernels;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRuntime;
+#[cfg(feature = "pjrt")]
 pub use registry::ArtifactRegistry;

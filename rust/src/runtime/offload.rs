@@ -32,6 +32,17 @@ pub struct OffloadKernels {
     fallbacks: RefCell<Vec<&'static str>>,
 }
 
+// SAFETY: `Kernels` now requires `Send + Sync` (the threading contract of
+// DESIGN.md §Threading-Model), but the PJRT handles (`Rc`, `RefCell`,
+// client buffers) are not thread-safe.  The offload backend is only ever
+// driven by a single solver thread at a time — the coordinator constructs
+// one backend per worker, never sharing one across threads — so asserting
+// the bounds is sound under that discipline.  Migrating these handles to
+// `Arc`/`Mutex` (and auditing the xla types) is the recorded follow-on for
+// making this structural rather than asserted.
+unsafe impl Send for OffloadKernels {}
+unsafe impl Sync for OffloadKernels {}
+
 impl OffloadKernels {
     pub fn new(registry: Rc<ArtifactRegistry>) -> Self {
         OffloadKernels { registry, native: NativeKernels::default(), fallbacks: RefCell::new(vec![]) }

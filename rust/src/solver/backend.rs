@@ -17,7 +17,12 @@ use crate::lapack::LapackError;
 use crate::matrix::Matrix;
 
 /// The stage kernels a solver variant needs from a "library".
-pub trait Kernels {
+///
+/// `Send + Sync` is part of the contract (DESIGN.md §Threading-Model): a
+/// backend may be driven from coordinator worker threads and its kernels
+/// run above the parallel BLAS, so implementations must be shareable
+/// across threads — interior state needs atomics or locks, not `Cell`.
+pub trait Kernels: Send + Sync {
     /// GS1: in-place upper Cholesky `B = UᵀU` (strict lower zeroed).
     fn cholesky(&self, b: &mut Matrix) -> Result<(), LapackError>;
     /// GS2: `a := U⁻ᵀ a U⁻¹` (full symmetric storage on exit).

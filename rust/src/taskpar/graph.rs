@@ -20,6 +20,12 @@ pub struct TaskNode {
 }
 
 /// DAG statistics — the parallelism analysis reported in the Table 4 bench.
+///
+/// The structural fields (`tasks`, `critical_path`, `max_width`,
+/// `avg_parallelism`) come from [`TaskGraph::stats`] before execution; the
+/// measured fields are filled in from the scheduler's
+/// [`crate::taskpar::scheduler::ExecStats`] after a run, turning the
+/// *available* parallelism analysis into *achieved* numbers.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DagStats {
     pub tasks: usize,
@@ -30,6 +36,24 @@ pub struct DagStats {
     pub max_width: usize,
     /// tasks / critical_path: average available parallelism.
     pub avg_parallelism: f64,
+    /// Workers used in the measured execution (0 = not executed yet).
+    pub workers: usize,
+    /// Measured wall-clock of the DAG execution.
+    pub wall_seconds: f64,
+    /// Measured sum of per-task execution times (serial work content).
+    pub busy_seconds: f64,
+    /// Measured busy / (wall * workers) ∈ (0, 1].
+    pub parallel_efficiency: f64,
+}
+
+impl DagStats {
+    /// Merge the scheduler's measured numbers into the structural stats.
+    pub fn record_execution(&mut self, exec: &crate::taskpar::scheduler::ExecStats) {
+        self.workers = exec.workers;
+        self.wall_seconds = exec.wall_seconds;
+        self.busy_seconds = exec.busy_seconds;
+        self.parallel_efficiency = exec.parallel_efficiency();
+    }
 }
 
 #[derive(Default)]
@@ -109,6 +133,10 @@ impl TaskGraph {
             critical_path,
             max_width,
             avg_parallelism: if critical_path > 0 { n as f64 / critical_path as f64 } else { 0.0 },
+            workers: 0,
+            wall_seconds: 0.0,
+            busy_seconds: 0.0,
+            parallel_efficiency: 0.0,
         }
     }
 }

@@ -3,12 +3,13 @@
 //!
 //! Matrices are partitioned into square tiles; each kernel invocation on a
 //! tile becomes a task node in a dependency DAG derived from the tasks'
-//! read/write sets (RAW, WAR, WAW — the SuperMatrix analysis); a worker
-//! pool executes ready tasks.  On this single-core testbed the runtime
-//! cannot show wall-clock speedups (DESIGN.md §Hardware-Adaptation); the
-//! Table 4 bench therefore also reports the *DAG statistics* — task count,
-//! available width, critical-path length — that quantify the parallelism
-//! the paper's 8-core machine exploits.
+//! read/write sets (RAW, WAR, WAW — the SuperMatrix analysis); a pool of
+//! real worker threads executes ready tasks, sharing one
+//! [`crate::util::parallel`] thread budget with the tile kernels so DAG-
+//! and BLAS-level parallelism compose instead of oversubscribing
+//! (DESIGN.md §Hardware-Adaptation).  The Table 4 bench reports both the
+//! *available* parallelism (task count, width, critical path) and the
+//! *measured* wall-clock speedup and efficiency over a thread sweep.
 
 pub mod graph;
 pub mod ops;
@@ -17,5 +18,5 @@ pub mod tile;
 
 pub use graph::{DagStats, TaskGraph};
 pub use ops::{tiled_potrf, tiled_sygst_trsm};
-pub use scheduler::run_graph;
+pub use scheduler::{run_graph, ExecStats};
 pub use tile::TiledMatrix;

@@ -77,8 +77,9 @@ pub fn tiled_potrf(a: &TiledMatrix, workers: usize) -> DagStats {
             }
         }
     }
-    let stats = g.stats();
-    run_graph(g, workers);
+    let mut stats = g.stats();
+    let exec = run_graph(g, workers);
+    stats.record_execution(&exec);
     stats
 }
 
@@ -168,8 +169,9 @@ pub fn tiled_sygst_trsm(a: &TiledMatrix, u: &TiledMatrix, workers: usize) -> Dag
             );
         }
     }
-    let stats = g.stats();
-    run_graph(g, workers);
+    let mut stats = g.stats();
+    let exec = run_graph(g, workers);
+    stats.record_execution(&exec);
     stats
 }
 

@@ -2,15 +2,56 @@
 //!
 //! A shared ready-queue plus per-task remaining-dependency counters: when a
 //! task finishes, it decrements its dependents and pushes the newly-ready
-//! ones — the standard PLASMA/QUARK execution model.  Worker count is a
-//! parameter; on this 1-core testbed extra workers only demonstrate
-//! correctness under interleaving, not speedup (see DESIGN.md).
+//! ones — the standard PLASMA/QUARK execution model.  Workers are real
+//! scoped threads; each one runs its tasks under a
+//! [`crate::util::parallel`] budget of `current_threads() / workers`, so
+//! tile kernels never oversubscribe the machine on top of the DAG-level
+//! parallelism (DESIGN.md §Threading-Model).  [`run_graph`] returns the
+//! *measured* execution statistics (wall clock, summed task time, ready
+//! depth) that the Table 4 bench turns into speedup and efficiency.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::util::parallel;
 
 use super::graph::TaskGraph;
+
+/// Measured execution statistics of one [`run_graph`] call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecStats {
+    /// Worker threads used.
+    pub workers: usize,
+    /// Observed maximum ready-queue depth (a lower bound on exploitable
+    /// width).
+    pub max_ready_depth: usize,
+    /// Wall-clock of the whole DAG execution.
+    pub wall_seconds: f64,
+    /// Sum of individual task execution times (the serial work content).
+    pub busy_seconds: f64,
+}
+
+impl ExecStats {
+    /// busy / wall — how many workers were effectively computing at once.
+    pub fn speedup(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.busy_seconds / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// speedup / workers ∈ (0, 1]: 1.0 means no worker ever idled.
+    pub fn parallel_efficiency(&self) -> f64 {
+        if self.workers > 0 {
+            self.speedup() / self.workers as f64
+        } else {
+            0.0
+        }
+    }
+}
 
 struct Shared {
     ready: Mutex<VecDeque<usize>>,
@@ -20,12 +61,13 @@ struct Shared {
     total: usize,
 }
 
-/// Execute all tasks of the graph with `workers` threads.  Returns the
-/// observed maximum ready-queue depth (a lower bound on exploitable width).
-pub fn run_graph(graph: TaskGraph, workers: usize) -> usize {
+/// Execute all tasks of the graph with `workers` threads and return the
+/// measured statistics.
+pub fn run_graph(graph: TaskGraph, workers: usize) -> ExecStats {
+    let workers = workers.max(1);
     let total = graph.nodes.len();
     if total == 0 {
-        return 0;
+        return ExecStats { workers, max_ready_depth: 0, wall_seconds: 0.0, busy_seconds: 0.0 };
     }
     let mut tasks: Vec<Option<super::graph::TaskFn>> = Vec::with_capacity(total);
     let mut dependents: Vec<Vec<usize>> = Vec::with_capacity(total);
@@ -49,51 +91,62 @@ pub fn run_graph(graph: TaskGraph, workers: usize) -> usize {
     let tasks = Arc::new(Mutex::new(tasks));
     let dependents = Arc::new(dependents);
     let max_depth = Arc::new(AtomicUsize::new(0));
+    let busy_ns = Arc::new(AtomicU64::new(0));
 
-    let workers = workers.max(1);
+    // split the caller's thread budget across the workers so tile kernels
+    // calling the parallel BLAS don't multiply the thread count
+    let child_budget = (parallel::current_threads() / workers).max(1);
+
+    let t0 = Instant::now();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let shared = Arc::clone(&shared);
             let tasks = Arc::clone(&tasks);
             let dependents = Arc::clone(&dependents);
             let max_depth = Arc::clone(&max_depth);
-            scope.spawn(move || loop {
-                let id = {
-                    let mut q = shared.ready.lock().unwrap();
-                    loop {
-                        if shared.done_count.load(Ordering::SeqCst) >= shared.total {
-                            return;
+            let busy_ns = Arc::clone(&busy_ns);
+            scope.spawn(move || {
+                parallel::with_threads(child_budget, || loop {
+                    let id = {
+                        let mut q = shared.ready.lock().unwrap();
+                        loop {
+                            if shared.done_count.load(Ordering::SeqCst) >= shared.total {
+                                return;
+                            }
+                            if let Some(id) = q.pop_front() {
+                                break id;
+                            }
+                            q = shared.cv.wait(q).unwrap();
                         }
-                        if let Some(id) = q.pop_front() {
-                            break id;
+                    };
+                    // run outside the lock
+                    let f = tasks.lock().unwrap()[id].take().expect("task taken twice");
+                    let tt = Instant::now();
+                    f();
+                    busy_ns.fetch_add(tt.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    shared.done_count.fetch_add(1, Ordering::SeqCst);
+                    // release dependents
+                    {
+                        let mut q = shared.ready.lock().unwrap();
+                        for &d in &dependents[id] {
+                            if shared.remaining[d].fetch_sub(1, Ordering::SeqCst) == 1 {
+                                q.push_back(d);
+                            }
                         }
-                        q = shared.cv.wait(q).unwrap();
-                    }
-                };
-                // run outside the lock
-                let f = tasks.lock().unwrap()[id].take().expect("task taken twice");
-                f();
-                let done = shared.done_count.fetch_add(1, Ordering::SeqCst) + 1;
-                // release dependents
-                {
-                    let mut q = shared.ready.lock().unwrap();
-                    for &d in &dependents[id] {
-                        if shared.remaining[d].fetch_sub(1, Ordering::SeqCst) == 1 {
-                            q.push_back(d);
-                        }
-                    }
-                    let depth = q.len();
-                    max_depth.fetch_max(depth, Ordering::SeqCst);
-                    if done >= shared.total {
+                        let depth = q.len();
+                        max_depth.fetch_max(depth, Ordering::SeqCst);
                         shared.cv.notify_all();
-                    } else {
-                        shared.cv.notify_all();
                     }
-                }
+                })
             });
         }
     });
-    max_depth.load(Ordering::SeqCst)
+    ExecStats {
+        workers,
+        max_ready_depth: max_depth.load(Ordering::SeqCst),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        busy_seconds: busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+    }
 }
 
 #[cfg(test)]
@@ -112,8 +165,10 @@ mod tests {
                 c.fetch_add(1, Ordering::SeqCst);
             });
         }
-        run_graph(g, 4);
+        let stats = run_graph(g, 4);
         assert_eq!(counter.load(Ordering::SeqCst), 50);
+        assert_eq!(stats.workers, 4);
+        assert!(stats.wall_seconds >= 0.0);
     }
 
     #[test]
@@ -133,7 +188,9 @@ mod tests {
 
     #[test]
     fn empty_graph_ok() {
-        assert_eq!(run_graph(TaskGraph::new(), 2), 0);
+        let stats = run_graph(TaskGraph::new(), 2);
+        assert_eq!(stats.max_ready_depth, 0);
+        assert_eq!(stats.busy_seconds, 0.0);
     }
 
     #[test]
@@ -148,5 +205,34 @@ mod tests {
         }
         run_graph(g, 1);
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn workers_see_split_budget() {
+        // 4 workers under a budget of 4: each task must see budget 1
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        for k in 0..16 {
+            let m = Arc::clone(&max_seen);
+            g.add(format!("t{k}"), &[], &[k], move || {
+                m.fetch_max(parallel::current_threads(), Ordering::SeqCst);
+            });
+        }
+        parallel::with_threads(4, || run_graph(g, 4));
+        assert_eq!(max_seen.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn busy_time_accumulates() {
+        let mut g = TaskGraph::new();
+        for k in 0..4 {
+            g.add(format!("t{k}"), &[], &[k], move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            });
+        }
+        let stats = run_graph(g, 2);
+        assert!(stats.busy_seconds >= 0.015, "busy {}", stats.busy_seconds);
+        assert!(stats.speedup() > 0.0);
+        assert!(stats.parallel_efficiency() <= 1.0 + 1e-9);
     }
 }

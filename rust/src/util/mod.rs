@@ -1,5 +1,7 @@
-//! Shared infrastructure: PRNG, timers, table formatting.
+//! Shared infrastructure: PRNG, timers, table formatting, and the
+//! scoped-thread parallel substrate.
 
+pub mod parallel;
 pub mod rng;
 pub mod table;
 pub mod timer;

@@ -1,0 +1,293 @@
+//! Scoped-thread parallel-for infrastructure — the multi-threading substrate
+//! of the whole stack (DESIGN.md §Threading-Model).
+//!
+//! The paper's platform is an 8-core machine running multi-threaded BLAS, a
+//! SuperMatrix-style task runtime, and a parallel tridiagonal eigensolver.
+//! This module is the std-only substitute for the thread-pool layer those
+//! libraries bring along (GotoBLAS threads, SuperMatrix workers, MR³-SMP's
+//! pthreads): data-parallel helpers built on [`std::thread::scope`] plus a
+//! cooperative *thread-budget* protocol that keeps nested parallel regions
+//! (e.g. a task-parallel tile kernel calling a parallel GEMM, or concurrent
+//! coordinator jobs each running a parallel solver) from oversubscribing
+//! the machine.
+//!
+//! ## Configuration
+//!
+//! * `GSYEIG_THREADS=<n>` — environment knob, read once per process.
+//! * [`set_global_threads`] — programmatic override (takes precedence).
+//! * [`with_threads`] — scoped, thread-local budget for one region; this is
+//!   what the schedulers use to give each worker a fair share.
+//!
+//! ## Determinism
+//!
+//! The helpers only split *index spaces*; they never change the arithmetic
+//! performed per index. Callers that keep per-index work self-contained
+//! (as `dstebz`'s per-eigenvalue bisection does) therefore produce results
+//! bitwise identical at every thread count — the property
+//! `tests/prop_threading.rs` pins down.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
+static OVERRIDE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Thread-local budget: 0 = unset (fall back to the global setting).
+    static BUDGET: Cell<usize> = Cell::new(0);
+}
+
+/// The process-wide thread setting: [`set_global_threads`] override if any,
+/// else `GSYEIG_THREADS`, else [`std::thread::available_parallelism`].
+pub fn configured_threads() -> usize {
+    let o = OVERRIDE_THREADS.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    *DEFAULT_THREADS.get_or_init(|| {
+        std::env::var("GSYEIG_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+    })
+}
+
+/// Override the global thread count (0 clears the override).
+pub fn set_global_threads(n: usize) {
+    OVERRIDE_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The thread budget effective on the *current* thread: the innermost
+/// [`with_threads`] scope if any, else the global setting.
+pub fn current_threads() -> usize {
+    let b = BUDGET.with(|b| b.get());
+    if b > 0 {
+        b
+    } else {
+        configured_threads()
+    }
+}
+
+struct BudgetGuard(usize);
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        BUDGET.with(|b| b.set(self.0));
+    }
+}
+
+/// Run `f` with the current thread's budget set to `n` (restored on exit,
+/// including on unwind).  The parallel helpers split their parent's budget
+/// across workers through this, so the *total* live threads stay bounded by
+/// the top-level budget however deeply regions nest.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let prev = BUDGET.with(|b| {
+        let p = b.get();
+        b.set(n.max(1));
+        p
+    });
+    let _guard = BudgetGuard(prev);
+    f()
+}
+
+/// Run `f(i)` for every `i in 0..n`, work-stealing indices over up to
+/// `current_threads()` scoped workers.  Each worker's own budget is the
+/// parent's share, so nested parallel calls degrade to serial instead of
+/// multiplying threads.
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let t = current_threads().min(n);
+    if t <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let child = (current_threads() / t).max(1);
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    let next = &next;
+    std::thread::scope(|s| {
+        for _ in 0..t {
+            s.spawn(move || {
+                with_threads(child, || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                })
+            });
+        }
+    });
+}
+
+/// Consume `items`, calling `f` on each from up to `current_threads()`
+/// scoped workers (round-robin assignment — deterministic, no locking).
+pub fn parallel_items<T, F>(items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let t = current_threads().min(items.len());
+    if t <= 1 {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    let child = (current_threads() / t).max(1);
+    let mut buckets: Vec<Vec<T>> = Vec::new();
+    for _ in 0..t {
+        buckets.push(Vec::new());
+    }
+    for (i, it) in items.into_iter().enumerate() {
+        buckets[i % t].push(it);
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            s.spawn(move || {
+                with_threads(child, || {
+                    for it in bucket {
+                        f(it);
+                    }
+                })
+            });
+        }
+    });
+}
+
+/// Split `data` into contiguous chunks of `chunk` elements (last one
+/// ragged) and run `f(chunk_index, chunk)` on the pieces in parallel.
+/// This is how column-panel updates are distributed: a chunk that is a
+/// multiple of the leading dimension is a disjoint set of whole columns.
+pub fn parallel_chunks<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    let items: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    parallel_items(items, |(ci, c)| f(ci, c));
+}
+
+/// Parallel `(0..n).map(f).collect()`: results land at their index, so the
+/// output is independent of the thread count and of scheduling order.
+pub fn parallel_map<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let t = current_threads().min(n.max(1)).max(1);
+    let chunk = n.div_ceil(t).max(1);
+    parallel_chunks(&mut out, chunk, |ci, slots| {
+        let base = ci * chunk;
+        for (k, slot) in slots.iter_mut().enumerate() {
+            *slot = Some(f(base + k));
+        }
+    });
+    out.into_iter().map(|r| r.expect("parallel_map slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let hits = (0..97).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>();
+        with_threads(4, || {
+            parallel_for(97, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_serial_when_budget_one() {
+        // budget 1 must not spawn: order is exactly 0..n
+        let log = Mutex::new(Vec::new());
+        with_threads(1, || {
+            parallel_for(10, |i| log.lock().unwrap().push(i));
+        });
+        assert_eq!(*log.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_preserves_index_order() {
+        let out = with_threads(8, || parallel_map(53, |i| i * i));
+        let expect: Vec<usize> = (0..53).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn parallel_chunks_partitions_exactly() {
+        let mut data = vec![0usize; 100];
+        with_threads(3, || {
+            parallel_chunks(&mut data, 7, |ci, c| {
+                for (k, v) in c.iter_mut().enumerate() {
+                    *v = ci * 7 + k;
+                }
+            });
+        });
+        let expect: Vec<usize> = (0..100).collect();
+        assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn with_threads_restores_budget() {
+        // pin an outer scope rather than reading the global setting: the
+        // sibling test below mutates OVERRIDE_THREADS concurrently
+        with_threads(7, || {
+            assert_eq!(current_threads(), 7);
+            with_threads(3, || {
+                assert_eq!(current_threads(), 3);
+                with_threads(1, || assert_eq!(current_threads(), 1));
+                assert_eq!(current_threads(), 3);
+            });
+            assert_eq!(current_threads(), 7);
+        });
+    }
+
+    #[test]
+    fn nested_budget_splits_not_multiplies() {
+        // with budget 2, a parallel_for's workers must see budget 1
+        let max_inner = AtomicUsize::new(0);
+        with_threads(2, || {
+            parallel_for(4, |_| {
+                max_inner.fetch_max(current_threads(), Ordering::SeqCst);
+            });
+        });
+        assert_eq!(max_inner.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn global_override_wins() {
+        // note: touches process-global state; keep the override scoped
+        set_global_threads(5);
+        assert_eq!(configured_threads(), 5);
+        set_global_threads(0);
+        assert!(configured_threads() >= 1);
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        parallel_for(0, |_| panic!("must not run"));
+        let out: Vec<usize> = parallel_map(0, |i| i);
+        assert!(out.is_empty());
+        let mut empty: Vec<f64> = vec![];
+        parallel_chunks(&mut empty, 4, |_, _| panic!("must not run"));
+    }
+}

@@ -110,6 +110,43 @@ fn queue_backpressure_bounds_depth() {
 }
 
 #[test]
+fn concurrent_producers_with_backpressure() {
+    // several producer threads race on submit() while the worker pool
+    // drains under a tiny queue capacity — every job must complete exactly
+    // once and the outcome list must stay sorted by id.
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        queue_capacity: 2,
+        ..Default::default()
+    });
+    std::thread::scope(|scope| {
+        let c = &coord;
+        let producers: Vec<_> = (0..3u64)
+            .map(|p| {
+                scope.spawn(move || {
+                    for k in 0..4u64 {
+                        let id = p * 4 + k;
+                        c.submit(Job { id, spec: inline_spec(40, 2, id) }).ok().unwrap();
+                    }
+                })
+            })
+            .collect();
+        scope.spawn(move || {
+            for h in producers {
+                h.join().unwrap();
+            }
+            c.close();
+        });
+        let out = c.run_to_completion();
+        assert_eq!(out.len(), 12);
+        let ids: Vec<u64> = out.iter().map(|o| o.id).collect();
+        assert_eq!(ids, (0..12).collect::<Vec<u64>>(), "sorted, no dupes, no losses");
+        assert!(out.iter().all(|o| o.converged));
+    });
+    assert_eq!(coord.metrics().jobs_done, 12);
+}
+
+#[test]
 fn outcome_vectors_are_b_orthonormal() {
     let coord = Coordinator::new(CoordinatorConfig::default());
     coord.submit(Job { id: 0, spec: inline_spec(80, 3, 9) }).ok().unwrap();

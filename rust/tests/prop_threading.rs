@@ -1,0 +1,164 @@
+//! Determinism under threading (DESIGN.md §Threading-Model): the parallel
+//! decompositions split index spaces without changing per-index arithmetic,
+//! so results must not depend on the thread count.
+//!
+//! * `dstebz` — per-eigenvalue bisection: **bitwise** identical at 1, 2, 8
+//!   threads.
+//! * `dstein` — cluster-parallel inverse iteration with per-vector PRNGs:
+//!   identical to tight tolerance.
+//! * tiled `potrf` / `sygst` — DAG execution under 1, 2, 8 workers agrees
+//!   with the dense reference (dependency edges force the same per-tile
+//!   accumulation order whatever the interleaving).
+
+use gsyeig::lapack::potrf::dpotrf_upper;
+use gsyeig::lapack::stebz::dstebz;
+use gsyeig::lapack::stein::dstein;
+use gsyeig::lapack::sygst::sygst_trsm;
+use gsyeig::matrix::{Matrix, SymTridiag};
+use gsyeig::taskpar::{tiled_potrf, tiled_sygst_trsm, TiledMatrix};
+use gsyeig::testing::{check_property, dim_in};
+use gsyeig::util::parallel::with_threads;
+use gsyeig::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn random_tridiag(rng: &mut Rng, n: usize) -> SymTridiag {
+    SymTridiag::new(
+        (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect(),
+        (0..n - 1).map(|_| rng.uniform_in(0.1, 1.5)).collect(),
+    )
+}
+
+fn spd(n: usize, rng: &mut Rng) -> Matrix {
+    let mut b = Matrix::randn_sym(n, rng);
+    for i in 0..n {
+        b[(i, i)] += n as f64 + 4.0;
+    }
+    b
+}
+
+#[test]
+fn dstebz_bitwise_identical_across_thread_counts() {
+    check_property("dstebz thread determinism", 24, |rng| {
+        // sizes straddle the PAR_MIN_WORK gate so both the in-place and the
+        // forked path are exercised across iterations
+        let n = dim_in(rng, 16, 90);
+        let t = random_tridiag(rng, n);
+        let il = rng.below(n / 2);
+        let iu = il + rng.below(n - il);
+        let base = with_threads(1, || dstebz(&t, il, iu));
+        for threads in THREAD_COUNTS {
+            let got = with_threads(threads, || dstebz(&t, il, iu));
+            if got.len() != base.len() {
+                return Err(format!("length {} vs {}", got.len(), base.len()));
+            }
+            for (k, (a, b)) in base.iter().zip(&got).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "eigenvalue {k} differs at {threads} threads: {a:?} vs {b:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dstein_identical_across_thread_counts() {
+    check_property("dstein thread determinism", 16, |rng| {
+        // n*s straddles the PAR_MIN_WORK gate (see stebz note above)
+        let n = dim_in(rng, 40, 120);
+        let t = random_tridiag(rng, n);
+        let s = 1 + rng.below(n.min(24));
+        let lams = dstebz(&t, 0, s - 1);
+        let base = with_threads(1, || dstein(&t, &lams));
+        for threads in THREAD_COUNTS {
+            let got = with_threads(threads, || dstein(&t, &lams));
+            let diff = base.max_abs_diff(&got);
+            if diff > 1e-12 {
+                return Err(format!("dstein diff {diff:.2e} at {threads} threads"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_potrf_matches_dense_at_every_worker_count() {
+    check_property("tiled potrf thread determinism", 12, |rng| {
+        let n = dim_in(rng, 24, 72);
+        let nb = [8, 16, 24][rng.below(3)];
+        let b = spd(n, rng);
+        let mut expect = b.clone();
+        dpotrf_upper(n, expect.as_mut_slice(), n).map_err(|e| format!("{e:?}"))?;
+        expect.zero_lower();
+        let scale = b.frobenius_norm().max(1.0);
+        for threads in THREAD_COUNTS {
+            let tiled = TiledMatrix::from_dense(&b, nb);
+            let stats = with_threads(threads, || tiled_potrf(&tiled, threads));
+            if stats.tasks == 0 {
+                return Err("no tasks executed".into());
+            }
+            let mut got = tiled.to_dense();
+            got.zero_lower();
+            let diff = got.max_abs_diff(&expect);
+            if diff > 1e-9 * scale {
+                return Err(format!(
+                    "n={n} nb={nb} workers={threads}: diff {diff:.2e}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tiled_sygst_matches_dense_at_every_worker_count() {
+    check_property("tiled sygst thread determinism", 8, |rng| {
+        let n = dim_in(rng, 24, 60);
+        let nb = [8, 16][rng.below(2)];
+        let a = Matrix::randn_sym(n, rng);
+        let b = spd(n, rng);
+        let mut u = b.clone();
+        dpotrf_upper(n, u.as_mut_slice(), n).map_err(|e| format!("{e:?}"))?;
+        u.zero_lower();
+        let mut expect = a.clone();
+        sygst_trsm(n, expect.as_mut_slice(), n, u.as_slice(), n);
+        let scale = expect.frobenius_norm().max(1.0);
+        for threads in THREAD_COUNTS {
+            let at = TiledMatrix::from_dense(&a, nb);
+            let ut = TiledMatrix::from_dense(&u, nb);
+            with_threads(threads, || tiled_sygst_trsm(&at, &ut, threads));
+            let mut got = at.to_dense();
+            got.symmetrize();
+            let diff = got.max_abs_diff(&expect);
+            if diff > 1e-8 * scale {
+                return Err(format!(
+                    "n={n} nb={nb} workers={threads}: diff {diff:.2e}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_gemm_speedup_sanity() {
+    // Not a perf assertion (CI machines vary) — just drive the threaded
+    // dgemm path end-to-end above its work threshold and check equality.
+    use gsyeig::blas::{dgemm, Trans};
+    let mut rng = Rng::new(0xBEEF);
+    let (m, n, k) = (160, 120, 160);
+    let a = Matrix::randn(m, k, &mut rng);
+    let b = Matrix::randn(k, n, &mut rng);
+    let mut c1 = Matrix::zeros(m, n);
+    with_threads(1, || {
+        dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, c1.as_mut_slice(), m);
+    });
+    let mut c8 = Matrix::zeros(m, n);
+    with_threads(8, || {
+        dgemm(Trans::N, Trans::N, m, n, k, 1.0, a.as_slice(), m, b.as_slice(), k, 0.0, c8.as_mut_slice(), m);
+    });
+    assert_eq!(c1.max_abs_diff(&c8), 0.0);
+}
