@@ -61,6 +61,7 @@ fn main() {
                 s,
                 variant: None,                   // router decides (§6 policy)
                 b_cache_key: Some(cycle as u64), // B shared within the cycle
+                exec_threads: None,              // coordinator sizes the ctx
             };
             coord.submit(Job { id: k, spec }).ok().expect("queue closed");
         }

@@ -9,7 +9,7 @@
 //! make artifacts && cargo run --release --example pjrt_offload
 //! ```
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
 use gsyeig::solver::accuracy::Accuracy;
@@ -22,7 +22,7 @@ fn main() {
     workload.s = 4;
     let (problem, which, truth_inv) = workload.solver_problem();
 
-    let registry = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let registry = Arc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
     println!(
         "PJRT platform: {}   artifacts: {}   device budget: {} MiB\n",
         registry.runtime.platform(),
@@ -35,7 +35,7 @@ fn main() {
         let cfg = SolverConfig::new(Variant::KE, workload.s, which);
         let sol = if offload {
             use gsyeig::solver::backend::Kernels;
-            let kernels = OffloadKernels::new(Rc::clone(&registry));
+            let kernels = OffloadKernels::new(Arc::clone(&registry));
             kernels.warm_up(n); // compile the artifacts outside the timings
             GsyeigSolver::with_kernels(cfg, kernels).solve(problem.clone())
         } else {

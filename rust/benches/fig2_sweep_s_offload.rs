@@ -1,5 +1,5 @@
 //! Figure 2: execution time of TD/KE/KI vs s with the offloaded kernels.
-use std::rc::Rc;
+use std::sync::Arc;
 use gsyeig::bench::{fig_sweep, ExperimentKind, ExperimentScale};
 use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
 
@@ -7,7 +7,7 @@ fn main() {
     let scale = ExperimentScale::from_env();
     let n = scale.md_n;
     let svals: Vec<usize> = [n/200, n/100, n/40, n/20, n/10].into_iter().map(|s| s.max(1)).collect();
-    let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let reg = Arc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
     let kernels = OffloadKernels::new(reg);
     let (csv, txt) = fig_sweep(ExperimentKind::Md, &scale, &kernels, &svals, "Figure 2 analog (offload)");
     println!("{txt}");

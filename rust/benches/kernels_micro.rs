@@ -69,12 +69,12 @@ fn main() {
 #[cfg(feature = "pjrt")]
 fn pjrt_roundtrip_microbench(rng: &mut Rng) {
     use gsyeig::runtime::ArtifactRegistry;
-    use std::rc::Rc;
+    use std::sync::Arc;
     if let Ok(reg) = ArtifactRegistry::load_default() {
-        let reg = Rc::new(reg);
+        let reg = Arc::new(reg);
         let n = 256;
         let c = Matrix::randn_sym(n, rng);
-        if let Ok(op) = gsyeig::runtime::offload::OffloadExplicitOp::new(Rc::clone(&reg), &c) {
+        if let Ok(op) = gsyeig::runtime::offload::OffloadExplicitOp::new(Arc::clone(&reg), &c) {
             use gsyeig::lanczos::operator::SymOp;
             let x: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
             let mut y = vec![0.0; n];

@@ -3,14 +3,14 @@
 //! (the paper's bold-face entries).  KI's fused operator reports under
 //! "KI123"; at DFT scale it exceeds the scaled device-memory budget and
 //! falls back to the native KI1/KI2/KI3 — exactly the paper's case.
-use std::rc::Rc;
+use std::sync::Arc;
 use gsyeig::bench::{run_stage_table, ExperimentKind, ExperimentScale};
 use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
 use gsyeig::solver::gsyeig::Variant;
 
 fn main() {
     let scale = ExperimentScale::from_env();
-    let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let reg = Arc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
     println!("device-memory budget: {} MiB (C2050's 3 GB scaled /100 — DESIGN.md)", reg.device_memory_bytes / (1024*1024));
     let kernels = OffloadKernels::new(reg);
     for kind in [ExperimentKind::Md, ExperimentKind::Dft] {

@@ -1,12 +1,12 @@
 //! Table 7: accuracy of the offloaded (conventional+modern) solvers.
-use std::rc::Rc;
+use std::sync::Arc;
 use gsyeig::bench::{run_accuracy_table, run_stage_table, ExperimentKind, ExperimentScale};
 use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
 use gsyeig::solver::gsyeig::Variant;
 
 fn main() {
     let scale = ExperimentScale::from_env();
-    let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let reg = Arc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
     let kernels = OffloadKernels::new(reg);
     for kind in [ExperimentKind::Md, ExperimentKind::Dft] {
         let t = run_stage_table(kind, &scale, &kernels, &Variant::ALL);

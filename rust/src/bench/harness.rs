@@ -296,7 +296,10 @@ pub fn run_table4(kind: ExperimentKind, scale: &ExperimentScale, workers: usize,
 
     let mut t = Table::new(
         &format!("Table 4 analog — {} (n={n}, nb={nb}, workers={workers})", kind.label()),
-        &["Key", "sequential", "task-parallel", "DAG tasks", "width", "crit.path", "avg par", "meas eff"],
+        &[
+            "Key", "sequential", "task-parallel", "DAG tasks", "width", "crit.path", "avg par",
+            "meas eff", "steals", "idle",
+        ],
     );
     t.row(vec![
         "GS1".into(),
@@ -307,6 +310,8 @@ pub fn run_table4(kind: ExperimentKind, scale: &ExperimentScale, workers: usize,
         s1.critical_path.to_string(),
         format!("{:.1}", s1.avg_parallelism),
         format!("{:.2}", s1.parallel_efficiency),
+        s1.steals.to_string(),
+        s1.idle_waits.to_string(),
     ]);
     t.row(vec![
         "GS2".into(),
@@ -317,11 +322,14 @@ pub fn run_table4(kind: ExperimentKind, scale: &ExperimentScale, workers: usize,
         s2.critical_path.to_string(),
         format!("{:.1}", s2.avg_parallelism),
         format!("{:.2}", s2.parallel_efficiency),
+        s2.steals.to_string(),
+        s2.idle_waits.to_string(),
     ]);
     let mut out = t.render();
     out.push_str(&format!(
         "  tiled-vs-sequential GS2 relative error: {err:.2e}\n  DAG width/crit.path = available \
-         parallelism; 'meas eff' = measured busy/(wall*workers).\n  For the wall-clock \
+         parallelism; 'meas eff' = measured busy/(wall*workers);\n  'steals'/'idle' = \
+         work-stealing scheduler counters (DESIGN.md §3).\n  For the wall-clock \
          speedup-vs-threads axis, see the thread sweep (DESIGN.md §Hardware-Adaptation).\n"
     ));
     out
@@ -344,7 +352,7 @@ pub fn run_table4_thread_sweep(n: usize, nb: usize, threads: &[usize]) -> String
     }
     let mut t = Table::new(
         &format!("Table 4 thread sweep — tiled Cholesky GS1 (n={n}, nb={nb})"),
-        &["threads", "seconds", "speedup", "efficiency", "meas DAG eff"],
+        &["threads", "seconds", "speedup", "efficiency", "meas DAG eff", "steals"],
     );
     let mut base = None::<f64>;
     for &w in threads {
@@ -361,6 +369,7 @@ pub fn run_table4_thread_sweep(n: usize, nb: usize, threads: &[usize]) -> String
             format!("{speedup:.2}"),
             format!("{:.2}", speedup / w as f64),
             format!("{:.2}", stats.parallel_efficiency),
+            stats.steals.to_string(),
         ]);
     }
     let mut out = t.render();

@@ -5,16 +5,20 @@
 //! triangular dimension with `dgemm` updates — these two carry GS2, BT1 and
 //! the Q-accumulations, i.e. every Level-3 row of the paper's Table 1.
 //!
-//! Large `dgemm` calls split their C column panels across the
-//! [`crate::util::parallel`] thread budget — the multi-threaded-BLAS role
-//! of the paper's platform.  `dtrsm`/`dsyrk` inherit the parallelism
-//! through their trailing `dgemm` updates, so every blocked consumer
-//! (Cholesky, DSYGST, SBR, back-transform) scales without further changes.
-//! Each column of C is produced by exactly one worker with the same
-//! arithmetic as the serial loop, so results are bitwise independent of
-//! the thread count.
+//! Large `dgemm` calls split their C column panels across the ambient
+//! [`crate::util::parallel::ExecCtx`] — the multi-threaded-BLAS role of
+//! the paper's platform.  The ctx reaches here ambiently: solvers install
+//! their job ctx, so the same `dgemm` call site serves a 1-thread small
+//! job and an 8-thread DFT solve without a signature change.
+//! `dtrsm`/`dsyrk` inherit the parallelism through their trailing `dgemm`
+//! updates, so every blocked consumer (Cholesky, DSYGST, SBR,
+//! back-transform) scales without further changes.  Panel assignment is
+//! **static** (stealing is for ragged work; GEMM panels are uniform): each
+//! column of C is produced by exactly one worker with the same arithmetic
+//! as the serial loop, so results are bitwise independent of the thread
+//! count.
 
-use crate::util::parallel;
+use crate::util::parallel::{self, ExecCtx};
 
 use super::{Diag, Side, Trans, Uplo};
 
@@ -65,8 +69,11 @@ pub fn dgemm(
     }
     match (transa, transb) {
         (Trans::N, Trans::N) => {
+            // size short-circuit first: small GEMMs (the per-tile hot
+            // path) must not pay the thread-local ctx lookup
             if m * n * k >= PAR_MIN_WORK && n >= 2 && parallel::current_threads() > 1 {
-                par_columns(m, n, c, ldc, |j0, ncols, panel| {
+                let ctx = ExecCtx::current();
+                par_columns(&ctx, m, n, c, ldc, |j0, ncols, panel| {
                     gemm_nn(m, ncols, k, alpha, a, lda, &b[j0 * ldb..], ldb, panel, ldc);
                 });
             } else {
@@ -75,7 +82,8 @@ pub fn dgemm(
         }
         (Trans::T, Trans::N) => {
             if m * n * k >= PAR_MIN_WORK && n >= 2 && parallel::current_threads() > 1 {
-                par_columns(m, n, c, ldc, |j0, ncols, panel| {
+                let ctx = ExecCtx::current();
+                par_columns(&ctx, m, n, c, ldc, |j0, ncols, panel| {
                     gemm_tn(m, ncols, k, alpha, a, lda, &b[j0 * ldb..], ldb, panel, ldc);
                 });
             } else {
@@ -113,17 +121,17 @@ pub fn dgemm(
 
 /// Split the columns of C into contiguous panels (chunks that are whole
 /// multiples of `ldc`, so each panel is a disjoint `&mut` region) and run
-/// `f(first_col, ncols, panel)` on the pieces across the thread budget.
-fn par_columns<F>(m: usize, n: usize, c: &mut [f64], ldc: usize, f: F)
+/// `f(first_col, ncols, panel)` on the pieces across `ctx`'s budget.
+fn par_columns<F>(ctx: &ExecCtx, m: usize, n: usize, c: &mut [f64], ldc: usize, f: F)
 where
     F: Fn(usize, usize, &mut [f64]) + Sync,
 {
-    let t = parallel::current_threads().min(n);
+    let t = ctx.threads().min(n);
     let cols_per = n.div_ceil(t);
     // trim to the exact extent gemm panels index so the last chunk has the
     // expected (ncols-1)*ldc + m length
     let used = &mut c[..(n - 1) * ldc + m];
-    parallel::parallel_chunks(used, cols_per * ldc, |ci, panel| {
+    ctx.parallel_chunks(used, cols_per * ldc, |ci, panel| {
         let j0 = ci * cols_per;
         let ncols = cols_per.min(n - j0);
         f(j0, ncols, panel);
@@ -233,12 +241,15 @@ fn gemm_nn(
                     p += 4;
                 }
                 while p < pe {
+                    // no t == 0.0 skip: this tail must perform exactly the
+                    // arithmetic of the pair-kernel tail above, because
+                    // which kernel serves a column depends on the panel
+                    // split — skipping here would break the bitwise
+                    // thread-count independence on ±0.0/non-finite inputs
                     let t = alpha * b[p + j * ldb];
-                    if t != 0.0 {
-                        let acol = &a[ii + p * lda..ii + p * lda + mb];
-                        for i in 0..mb {
-                            ccol[i] += t * acol[i];
-                        }
+                    let acol = &a[ii + p * lda..ii + p * lda + mb];
+                    for i in 0..mb {
+                        ccol[i] += t * acol[i];
                     }
                     p += 1;
                 }

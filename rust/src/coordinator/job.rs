@@ -57,6 +57,10 @@ pub struct JobSpec {
     /// Key for the Cholesky-factor cache: jobs sharing a B matrix (e.g.
     /// all k-points of one SCF cycle) should share a key.
     pub b_cache_key: Option<u64>,
+    /// Force a thread budget for this job's `ExecCtx`; `None` lets the
+    /// coordinator size it by problem dimension
+    /// ([`super::router::job_thread_budget`]).
+    pub exec_threads: Option<usize>,
 }
 
 pub struct Job {
@@ -81,4 +85,6 @@ pub struct JobOutcome {
     pub converged: bool,
     /// Whether GS1 was served from the factor cache.
     pub gs1_cached: bool,
+    /// Thread budget the coordinator granted this job's `ExecCtx`.
+    pub ctx_threads: usize,
 }

@@ -10,10 +10,12 @@
 //! * [`queue`] — bounded job queue with backpressure;
 //! * [`router`] — variant auto-selection implementing the paper's §6
 //!   guidance (Krylov when only 3–5 % of the spectrum is wanted, KI when
-//!   `C` cannot be afforded, TD otherwise);
-//! * [`server`] — worker pool executing jobs, with a Cholesky-factor cache
-//!   keyed by the B-matrix fingerprint (within an SCF cycle every k-point
-//!   shares B — GS1 is paid once);
+//!   `C` cannot be afforded, TD otherwise), plus the per-job thread-budget
+//!   sizing policy ([`router::job_thread_budget`]);
+//! * [`server`] — worker pool executing jobs, each under its own
+//!   dimension-sized `ExecCtx`, with a Cholesky-factor cache keyed by the
+//!   B-matrix fingerprint (within an SCF cycle every k-point shares B —
+//!   GS1 is paid once);
 //! * [`metrics`] — throughput/latency accounting.
 
 pub mod job;
@@ -24,5 +26,5 @@ pub mod server;
 
 pub use job::{Job, JobOutcome, JobSpec, WorkloadSpec};
 pub use queue::BoundedQueue;
-pub use router::{select_variant, RouterConfig};
+pub use router::{job_thread_budget, select_variant, RouterConfig};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -25,6 +25,36 @@ impl Default for RouterConfig {
     }
 }
 
+/// Below this problem dimension a job gets a single lane: the whole solve
+/// is microseconds of work and scoped-thread spawns would dominate.
+pub const SMALL_JOB_N: usize = 64;
+/// At or above this dimension a job *wishes* for more than the uniform
+/// `threads / workers` share (up to 2× it): in ragged job streams the
+/// other workers are mostly parked on small jobs, so the big solve can
+/// use lanes that would otherwise idle.  The wish is then clamped by the
+/// server against the lanes *actually* granted to in-flight jobs
+/// (`Coordinator::run_to_completion`), so a homogeneous stream of big
+/// jobs cannot run at sustained oversubscription — the aggregate grant
+/// stays within the budget (+1 lane per worker worst case, since every
+/// job is guaranteed at least one lane).
+pub const BIG_JOB_N: usize = 256;
+
+/// Per-job thread-budget *wish*: how many lanes a job of dimension `n`
+/// would like out of `total` budget shared by `workers` concurrent
+/// workers.  Replaces the uniform `total / workers` split (ROADMAP: "big
+/// solves get more lanes than small ones"); the server clamps the wish
+/// against current occupancy before granting.
+pub fn job_thread_budget(total: usize, workers: usize, n: usize) -> usize {
+    let base = (total / workers.max(1)).max(1);
+    if n < SMALL_JOB_N {
+        1
+    } else if n >= BIG_JOB_N {
+        (base * 2).min(total.max(1))
+    } else {
+        base
+    }
+}
+
 /// Pick a variant for an (n, s) problem.  Returns the variant and the rule
 /// that fired (logged in job outcomes).
 pub fn select_variant(n: usize, s: usize, cfg: &RouterConfig) -> (Variant, &'static str) {
@@ -75,6 +105,17 @@ mod tests {
         assert_eq!(v5, Variant::KE);
         let (v6, _) = select_variant(1000, 60, &cfg); // 6%
         assert_eq!(v6, Variant::TD);
+    }
+
+    #[test]
+    fn job_budget_scales_with_dimension() {
+        // 8 threads over 2 workers: base share is 4
+        assert_eq!(job_thread_budget(8, 2, 40), 1, "small jobs get one lane");
+        assert_eq!(job_thread_budget(8, 2, 128), 4, "mid jobs get the share");
+        assert_eq!(job_thread_budget(8, 2, 512), 8, "big jobs get extra lanes");
+        // never exceeds the total, never below one
+        assert_eq!(job_thread_budget(2, 4, 1000), 2);
+        assert_eq!(job_thread_budget(1, 1, 10), 1);
     }
 
     #[test]

@@ -1,18 +1,20 @@
 //! The coordinator server: worker pool over the job queue, with router
 //! integration and a Cholesky-factor cache for SCF-style job streams.
 //!
-//! Concurrent jobs and intra-job threads share one budget: each worker
-//! runs its jobs under `current_threads() / workers` via
-//! [`crate::util::parallel::with_threads`], so a 2-worker coordinator on
-//! an 8-thread budget gives every solver 4 BLAS threads instead of letting
-//! `workers × threads` oversubscribe the machine (DESIGN.md
-//! §Threading-Model).
+//! Concurrent jobs and intra-job threads share one budget, but not
+//! uniformly: each job gets its own [`ExecCtx`] sized by problem dimension
+//! ([`super::router::job_thread_budget`]) — a small solve runs on one lane
+//! (its work wouldn't amortize a thread spawn), a big solve may take up to
+//! twice the `threads / workers` share because its neighbours are mostly
+//! parked on small jobs.  The job ctx is installed for the whole solve, so
+//! every stage down to the panel GEMM sees the same budget (DESIGN.md §3
+//! Threading-Model).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::util::parallel;
+use crate::util::parallel::{self, ExecCtx};
 
 use crate::lapack::LapackError;
 use crate::matrix::Matrix;
@@ -23,7 +25,7 @@ use crate::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant};
 use super::job::{Job, JobOutcome};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::queue::BoundedQueue;
-use super::router::{select_variant, RouterConfig};
+use super::router::{job_thread_budget, select_variant, RouterConfig};
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -132,8 +134,15 @@ impl Coordinator {
     pub fn run_to_completion(&self) -> Vec<JobOutcome> {
         let factor_cache: Arc<Mutex<HashMap<u64, Matrix>>> = Arc::new(Mutex::new(HashMap::new()));
         let workers = self.config.workers.max(1);
-        // one shared thread budget: workers × per-job threads ≤ the budget
-        let per_worker_threads = (parallel::current_threads() / workers).max(1);
+        // the shared budget the per-job ctxs are carved from, and the
+        // lanes currently granted to in-flight jobs: a job's wish
+        // (dimension-sized, router::job_thread_budget) is clamped against
+        // what is actually free, so a homogeneous stream of big jobs
+        // cannot run at sustained oversubscription (aggregate grant ≤
+        // budget + one guaranteed lane per worker)
+        let total_threads = parallel::current_threads();
+        let lanes_in_use = std::sync::atomic::AtomicUsize::new(0);
+        let lanes_in_use = &lanes_in_use;
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 let queue = Arc::clone(&self.queue);
@@ -142,13 +151,31 @@ impl Coordinator {
                 let cache = Arc::clone(&factor_cache);
                 let router_cfg = self.config.router;
                 scope.spawn(move || {
-                    parallel::with_threads(per_worker_threads, || {
-                        while let Some(job) = queue.pop() {
-                            let outcome = execute_job(job, &cache, &router_cfg);
-                            metrics.record(outcome.total_seconds, outcome.gs1_cached, outcome.matvecs);
-                            results.lock().unwrap().push(outcome);
+                    while let Some(job) = queue.pop() {
+                        // per-job ctx sized by problem dimension (caller
+                        // override wins) — not the uniform workers split
+                        let wish = job
+                            .spec
+                            .exec_threads
+                            .unwrap_or_else(|| {
+                                job_thread_budget(total_threads, workers, job.spec.workload.n())
+                            })
+                            .max(1);
+                        // claim the wish, then give back what exceeds the
+                        // free lanes (fetch_add serializes the claims, so
+                        // concurrent grants never double-spend a lane)
+                        let prev = lanes_in_use.fetch_add(wish, Ordering::SeqCst);
+                        let budget = wish.min(total_threads.saturating_sub(prev).max(1));
+                        if budget < wish {
+                            lanes_in_use.fetch_sub(wish - budget, Ordering::SeqCst);
                         }
-                    })
+                        let ctx = ExecCtx::with_threads(budget);
+                        let outcome =
+                            ctx.install(|| execute_job(job, &cache, &router_cfg, &ctx));
+                        lanes_in_use.fetch_sub(budget, Ordering::SeqCst);
+                        metrics.record(outcome.total_seconds, outcome.gs1_cached, outcome.matvecs);
+                        results.lock().unwrap().push(outcome);
+                    }
                 });
             }
         });
@@ -162,6 +189,7 @@ fn execute_job(
     job: Job,
     cache: &Arc<Mutex<HashMap<u64, Matrix>>>,
     router_cfg: &RouterConfig,
+    ctx: &ExecCtx,
 ) -> JobOutcome {
     let (problem, which) = job.spec.workload.realize();
     let n = problem.n();
@@ -180,7 +208,9 @@ fn execute_job(
         key: job.spec.b_cache_key,
         hit: AtomicBool::new(false),
     };
-    let cfg = SolverConfig::new(variant, s, which);
+    let mut cfg = SolverConfig::new(variant, s, which);
+    cfg.exec = ctx.clone();
+    let ctx_threads = ctx.threads();
     let solver = GsyeigSolver::with_kernels(cfg, kernels);
     let t0 = std::time::Instant::now();
     let sol = solver.solve(problem);
@@ -199,6 +229,7 @@ fn execute_job(
         matvecs: sol.matvecs,
         converged: sol.converged,
         gs1_cached: solver.kernels.hit.load(Ordering::Relaxed),
+        ctx_threads,
     }
 }
 
@@ -218,6 +249,7 @@ mod tests {
             s,
             variant: None,
             b_cache_key: None,
+            exec_threads: None,
         }
     }
 
@@ -270,6 +302,7 @@ mod tests {
                 s: 2,
                 variant: Some(Variant::TD),
                 b_cache_key: Some(42),
+                exec_threads: None,
             };
             coord.submit(Job { id, spec }).ok().unwrap();
         }
@@ -277,6 +310,58 @@ mod tests {
         let out = coord.run_to_completion();
         let hits = out.iter().filter(|o| o.gs1_cached).count();
         assert_eq!(hits, 2, "second and third jobs must reuse the factor");
+    }
+
+    #[test]
+    fn big_jobs_get_bigger_ctx_budgets() {
+        use crate::util::parallel::with_threads;
+        // one small (n=40 → 1 lane) and one big (n=260 → wishes 2× the
+        // worker share) job under a pinned 8-thread budget, 2 workers.
+        // The big grant is 8 or 7 depending on which worker claims first
+        // (the occupancy clamp may have lent the small job its lane), so
+        // assert the ordering property, not an exact value.
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        coord.submit(Job { id: 0, spec: inline_spec(40, 2, 1) }).ok().unwrap();
+        coord.submit(Job { id: 1, spec: inline_spec(260, 2, 2) }).ok().unwrap();
+        coord.close();
+        let out = with_threads(8, || coord.run_to_completion());
+        assert_eq!(out[0].ctx_threads, 1, "small job should run on one lane");
+        assert!(
+            out[1].ctx_threads >= 4 && out[1].ctx_threads > out[0].ctx_threads,
+            "big job should beat the uniform share, got {}",
+            out[1].ctx_threads
+        );
+        assert!(out[0].converged && out[1].converged);
+    }
+
+    #[test]
+    fn homogeneous_big_stream_stays_within_budget() {
+        use crate::util::parallel::with_threads;
+        // two big jobs on 2 workers under an 8-thread budget: the
+        // occupancy clamp must keep the aggregate grant ≈ the budget
+        // instead of giving both jobs 8 lanes (16 sustained threads)
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        coord.submit(Job { id: 0, spec: inline_spec(260, 2, 4) }).ok().unwrap();
+        coord.submit(Job { id: 1, spec: inline_spec(260, 2, 5) }).ok().unwrap();
+        coord.close();
+        let out = with_threads(8, || coord.run_to_completion());
+        let sum: usize = out.iter().map(|o| o.ctx_threads).sum();
+        // ≤ budget + one guaranteed lane per extra concurrent job; if the
+        // jobs happened to run sequentially both may see a free machine
+        assert!(sum <= 8 + 1 || out.iter().all(|o| o.ctx_threads == 8), "grants {sum}");
+        assert!(out.iter().all(|o| o.converged));
+    }
+
+    #[test]
+    fn explicit_exec_threads_override_wins() {
+        use crate::util::parallel::with_threads;
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        let mut spec = inline_spec(260, 2, 3);
+        spec.exec_threads = Some(3);
+        coord.submit(Job { id: 0, spec }).ok().unwrap();
+        coord.close();
+        let out = with_threads(8, || coord.run_to_completion());
+        assert_eq!(out[0].ctx_threads, 3);
     }
 
     #[test]

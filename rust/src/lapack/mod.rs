@@ -24,8 +24,8 @@ pub use householder::{dgeqr2, dlarf_left, dlarfg, dlarft_forward_columnwise};
 pub use syev::dsyev;
 pub use ormtr::{dorgtr_lower, dormtr_lower};
 pub use potrf::{dpotf2_upper, dpotrf_upper};
-pub use stebz::dstebz;
-pub use stein::dstein;
+pub use stebz::{dstebz, dstebz_ctx};
+pub use stein::{dstein, dstein_ctx};
 pub use steqr::{dsteqr, dsterf};
 pub use sygst::{dsygst_blocked, sygst_trsm};
 pub use sytrd::{dsytd2_lower, dsytrd_lower};

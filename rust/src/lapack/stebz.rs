@@ -14,7 +14,7 @@
 //! at every thread count (asserted by `tests/prop_threading.rs`).
 
 use crate::matrix::SymTridiag;
-use crate::util::parallel;
+use crate::util::parallel::ExecCtx;
 
 /// Minimum `n * subset_size` before bisection is worth forking threads for;
 /// below this the whole subset is microseconds of Sturm counts and the
@@ -23,9 +23,18 @@ use crate::util::parallel;
 const PAR_MIN_WORK: usize = 2048;
 
 /// Compute eigenvalues `il..=iu` (0-based, ascending order) of `t` by
-/// Sturm-count bisection.  Each eigenvalue is located independently to
-/// nearly machine precision; independent indices run in parallel.
+/// Sturm-count bisection under the ambient [`ExecCtx`].
 pub fn dstebz(t: &SymTridiag, il: usize, iu: usize) -> Vec<f64> {
+    dstebz_ctx(t, il, iu, &ExecCtx::current())
+}
+
+/// [`dstebz`] with an explicit execution context.  Each eigenvalue is
+/// located independently to nearly machine precision; independent indices
+/// are **statically** split across `ctx`'s budget (per-index work is
+/// uniform — a fixed Sturm-bisection depth — so stealing buys nothing and
+/// static splitting keeps the path allocation-free and bitwise
+/// deterministic).
+pub fn dstebz_ctx(t: &SymTridiag, il: usize, iu: usize, ctx: &ExecCtx) -> Vec<f64> {
     let n = t.n();
     assert!(il <= iu && iu < n, "index range {il}..={iu} out of 0..{n}");
     let (glo, ghi) = t.gershgorin();
@@ -55,7 +64,7 @@ pub fn dstebz(t: &SymTridiag, il: usize, iu: usize) -> Vec<f64> {
     if n * m < PAR_MIN_WORK {
         (0..m).map(locate).collect()
     } else {
-        parallel::parallel_map(m, locate)
+        ctx.parallel_map(m, locate)
     }
 }
 

@@ -9,6 +9,7 @@
 
 use crate::blas::{ddot, dnrm2};
 use crate::matrix::{Matrix, SymTridiag};
+use crate::util::parallel::ExecCtx;
 use crate::util::rng::Rng;
 
 /// Relative gap below which consecutive eigenvalues are treated as one
@@ -95,17 +96,25 @@ fn solve_shifted(t: &SymTridiag, lam: f64, b: &[f64], pivmin: f64) -> Vec<f64> {
     x
 }
 
-/// Eigenvectors for the given (ascending) eigenvalues of `t`; returns an
-/// n x s column-orthonormal matrix.
+/// Eigenvectors for the given (ascending) eigenvalues of `t` under the
+/// ambient [`ExecCtx`]; returns an n x s column-orthonormal matrix.
+pub fn dstein(t: &SymTridiag, lambdas: &[f64]) -> Matrix {
+    dstein_ctx(t, lambdas, &ExecCtx::current())
+}
+
+/// [`dstein`] with an explicit execution context.
 ///
 /// Parallel decomposition (MR³-SMP): the eigenvalue list is partitioned
 /// into clusters at the `CLUSTER_REL_GAP` boundaries; clusters are
-/// independent (no cross-cluster re-orthogonalization) and run across the
-/// [`crate::util::parallel`] thread budget, while vectors *within* a
-/// cluster stay sequential because each is re-orthogonalized against its
-/// predecessors.  Every vector seeds its own PRNG from its global index,
-/// so the result is independent of the thread count.
-pub fn dstein(t: &SymTridiag, lambdas: &[f64]) -> Matrix {
+/// independent (no cross-cluster re-orthogonalization), while vectors
+/// *within* a cluster stay sequential because each is re-orthogonalized
+/// against its predecessors.  Cluster sizes are spectrum-dependent and can
+/// be wildly ragged — one heavy cluster plus many singletons is the common
+/// case — so the clusters run through `ctx`'s **work-stealing** item pool
+/// rather than a static split.  Every vector seeds its own PRNG from its
+/// global index and writes only its own panel column, so the result is
+/// independent of which worker runs which cluster.
+pub fn dstein_ctx(t: &SymTridiag, lambdas: &[f64], ctx: &ExecCtx) -> Matrix {
     let n = t.n();
     let s = lambdas.len();
     let mut z = Matrix::zeros(n, s);
@@ -194,7 +203,7 @@ pub fn dstein(t: &SymTridiag, lambdas: &[f64]) -> Matrix {
             run_cluster(p);
         }
     } else {
-        crate::util::parallel::parallel_items(panels, run_cluster);
+        ctx.parallel_items(panels, run_cluster);
     }
     z
 }

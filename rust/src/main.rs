@@ -14,7 +14,7 @@
 //! feature (DESIGN.md §Hardware-Adaptation).
 
 #[cfg(feature = "pjrt")]
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gsyeig::bench::{
     fig_sweep, run_accuracy_table, run_stage_table, run_table4, run_table4_thread_sweep,
@@ -62,7 +62,7 @@ fn parse_variant(s: &str) -> Variant {
 #[cfg(feature = "pjrt")]
 fn solve_offload(cfg: SolverConfig, problem: Problem) -> Solution {
     use gsyeig::solver::backend::Kernels;
-    let reg = Rc::new(ArtifactRegistry::load_default().expect("artifacts missing"));
+    let reg = Arc::new(ArtifactRegistry::load_default().expect("artifacts missing"));
     let kernels = OffloadKernels::new(reg);
     kernels.warm_up(problem.n()); // compile artifacts outside the timings
     GsyeigSolver::with_kernels(cfg, kernels).solve(problem)
@@ -125,7 +125,7 @@ fn cmd_solve(args: &Args) {
 /// Tables 6/7 (offload stage timings + accuracy) for one experiment.
 #[cfg(feature = "pjrt")]
 fn run_offload_tables(scale: &ExperimentScale) {
-    let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let reg = Arc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
     let k = OffloadKernels::new(reg);
     for kind in [ExperimentKind::Md, ExperimentKind::Dft] {
         let t = run_stage_table(kind, scale, &k, &Variant::ALL);
@@ -142,7 +142,7 @@ fn run_offload_tables(_scale: &ExperimentScale) {
 /// Figure 2 (offload sweep over s).
 #[cfg(feature = "pjrt")]
 fn run_offload_fig2(scale: &ExperimentScale, svals: &[usize]) {
-    let reg = Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
+    let reg = Arc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"));
     let k = OffloadKernels::new(reg);
     let (csv, txt) = fig_sweep(ExperimentKind::Md, scale, &k, svals, "Figure 2 analog (offload)");
     println!("{txt}\nCSV:\n{csv}");
@@ -248,6 +248,7 @@ fn cmd_serve(args: &Args) {
             s: (n * 26 / 1000).max(1),
             variant: None,
             b_cache_key: Some(id / 3), // 3 "k-points" share each cycle's B
+            exec_threads: None,        // coordinator sizes the ctx by n
         };
         coord.submit(Job { id, spec }).ok().expect("queue closed");
     }

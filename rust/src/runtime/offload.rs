@@ -12,14 +12,24 @@
 //!   loop would use;
 //! * all reported stage times include the host↔device transfers, exactly
 //!   like the paper's GPU timings.
+//!
+//! Threading (DESIGN.md §3): this backend is **structurally**
+//! `Send + Sync` — `Arc` for shared handles, `Mutex`/atomics for interior
+//! state — completing the Rc→Arc migration recorded in earlier revisions,
+//! so coordinator workers may share one backend without asserted `unsafe`
+//! bounds.  Every device execution runs under
+//! [`parallel::with_offloaded_stage`]: the host cores assigned to this
+//! solve idle while the device computes (the paper's GPU timelines), so
+//! the calling thread's nested host budget shrinks to 1 for the duration.
 
-use std::cell::{Cell, RefCell};
-use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::lanczos::operator::SymOp;
 use crate::lapack::LapackError;
 use crate::matrix::Matrix;
 use crate::solver::backend::{Kernels, NativeKernels};
+use crate::util::parallel;
 use crate::util::timer::StageTimer;
 
 use super::pjrt::{CompiledGraph, PjrtRuntime};
@@ -27,29 +37,22 @@ use super::registry::ArtifactRegistry;
 
 /// PJRT-offloaded kernels with native fallback.
 pub struct OffloadKernels {
-    pub registry: Rc<ArtifactRegistry>,
+    pub registry: Arc<ArtifactRegistry>,
     native: NativeKernels,
-    fallbacks: RefCell<Vec<&'static str>>,
+    fallbacks: Mutex<Vec<&'static str>>,
 }
 
-// SAFETY: `Kernels` now requires `Send + Sync` (the threading contract of
-// DESIGN.md §Threading-Model), but the PJRT handles (`Rc`, `RefCell`,
-// client buffers) are not thread-safe.  The offload backend is only ever
-// driven by a single solver thread at a time — the coordinator constructs
-// one backend per worker, never sharing one across threads — so asserting
-// the bounds is sound under that discipline.  Migrating these handles to
-// `Arc`/`Mutex` (and auditing the xla types) is the recorded follow-on for
-// making this structural rather than asserted.
-unsafe impl Send for OffloadKernels {}
-unsafe impl Sync for OffloadKernels {}
-
 impl OffloadKernels {
-    pub fn new(registry: Rc<ArtifactRegistry>) -> Self {
-        OffloadKernels { registry, native: NativeKernels::default(), fallbacks: RefCell::new(vec![]) }
+    pub fn new(registry: Arc<ArtifactRegistry>) -> Self {
+        OffloadKernels {
+            registry,
+            native: NativeKernels::default(),
+            fallbacks: Mutex::new(vec![]),
+        }
     }
 
     fn note_fallback(&self, stage: &'static str) {
-        let mut f = self.fallbacks.borrow_mut();
+        let mut f = self.fallbacks.lock().unwrap();
         if !f.contains(&stage) {
             f.push(stage);
         }
@@ -75,7 +78,7 @@ impl Kernels for OffloadKernels {
                 u.zero_lower();
                 Ok(u)
             };
-            match run() {
+            match parallel::with_offloaded_stage(run) {
                 Ok(u) => {
                     // NaNs signal a non-SPD input (jnp.linalg.cholesky
                     // semantics); report like DPOTRF would.
@@ -109,7 +112,7 @@ impl Kernels for OffloadKernels {
                 let data = PjrtRuntime::literal_to_vec(&outs[0])?;
                 Ok(Matrix::from_col_major(n, n, data))
             };
-            match run() {
+            match parallel::with_offloaded_stage(run) {
                 Ok(c) => {
                     *a = c;
                     return;
@@ -128,7 +131,7 @@ impl Kernels for OffloadKernels {
         const PANEL: usize = 64; // must match model.PANEL
         let reg = &self.registry;
         if reg.has("back_transform", n) && reg.fits_memory(Self::resident(n, 1)) {
-            let mut run = || -> anyhow::Result<()> {
+            let run = || -> anyhow::Result<()> {
                 let g = reg.get("back_transform", n)?;
                 let ubuf = reg.runtime.upload_matrix(u)?;
                 let mut j = 0;
@@ -155,7 +158,7 @@ impl Kernels for OffloadKernels {
                 }
                 Ok(())
             };
-            if run().is_ok() {
+            if parallel::with_offloaded_stage(run).is_ok() {
                 return;
             }
             self.note_fallback("BT1");
@@ -171,7 +174,7 @@ impl Kernels for OffloadKernels {
         if (reg.has("matvec_explicit_fast", n) || reg.has("matvec_explicit", n))
             && reg.fits_memory(Self::resident(n, 1))
         {
-            if let Ok(op) = OffloadExplicitOp::new(Rc::clone(&self.registry), c) {
+            if let Ok(op) = OffloadExplicitOp::new(Arc::clone(&self.registry), c) {
                 return Box::new(op);
             }
         }
@@ -185,7 +188,7 @@ impl Kernels for OffloadKernels {
         // KI keeps TWO n x n operands resident (A and U) — the Table 6
         // case that exceeds the device memory at DFT scale and falls back.
         if reg.has("matvec_implicit", n) && reg.fits_memory(Self::resident(n, 2)) {
-            if let Ok(op) = OffloadImplicitOp::new(Rc::clone(&self.registry), a, u) {
+            if let Ok(op) = OffloadImplicitOp::new(Arc::clone(&self.registry), a, u) {
                 return Some(Box::new(op));
             }
         }
@@ -198,7 +201,7 @@ impl Kernels for OffloadKernels {
     }
 
     fn native_fallback_stages(&self) -> Vec<&'static str> {
-        self.fallbacks.borrow().clone()
+        self.fallbacks.lock().unwrap().clone()
     }
 
     fn warm_up(&self, n: usize) {
@@ -221,22 +224,29 @@ impl Kernels for OffloadKernels {
 /// KE1 on the accelerator: C stays device-resident, one vector each way
 /// per iteration.
 pub struct OffloadExplicitOp {
-    reg: Rc<ArtifactRegistry>,
-    graph: Rc<CompiledGraph>,
+    reg: Arc<ArtifactRegistry>,
+    graph: Arc<CompiledGraph>,
     c_buf: xla::PjRtBuffer,
     n: usize,
-    count: Cell<usize>,
-    secs: Cell<f64>,
+    count: AtomicUsize,
+    secs: Mutex<f64>,
 }
 
 impl OffloadExplicitOp {
-    pub fn new(reg: Rc<ArtifactRegistry>, c: &Matrix) -> anyhow::Result<Self> {
+    pub fn new(reg: Arc<ArtifactRegistry>, c: &Matrix) -> anyhow::Result<Self> {
         let n = c.rows();
         let op =
             if reg.has("matvec_explicit_fast", n) { "matvec_explicit_fast" } else { "matvec_explicit" };
         let graph = reg.get(op, n)?;
         let c_buf = reg.runtime.upload_symmetric(c)?;
-        Ok(OffloadExplicitOp { reg, graph, c_buf, n, count: Cell::new(0), secs: Cell::new(0.0) })
+        Ok(OffloadExplicitOp {
+            reg,
+            graph,
+            c_buf,
+            n,
+            count: AtomicUsize::new(0),
+            secs: Mutex::new(0.0),
+        })
     }
 }
 
@@ -247,20 +257,24 @@ impl SymOp for OffloadExplicitOp {
 
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         let t0 = std::time::Instant::now();
-        let xbuf = self.reg.runtime.upload_vec(x).expect("upload x");
-        let outs = self.reg.runtime.execute(&self.graph, &[&self.c_buf, &xbuf]).expect("symv");
-        let z = PjrtRuntime::literal_to_vec(&outs[0]).expect("download z");
+        let z = parallel::with_offloaded_stage(|| {
+            let xbuf = self.reg.runtime.upload_vec(x).expect("upload x");
+            let outs =
+                self.reg.runtime.execute(&self.graph, &[&self.c_buf, &xbuf]).expect("symv");
+            PjrtRuntime::literal_to_vec(&outs[0]).expect("download z")
+        });
         y.copy_from_slice(&z);
-        self.count.set(self.count.get() + 1);
-        self.secs.set(self.secs.get() + t0.elapsed().as_secs_f64());
+        self.count.fetch_add(1, Ordering::Relaxed);
+        *self.secs.lock().unwrap() += t0.elapsed().as_secs_f64();
     }
 
     fn matvecs(&self) -> usize {
-        self.count.get()
+        self.count.load(Ordering::Relaxed)
     }
 
     fn drain_stages(&self, timer: &mut StageTimer) {
-        timer.add("KE1", std::time::Duration::from_secs_f64(self.secs.take()));
+        let secs = std::mem::take(&mut *self.secs.lock().unwrap());
+        timer.add("KE1", std::time::Duration::from_secs_f64(secs));
     }
 }
 
@@ -268,17 +282,17 @@ impl SymOp for OffloadExplicitOp {
 /// A and U device-resident.  Reported under the merged key "KI123"
 /// (the fused graph cannot split the three stages; the table notes this).
 pub struct OffloadImplicitOp {
-    reg: Rc<ArtifactRegistry>,
-    graph: Rc<CompiledGraph>,
+    reg: Arc<ArtifactRegistry>,
+    graph: Arc<CompiledGraph>,
     a_buf: xla::PjRtBuffer,
     u_buf: xla::PjRtBuffer,
     n: usize,
-    count: Cell<usize>,
-    secs: Cell<f64>,
+    count: AtomicUsize,
+    secs: Mutex<f64>,
 }
 
 impl OffloadImplicitOp {
-    pub fn new(reg: Rc<ArtifactRegistry>, a: &Matrix, u: &Matrix) -> anyhow::Result<Self> {
+    pub fn new(reg: Arc<ArtifactRegistry>, a: &Matrix, u: &Matrix) -> anyhow::Result<Self> {
         let n = a.rows();
         let graph = reg.get("matvec_implicit", n)?;
         let a_buf = reg.runtime.upload_symmetric(a)?;
@@ -289,8 +303,8 @@ impl OffloadImplicitOp {
             a_buf,
             u_buf,
             n,
-            count: Cell::new(0),
-            secs: Cell::new(0.0),
+            count: AtomicUsize::new(0),
+            secs: Mutex::new(0.0),
         })
     }
 }
@@ -302,24 +316,27 @@ impl SymOp for OffloadImplicitOp {
 
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         let t0 = std::time::Instant::now();
-        let xbuf = self.reg.runtime.upload_vec(x).expect("upload x");
-        let outs = self
-            .reg
-            .runtime
-            .execute(&self.graph, &[&self.a_buf, &self.u_buf, &xbuf])
-            .expect("implicit matvec");
-        let z = PjrtRuntime::literal_to_vec(&outs[0]).expect("download z");
+        let z = parallel::with_offloaded_stage(|| {
+            let xbuf = self.reg.runtime.upload_vec(x).expect("upload x");
+            let outs = self
+                .reg
+                .runtime
+                .execute(&self.graph, &[&self.a_buf, &self.u_buf, &xbuf])
+                .expect("implicit matvec");
+            PjrtRuntime::literal_to_vec(&outs[0]).expect("download z")
+        });
         y.copy_from_slice(&z);
-        self.count.set(self.count.get() + 1);
-        self.secs.set(self.secs.get() + t0.elapsed().as_secs_f64());
+        self.count.fetch_add(1, Ordering::Relaxed);
+        *self.secs.lock().unwrap() += t0.elapsed().as_secs_f64();
     }
 
     fn matvecs(&self) -> usize {
-        self.count.get()
+        self.count.load(Ordering::Relaxed)
     }
 
     fn drain_stages(&self, timer: &mut StageTimer) {
-        timer.add("KI123", std::time::Duration::from_secs_f64(self.secs.take()));
+        let secs = std::mem::take(&mut *self.secs.lock().unwrap());
+        timer.add("KI123", std::time::Duration::from_secs_f64(secs));
     }
 }
 
@@ -328,8 +345,8 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn registry() -> Rc<ArtifactRegistry> {
-        Rc::new(ArtifactRegistry::load_default().expect("make artifacts first"))
+    fn registry() -> Arc<ArtifactRegistry> {
+        Arc::new(ArtifactRegistry::load_default().expect("make artifacts first"))
     }
 
     fn spd(n: usize, rng: &mut Rng) -> Matrix {
@@ -339,6 +356,13 @@ mod tests {
             b[(i, i)] += n as f64;
         }
         b
+    }
+
+    #[test]
+    fn offload_kernels_are_structurally_shareable() {
+        // the Rc→Arc migration's point: no `unsafe impl` needed
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<OffloadKernels>();
     }
 
     #[test]
@@ -411,7 +435,7 @@ mod tests {
         let mut reg = ArtifactRegistry::load_default().unwrap();
         let n = 256;
         reg.set_device_memory(n * n * 8 + 1024); // one operand fits, not two
-        let k = OffloadKernels::new(Rc::new(reg));
+        let k = OffloadKernels::new(Arc::new(reg));
         let mut rng = Rng::new(5);
         let a = Matrix::randn_sym(n, &mut rng);
         let b = spd(n, &mut rng);

@@ -6,10 +6,9 @@
 //! reproducing the "matrices too large to keep two n x n arrays in GPU
 //! memory" fallback of Table 6.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -26,10 +25,14 @@ pub struct ArtifactInfo {
 }
 
 /// Registry of AOT artifacts + compile cache + device-memory budget.
+///
+/// Structurally `Send + Sync` (DESIGN.md §3): the compile cache is behind
+/// a `Mutex` and graphs are shared via `Arc`, so one registry can serve
+/// every coordinator worker.
 pub struct ArtifactRegistry {
     pub runtime: PjrtRuntime,
     entries: HashMap<(String, usize), ArtifactInfo>,
-    compiled: RefCell<HashMap<(String, usize), Rc<CompiledGraph>>>,
+    compiled: Mutex<HashMap<(String, usize), Arc<CompiledGraph>>>,
     /// Simulated device memory in bytes (the paper's C2050 had 3 GB for
     /// n = 17 243; scaled along with the problem sizes — see DESIGN.md).
     pub device_memory_bytes: usize,
@@ -65,7 +68,7 @@ impl ArtifactRegistry {
         Ok(ArtifactRegistry {
             runtime,
             entries,
-            compiled: RefCell::new(HashMap::new()),
+            compiled: Mutex::new(HashMap::new()),
             device_memory_bytes: DEFAULT_DEVICE_MEMORY,
         })
     }
@@ -97,17 +100,19 @@ impl ArtifactRegistry {
     }
 
     /// Compile (or fetch cached) the artifact for `(name, n)`.
-    pub fn get(&self, name: &str, n: usize) -> Result<Rc<CompiledGraph>> {
+    pub fn get(&self, name: &str, n: usize) -> Result<Arc<CompiledGraph>> {
         let key = (name.to_string(), n);
-        if let Some(g) = self.compiled.borrow().get(&key) {
-            return Ok(Rc::clone(g));
+        if let Some(g) = self.compiled.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(g));
         }
         let info = self
             .entries
             .get(&key)
             .with_context(|| format!("no artifact for {name} at n={n}"))?;
-        let g = Rc::new(self.runtime.compile_hlo_text(&info.file, info.n_outputs)?);
-        self.compiled.borrow_mut().insert(key, Rc::clone(&g));
+        // compile outside the lock (it can take a while); a concurrent
+        // compile of the same key is wasted work, not an error
+        let g = Arc::new(self.runtime.compile_hlo_text(&info.file, info.n_outputs)?);
+        self.compiled.lock().unwrap().entry(key).or_insert_with(|| Arc::clone(&g));
         Ok(g)
     }
 }
@@ -143,6 +148,6 @@ mod tests {
         let reg = ArtifactRegistry::load(&artifacts_dir()).unwrap();
         let g1 = reg.get("matvec_explicit", 256).unwrap();
         let g2 = reg.get("matvec_explicit", 256).unwrap();
-        assert!(Rc::ptr_eq(&g1, &g2));
+        assert!(Arc::ptr_eq(&g1, &g2));
     }
 }

@@ -9,12 +9,17 @@
 //!
 //! The paper's blocking-factor guidance (`32 ≤ w ≪ n`, §2.2) is the default
 //! bandwidth here too.
+//!
+//! Both stages are [`crate::util::parallel::ExecCtx`]-aware: stage 1's
+//! Level-3 updates split column panels across the ctx budget, and stage 2
+//! pipelines its Givens sweeps as a wavefront (bitwise identical to the
+//! serial chase — see [`sbrdt`]'s module docs).
 
 pub mod sbrdt;
 pub mod syrdb;
 
-pub use sbrdt::sbrdt;
-pub use syrdb::syrdb;
+pub use sbrdt::{sbrdt, sbrdt_ctx};
+pub use syrdb::{syrdb, syrdb_ctx};
 
 /// Default bandwidth, per the paper's experimental guidance.
 pub const DEFAULT_BANDWIDTH: usize = 32;

@@ -9,8 +9,39 @@
 //! but each rotation applied to the accumulated `Q` costs O(n), which is
 //! the n³-class accumulation term the paper blames for variant TT's loss
 //! (§2.2: "recovering Y … adds 7n³/3 + 2n²s flops").
+//!
+//! ## Wavefront parallelism
+//!
+//! Successive sweeps (columns) of one diagonal's elimination form a
+//! *pipeline*: sweep `c+1` may run its rotation `j` as soon as sweep `c`
+//! has completed rotation `j + 1 + ⌊4/b⌋` — by then every element that
+//! rotation touches has already received all of its serial-order
+//! predecessors (see the window analysis at [`chase_wavefront`]).
+//! [`sbrdt_ctx`] exploits this under a multi-thread [`ExecCtx`]:
+//!
+//! ```text
+//!   sweep 0:  G00 G01 G02 G03 G04 …          (rotations march down the band)
+//!   sweep 1:       G10 G11 G12 G13 …         (starts once G0,lag is done)
+//!   sweep 2:            G20 G21 G22 …        (…and so on: a wavefront)
+//!   time  ─────────────────────────▶
+//! ```
+//!
+//! Because the ordering constraint reproduces exactly the serial order on
+//! every *conflicting* pair of rotations (and non-conflicting rotations
+//! touch disjoint elements), the wavefront result is **bitwise identical**
+//! to the serial chase at every thread count — the property
+//! `tests/prop_threading.rs` pins down.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::matrix::{Matrix, SymTridiag};
+use crate::util::parallel::ExecCtx;
+
+/// Below this matrix order the whole chase is microseconds of work and the
+/// per-diagonal thread spawns would dominate: stay serial.
+const WAVEFRONT_MIN_N: usize = 64;
+/// Minimum sweeps per diagonal before the pipeline has any depth to mine.
+const WAVEFRONT_MIN_SWEEPS: usize = 8;
 
 /// Givens rotation (c, s) with  [c  s; -s  c]ᵀ [f; g] = [r; 0].
 #[inline]
@@ -23,77 +54,312 @@ fn givens(f: f64, g: f64) -> (f64, f64) {
     }
 }
 
-/// Apply the rotation to rows p,q (p<q) of symmetric `a`, restricted to the
-/// column window `[lo, hi)`, then the mirror column update — preserving
-/// symmetry exactly by operating on one triangle and mirroring.
+/// Apply the rotation to rows p,q (p<q) of the symmetric matrix stored
+/// column-major at `a` (order `n`), restricted to the column window
+/// `[lo, hi)`, then the mirror column update — preserving symmetry exactly
+/// by operating on one triangle and mirroring.
+///
+/// # Safety
+/// `a` must point to an `n*n` allocation, `p, q < n`, and no other thread
+/// may concurrently access any element this rotation touches (rows p,q ×
+/// cols [lo,hi) and the mirror) — the wavefront protocol guarantees this.
 #[inline]
-fn rot_sym(a: &mut Matrix, p: usize, q: usize, c: f64, s: f64, lo: usize, hi: usize) {
-    let n = a.rows();
+#[allow(clippy::too_many_arguments)]
+unsafe fn rot_sym_raw(
+    a: *mut f64,
+    n: usize,
+    p: usize,
+    q: usize,
+    c: f64,
+    s: f64,
+    lo: usize,
+    hi: usize,
+) {
     let (lo, hi) = (lo.min(n), hi.min(n));
     // rows p and q over the window (full dense storage)
     for j in lo..hi {
-        let apj = a[(p, j)];
-        let aqj = a[(q, j)];
-        a[(p, j)] = c * apj + s * aqj;
-        a[(q, j)] = -s * apj + c * aqj;
+        let pj = a.add(p + j * n);
+        let qj = a.add(q + j * n);
+        let apj = *pj;
+        let aqj = *qj;
+        *pj = c * apj + s * aqj;
+        *qj = -s * apj + c * aqj;
     }
     // columns p and q over the window
     for i in lo..hi {
-        let aip = a[(i, p)];
-        let aiq = a[(i, q)];
-        a[(i, p)] = c * aip + s * aiq;
-        a[(i, q)] = -s * aip + c * aiq;
+        let ip = a.add(i + p * n);
+        let iq = a.add(i + q * n);
+        let aip = *ip;
+        let aiq = *iq;
+        *ip = c * aip + s * aiq;
+        *iq = -s * aip + c * aiq;
     }
 }
 
+/// Apply the rotation to columns p,q of the accumulated Q (`rows` rows,
+/// column-major at `q`): `Q := Q · G`.
+///
+/// # Safety
+/// Same contract as [`rot_sym_raw`], for columns p and q of `q`.
+#[inline]
+unsafe fn rot_q_raw(qm: *mut f64, rows: usize, p: usize, q: usize, c: f64, s: f64) {
+    for i in 0..rows {
+        let ip = qm.add(i + p * rows);
+        let iq = qm.add(i + q * rows);
+        let qip = *ip;
+        let qiq = *iq;
+        *ip = c * qip + s * qiq;
+        *iq = -s * qip + c * qiq;
+    }
+}
+
+/// Raw shared-matrix handle for the wavefront workers.  Soundness comes
+/// from the progress protocol: every pair of rotations whose element sets
+/// intersect is ordered by an Acquire/Release edge (see
+/// [`chase_wavefront`]), so no element is ever accessed concurrently.
+#[derive(Clone, Copy)]
+struct RawMat {
+    ptr: *mut f64,
+}
+
+unsafe impl Send for RawMat {}
+unsafe impl Sync for RawMat {}
+
+/// One sweep of the chase for diagonal offset `b` starting at column
+/// `col`, executed with raw access.  The serial and wavefront paths share
+/// this one implementation, so their floating-point operations are the
+/// same per-element sequence by construction.  `wait_for(j)` runs before
+/// rotation `j` (the pipeline stall), `publish(done)` after it (progress
+/// release); serial passes no-ops.  Returns `(rotations, broke_early)` —
+/// the early-break flag matters to the wavefront: a sweep that stopped on
+/// an exact-zero bulge has NOT verified its predecessor's progress beyond
+/// the break point, so it must not blanket-release its successors.
+///
+/// # Safety
+/// Caller must uphold the [`RawMat`] contract for `a` (order `n`) and `q`.
+#[inline]
+unsafe fn run_sweep<F: FnMut(usize), G: FnMut(usize)>(
+    a: RawMat,
+    n: usize,
+    b: usize,
+    col: usize,
+    q: Option<(RawMat, usize)>,
+    mut wait_for: F,
+    mut publish: G,
+) -> (usize, bool) {
+    let mut nrot = 0usize;
+    // the element to annihilate sits at (col + b, col); chase the bulge
+    // down in strides of b.
+    let mut r = col + b; // row of the offending element
+    let mut c0 = col; // its column
+    let mut j = 0usize; // rotation index within this sweep
+    while r < n {
+        wait_for(j);
+        let f = *a.ptr.add((r - 1) + c0 * n);
+        let g = *a.ptr.add(r + c0 * n);
+        if g == 0.0 {
+            return (nrot, true);
+        }
+        let (cc, ss) = givens(f, g);
+        // the rotation touches rows/cols r-1, r; in-band window spans
+        // [r-1-b, r+b+1) plus the bulge cell one stride down.
+        let lo = (r - 1).saturating_sub(b + 1);
+        let hi = (r + b + 2).min(n);
+        rot_sym_raw(a.ptr, n, r - 1, r, cc, ss, lo, hi);
+        nrot += 1;
+        if let Some((qm, rows)) = q {
+            // q := q G (rotate columns r-1, r) — O(n) per rotation: the
+            // accumulation cost the paper's analysis highlights.
+            rot_q_raw(qm.ptr, rows, r - 1, r, cc, ss);
+        }
+        // mixing rows (r-1, r) extends row r-1 out to column r+b: the
+        // bulge lands at (r + b, r - 1), offset b+1 — the next element to
+        // annihilate, one stride of b further down.
+        j += 1;
+        publish(j);
+        c0 = r - 1;
+        r += b;
+    }
+    (nrot, false)
+}
+
+/// Serial elimination of the diagonal at offset `b` — the reference order.
+fn chase_serial(a: &mut Matrix, b: usize, mut q: Option<&mut Matrix>) -> usize {
+    let n = a.rows();
+    let a_raw = RawMat { ptr: a.as_mut_slice().as_mut_ptr() };
+    let q_raw = q.as_mut().map(|m| {
+        let rows = m.rows();
+        (RawMat { ptr: m.as_mut_slice().as_mut_ptr() }, rows)
+    });
+    let mut nrot = 0usize;
+    for col in 0..n.saturating_sub(b) {
+        // SAFETY: single-threaded here; we hold &mut on both matrices
+        nrot += unsafe { run_sweep(a_raw, n, b, col, q_raw, |_| {}, |_| {}) }.0;
+    }
+    nrot
+}
+
+/// Wavefront (pipelined) elimination of the diagonal at offset `b` over
+/// `workers` threads — bitwise identical to [`chase_serial`].
+///
+/// ## Why the lag is `2 + ⌊4/b⌋`
+///
+/// Rotation `i` of sweep `c` acts at row `rᵢ = c + (i+1)·b`; its element
+/// set is rows {rᵢ-1, rᵢ} × cols [rᵢ-b-2, rᵢ+b+2) plus the mirror.  Two
+/// rotations at rows r, r′ intersect only if `|r − r′| ≤ b+2`.  For sweep
+/// `c+1` rotation `j` (row r′ = c+1+(j+1)b), the conflicting rotations of
+/// sweep `c` are those with `(i−j)·b − 1 ≤ b+3` (one slack element kept
+/// for safety), i.e. `i ≤ j + 1 + ⌊4/b⌋`.  Requiring sweep `c`'s
+/// completed-rotation count to reach `j + 2 + ⌊4/b⌋` before sweep `c+1`
+/// runs rotation `j` therefore orders every conflicting pair exactly as
+/// the serial sweep-by-sweep order does; chaining the bound across sweep
+/// distance d (the guarantee grows like d·(lag−1)+1, the conflict span
+/// like 1+(3+d)/b) covers non-adjacent sweeps too.  Concurrent rotations
+/// are at least `lag·b − 1 > b+2` rows apart — disjoint.  Same pairwise
+/// order on conflicting rotations + disjoint otherwise ⇒ every matrix
+/// element sees the same update sequence ⇒ bitwise-identical results.
+///
+/// A sweep that ends **early** on an exact-zero bulge is the one case a
+/// blanket "finished" publish would be unsound: it has only verified its
+/// predecessor up to the break point, so releasing successors entirely
+/// would sever the transitive chain and let them race sweeps further
+/// back.  Such a sweep instead *mirrors* its predecessor's progress
+/// (minus `lag−1`) until the predecessor finishes — the worker epilogue
+/// below.  (Both the ordering protocol and this break handling were
+/// validated by exhaustive precedence simulation and randomized
+/// float64 interleaving simulation with injected breaks.)
+fn chase_wavefront(a: &mut Matrix, b: usize, mut q: Option<&mut Matrix>, workers: usize) -> usize {
+    let n = a.rows();
+    let sweeps = n - b; // guaranteed ≥ 1 by the caller
+    let lag = 2 + 4 / b;
+    let workers = workers.min(sweeps).max(1);
+    // progress[c] = completed rotations of sweep c (usize::MAX = finished)
+    let progress: Vec<AtomicUsize> = (0..sweeps).map(|_| AtomicUsize::new(0)).collect();
+    let nrot = AtomicUsize::new(0);
+    let a_raw = RawMat { ptr: a.as_mut_slice().as_mut_ptr() };
+    let q_raw = q.as_mut().map(|m| {
+        let rows = m.rows();
+        (RawMat { ptr: m.as_mut_slice().as_mut_ptr() }, rows)
+    });
+    let progress = &progress;
+    let nrot_ref = &nrot;
+    std::thread::scope(|s| {
+        for wk in 0..workers {
+            s.spawn(move || {
+                let mut local = 0usize;
+                let mut c = wk;
+                while c < sweeps {
+                    // SAFETY: the wait closure enforces the pipeline
+                    // ordering proven above before every rotation, and
+                    // progress is published with Release after each one —
+                    // no two threads ever touch an element concurrently.
+                    let (done, broke) = unsafe {
+                        run_sweep(
+                            a_raw,
+                            n,
+                            b,
+                            c,
+                            q_raw,
+                            |j| {
+                                if c == 0 {
+                                    return;
+                                }
+                                let need = j + lag;
+                                let mut spins = 0u32;
+                                loop {
+                                    let p = progress[c - 1].load(Ordering::Acquire);
+                                    if p == usize::MAX || p >= need {
+                                        break;
+                                    }
+                                    spins = spins.wrapping_add(1);
+                                    if spins % 64 == 0 {
+                                        std::thread::yield_now();
+                                    } else {
+                                        std::hint::spin_loop();
+                                    }
+                                }
+                            },
+                            |done| progress[c].store(done, Ordering::Release),
+                        )
+                    };
+                    local += done;
+                    if broke && c > 0 {
+                        // Early zero-bulge exit: this sweep verified its
+                        // predecessor only up to the break point, so a
+                        // blanket MAX here would let successors race
+                        // sweeps further back (the transitive-lag chain
+                        // would be severed).  Instead, keep the chain
+                        // invariant — "progress[c] = P implies sweep c-1
+                        // completed ≥ P+lag-1 rotations" — by mirroring
+                        // the predecessor's progress until it finishes.
+                        // A sweep that ran its chase to the bottom needs
+                        // none of this: its last rotation's wait already
+                        // covered every successor index (len(c+1) ≤
+                        // len(c)), so MAX is immediately sound there.
+                        let mut published = done;
+                        let mut spins = 0u32;
+                        loop {
+                            let p = progress[c - 1].load(Ordering::Acquire);
+                            if p == usize::MAX {
+                                break;
+                            }
+                            let can = p.saturating_sub(lag - 1);
+                            if can > published {
+                                published = can;
+                                progress[c].store(can, Ordering::Release);
+                            }
+                            spins = spins.wrapping_add(1);
+                            if spins % 64 == 0 {
+                                std::thread::yield_now();
+                            } else {
+                                std::hint::spin_loop();
+                            }
+                        }
+                    }
+                    progress[c].store(usize::MAX, Ordering::Release);
+                    c += workers;
+                }
+                nrot_ref.fetch_add(local, Ordering::Relaxed);
+            });
+        }
+    });
+    nrot.into_inner()
+}
+
 /// Reduce the symmetric matrix `a` (full storage, bandwidth `w` — entries
-/// outside the band must already be numerically zero, e.g. from [`super::syrdb`])
-/// to tridiagonal form.  Returns `(T, rotations)` and, if `q` is given,
-/// accumulates every rotation into it from the right (`q := q · G`), so that
-/// on exit `qᵀ A_band q = T` composes with the caller's earlier factors.
-pub fn sbrdt(a: &mut Matrix, w: usize, mut q: Option<&mut Matrix>) -> (SymTridiag, usize) {
+/// outside the band must already be numerically zero, e.g. from
+/// [`super::syrdb`]) to tridiagonal form under the ambient [`ExecCtx`].
+/// Returns `(T, rotations)` and, if `q` is given, accumulates every
+/// rotation into it from the right (`q := q · G`), so that on exit
+/// `qᵀ A_band q = T` composes with the caller's earlier factors.
+pub fn sbrdt(a: &mut Matrix, w: usize, q: Option<&mut Matrix>) -> (SymTridiag, usize) {
+    sbrdt_ctx(a, w, q, &ExecCtx::current())
+}
+
+/// [`sbrdt`] with an explicit execution context: multi-thread contexts run
+/// each diagonal's sweeps as a wavefront pipeline (bitwise identical to
+/// the serial chase — see the module docs).
+pub fn sbrdt_ctx(
+    a: &mut Matrix,
+    w: usize,
+    mut q: Option<&mut Matrix>,
+    ctx: &ExecCtx,
+) -> (SymTridiag, usize) {
     let n = a.rows();
     assert_eq!(n, a.cols());
+    let threads = ctx.threads();
     let mut nrot = 0usize;
 
     for b in (2..=w.min(n.saturating_sub(1))).rev() {
         // eliminate the outermost diagonal (offset b) column by column
-        for col in 0..n.saturating_sub(b) {
-            // the element to annihilate sits at (col + b, col); chase the
-            // bulge down in strides of b.
-            let mut r = col + b; // row of the offending element
-            let mut c0 = col; // its column
-            while r < n {
-                let f = a[(r - 1, c0)];
-                let g = a[(r, c0)];
-                if g == 0.0 {
-                    break;
-                }
-                let (cc, ss) = givens(f, g);
-                // the rotation touches rows/cols r-1, r; in-band window
-                // spans [r-1-b, r+b+1) plus the bulge cell one stride down.
-                let lo = (r - 1).saturating_sub(b + 1);
-                let hi = (r + b + 2).min(n);
-                rot_sym(a, r - 1, r, cc, ss, lo, hi);
-                nrot += 1;
-                if let Some(qm) = &mut q {
-                    // q := q G (rotate columns r-1, r) — O(n) per rotation:
-                    // the accumulation cost the paper's analysis highlights.
-                    let rows = qm.rows();
-                    for i in 0..rows {
-                        let qip = qm[(i, r - 1)];
-                        let qiq = qm[(i, r)];
-                        qm[(i, r - 1)] = cc * qip + ss * qiq;
-                        qm[(i, r)] = -ss * qip + cc * qiq;
-                    }
-                }
-                // mixing rows (r-1, r) extends row r-1 out to column r+b:
-                // the bulge lands at (r + b, r - 1), offset b+1 — the next
-                // element to annihilate, one stride of b further down.
-                c0 = r - 1;
-                r += b;
-            }
-        }
+        let sweeps = n.saturating_sub(b);
+        let wavefront =
+            threads > 1 && n >= WAVEFRONT_MIN_N && sweeps >= WAVEFRONT_MIN_SWEEPS;
+        nrot += if wavefront {
+            chase_wavefront(a, b, q.as_deref_mut(), threads)
+        } else {
+            chase_serial(a, b, q.as_deref_mut())
+        };
     }
 
     // extract the tridiagonal
@@ -218,5 +484,89 @@ mod tests {
             "TT compose diff {}",
             qaq.max_abs_diff(&t.to_dense())
         );
+    }
+
+    #[test]
+    fn wavefront_bitwise_matches_serial() {
+        // n ≥ WAVEFRONT_MIN_N so multi-thread ctxs take the pipelined path
+        for (w, seed) in [(2usize, 7u64), (3, 8), (5, 9), (8, 10)] {
+            let n = 90;
+            let a0 = banded_sym(n, w, seed);
+            let mut a1 = a0.clone();
+            let mut q1 = Matrix::identity(n);
+            let (t1, r1) =
+                sbrdt_ctx(&mut a1, w, Some(&mut q1), &ExecCtx::with_threads(1));
+            for threads in [2usize, 8] {
+                let mut at = a0.clone();
+                let mut qt = Matrix::identity(n);
+                let (tt, rt) =
+                    sbrdt_ctx(&mut at, w, Some(&mut qt), &ExecCtx::with_threads(threads));
+                assert_eq!(r1, rt, "w={w} threads={threads}: rotation counts differ");
+                assert_eq!(
+                    a1.max_abs_diff(&at),
+                    0.0,
+                    "w={w} threads={threads}: band matrix not bitwise equal"
+                );
+                assert_eq!(
+                    q1.max_abs_diff(&qt),
+                    0.0,
+                    "w={w} threads={threads}: accumulated Q not bitwise equal"
+                );
+                for i in 0..n {
+                    assert_eq!(t1.d[i].to_bits(), tt.d[i].to_bits(), "d[{i}]");
+                    if i + 1 < n {
+                        assert_eq!(t1.e[i].to_bits(), tt.e[i].to_bits(), "e[{i}]");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wavefront_bitwise_with_exact_zero_bulges() {
+        // exact zeros scattered on the outermost diagonal make sweeps
+        // break early (g == 0.0) — the case where a naive "finished"
+        // publish would sever the pipeline's transitive ordering chain.
+        for (w, seed) in [(2usize, 21u64), (4, 22), (6, 23)] {
+            let n = 96;
+            let mut a0 = banded_sym(n, w, seed);
+            // zero out the outer diagonal on a stride: many early breaks
+            for c in (0..n - w).step_by(3) {
+                a0[(c + w, c)] = 0.0;
+                a0[(c, c + w)] = 0.0;
+            }
+            let mut a1 = a0.clone();
+            let mut q1 = Matrix::identity(n);
+            let (t1, r1) =
+                sbrdt_ctx(&mut a1, w, Some(&mut q1), &ExecCtx::with_threads(1));
+            for threads in [2usize, 8] {
+                let mut at = a0.clone();
+                let mut qt = Matrix::identity(n);
+                let (tt, rt) =
+                    sbrdt_ctx(&mut at, w, Some(&mut qt), &ExecCtx::with_threads(threads));
+                assert_eq!(r1, rt, "w={w} threads={threads}: rotation counts differ");
+                assert_eq!(a1.max_abs_diff(&at), 0.0, "w={w} threads={threads}: matrix");
+                assert_eq!(q1.max_abs_diff(&qt), 0.0, "w={w} threads={threads}: Q");
+                for i in 0..n {
+                    assert_eq!(t1.d[i].to_bits(), tt.d[i].to_bits(), "d[{i}]");
+                    if i + 1 < n {
+                        assert_eq!(t1.e[i].to_bits(), tt.e[i].to_bits(), "e[{i}]");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wavefront_still_correct_spectrally() {
+        let n = 96;
+        let w = 6;
+        let a0 = banded_sym(n, w, 11);
+        let mut a = a0.clone();
+        let mut q = Matrix::identity(n);
+        let (t, _) =
+            sbrdt_ctx(&mut a, w, Some(&mut q), &ExecCtx::with_threads(4));
+        let qaq = q.transpose().matmul_naive(&a0).matmul_naive(&q);
+        assert!(qaq.max_abs_diff(&t.to_dense()) < 1e-10 * a0.frobenius_norm());
     }
 }

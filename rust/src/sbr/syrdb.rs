@@ -19,6 +19,16 @@
 use crate::blas::{dgemm, dsyr2k, dtrmm, Diag, Side, Trans, Uplo};
 use crate::lapack::householder::{dgeqr2, dlarfb_left, dlarfb_right, dlarft_forward_columnwise};
 use crate::matrix::Matrix;
+use crate::util::parallel::ExecCtx;
+
+/// [`syrdb`] under an explicit execution context: the panel QR is
+/// inherently sequential, but every Level-3 update (`dgemm`, `dsyr2k`,
+/// `dlarfb_*`) below it splits its column panels across `ctx`'s budget —
+/// installing the ctx here is what lets a coordinator-sized job ctx reach
+/// the TT1 hot loops.
+pub fn syrdb_ctx(a: &mut Matrix, w: usize, q1: Option<&mut Matrix>, ctx: &ExecCtx) {
+    ctx.install(|| syrdb(a, w, q1));
+}
 
 /// Reduce the symmetric matrix `a` (full storage, overwritten) to symmetric
 /// band form with half-bandwidth `w`.  Returns nothing; on exit the band of

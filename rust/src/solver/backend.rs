@@ -18,10 +18,17 @@ use crate::matrix::Matrix;
 
 /// The stage kernels a solver variant needs from a "library".
 ///
-/// `Send + Sync` is part of the contract (DESIGN.md §Threading-Model): a
+/// `Send + Sync` is part of the contract (DESIGN.md §3 Threading-Model): a
 /// backend may be driven from coordinator worker threads and its kernels
 /// run above the parallel BLAS, so implementations must be shareable
 /// across threads — interior state needs atomics or locks, not `Cell`.
+/// Kernels do not take an [`crate::util::parallel::ExecCtx`] parameter:
+/// the solver installs its job ctx around the whole solve, and the
+/// Level-3 substrate underneath every kernel picks it up ambiently — so a
+/// backend implementation stays a pure "library call".  Backends that
+/// leave the host (the PJRT offload path) must wrap device execution in
+/// [`crate::util::parallel::with_offloaded_stage`] so the host budget
+/// shrinks while their stage runs on the device.
 pub trait Kernels: Send + Sync {
     /// GS1: in-place upper Cholesky `B = UᵀU` (strict lower zeroed).
     fn cholesky(&self, b: &mut Matrix) -> Result<(), LapackError>;

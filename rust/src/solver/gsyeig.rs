@@ -2,6 +2,7 @@
 
 use crate::lanczos::thick_restart::Want;
 use crate::matrix::Matrix;
+use crate::util::parallel::ExecCtx;
 use crate::util::timer::StageTimer;
 
 use super::backend::{Kernels, NativeKernels};
@@ -69,6 +70,11 @@ pub struct SolverConfig {
     /// Use the blocked DSYGST for GS2 instead of the two-TRSM construction.
     pub gs2_sygst: bool,
     pub seed: u64,
+    /// Execution context for the solve: thread budget + pool + placement.
+    /// Defaults to [`ExecCtx::global`] (inherit the ambient budget at
+    /// solve time); the coordinator swaps in a per-job ctx sized by
+    /// problem dimension (DESIGN.md §3).
+    pub exec: ExecCtx,
 }
 
 impl SolverConfig {
@@ -83,6 +89,7 @@ impl SolverConfig {
             max_matvecs: 500_000,
             gs2_sygst: false,
             seed: 0xEE6_1A9,
+            exec: ExecCtx::global(),
         }
     }
 }
@@ -157,16 +164,20 @@ impl<K: Kernels> GsyeigSolver<K> {
         GsyeigSolver { config, kernels }
     }
 
-    /// Solve the problem with the configured variant.
+    /// Solve the problem with the configured variant.  The config's
+    /// [`ExecCtx`] is installed for the whole solve, so every stage — the
+    /// explicitly ctx-threaded ones (SBR, bisection, inverse iteration)
+    /// and the ambient consumers (panel GEMM under Cholesky/DSYGST/TRSM)
+    /// — runs under the same budget.
     pub fn solve(&self, problem: Problem) -> Solution {
         assert!(problem.n() >= 2, "problem too small");
         assert!(self.config.s >= 1 && self.config.s <= problem.n());
-        match self.config.variant {
+        self.config.exec.install(|| match self.config.variant {
             Variant::TD => td::solve(&self.config, &self.kernels, problem),
             Variant::TT => tt::solve(&self.config, &self.kernels, problem),
             Variant::KE => ke::solve(&self.config, &self.kernels, problem),
             Variant::KI => ki::solve(&self.config, &self.kernels, problem),
-        }
+        })
     }
 }
 

@@ -35,6 +35,12 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     lcfg.tol = cfg.krylov_tol;
     lcfg.max_matvecs = cfg.max_matvecs;
     lcfg.seed = cfg.seed;
+    // The iteration already runs under the job's ExecCtx — solve()
+    // installed cfg.exec around the whole variant dispatch — so the
+    // restart GEMMs split panels across its budget, and with the offload
+    // backend each device matvec shrinks the host budget to 1 for its
+    // duration (parallel::with_offloaded_stage; the CPU cores idle while
+    // the device computes — DESIGN.md §3).
     let res = lanczos_solve(op.as_ref(), &lcfg);
     op.drain_stages(&mut timer);
     timer.add(

@@ -9,8 +9,8 @@
 
 use crate::blas::Trans;
 use crate::lapack::ormtr::dormtr_lower;
-use crate::lapack::stebz::dstebz;
-use crate::lapack::stein::dstein;
+use crate::lapack::stebz::dstebz_ctx;
+use crate::lapack::stein::dstein_ctx;
 use crate::lapack::sytrd::dsytrd_lower;
 use crate::matrix::{Matrix, SymTridiag};
 use crate::util::timer::StageTimer;
@@ -38,11 +38,14 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
 
     // TD2: subset eigenpairs of T (bisection + inverse iteration — the MR³
     // slot; O(ns)-class, negligible vs the reductions, as Table 2 shows).
+    // Explicitly ctx-threaded: bisection splits statically, the ragged
+    // cluster list steals (DESIGN.md §3).
     let t = SymTridiag::new(d, e);
     let (il, iu, reversed) = wanted_indices(n, s, cfg.which);
+    let ctx = &cfg.exec;
     let (lams, z) = timer.time("TD2", || {
-        let lams = dstebz(&t, il, iu);
-        let z = dstein(&t, &lams);
+        let lams = dstebz_ctx(&t, il, iu, ctx);
+        let z = dstein_ctx(&t, &lams, ctx);
         (lams, z)
     });
 

@@ -8,10 +8,10 @@
 //! (Y := (Q₁Q₂)Z, 2n²s) → BT1.
 
 use crate::blas::{dgemm, Trans};
-use crate::lapack::stebz::dstebz;
-use crate::lapack::stein::dstein;
+use crate::lapack::stebz::dstebz_ctx;
+use crate::lapack::stein::dstein_ctx;
 use crate::matrix::Matrix;
-use crate::sbr::{sbrdt, syrdb};
+use crate::sbr::{sbrdt_ctx, syrdb_ctx};
 use crate::util::timer::StageTimer;
 
 use super::backend::Kernels;
@@ -22,6 +22,7 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     let n = problem.n();
     let s = cfg.s;
     let w = cfg.bandwidth.clamp(1, n.saturating_sub(2).max(1));
+    let ctx = &cfg.exec;
     let mut timer = StageTimer::new();
     let Problem { a, b } = problem;
 
@@ -32,17 +33,18 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
 
     // TT1: Q₁ᵀ C Q₁ = W (band) with Q₁ explicitly accumulated
     let mut q1 = Matrix::identity(n);
-    timer.time("TT1", || syrdb(&mut c, w, Some(&mut q1)));
+    timer.time("TT1", || syrdb_ctx(&mut c, w, Some(&mut q1), ctx));
 
     // TT2: Q₂ᵀ W Q₂ = T, rotations folded into Q₁ (the paper's "accumulated
-    // from the right into the previously constructed Q₁")
-    let (t, _nrot) = timer.time("TT2", || sbrdt(&mut c, w, Some(&mut q1)));
+    // from the right into the previously constructed Q₁") — a wavefront
+    // pipeline under a multi-thread ctx, bitwise equal to the serial chase
+    let (t, _nrot) = timer.time("TT2", || sbrdt_ctx(&mut c, w, Some(&mut q1), ctx));
 
     // TT3: subset eigenpairs of T
     let (il, iu, reversed) = wanted_indices(n, s, cfg.which);
     let (lams, z) = timer.time("TT3", || {
-        let lams = dstebz(&t, il, iu);
-        let z = dstein(&t, &lams);
+        let lams = dstebz_ctx(&t, il, iu, ctx);
+        let z = dstein_ctx(&t, &lams, ctx);
         (lams, z)
     });
 

@@ -44,6 +44,10 @@ pub struct DagStats {
     pub busy_seconds: f64,
     /// Measured busy / (wall * workers) ∈ (0, 1].
     pub parallel_efficiency: f64,
+    /// Measured tasks obtained by work stealing (scheduler counter).
+    pub steals: u64,
+    /// Measured idle waits — times a worker found every deque empty.
+    pub idle_waits: u64,
 }
 
 impl DagStats {
@@ -53,6 +57,8 @@ impl DagStats {
         self.wall_seconds = exec.wall_seconds;
         self.busy_seconds = exec.busy_seconds;
         self.parallel_efficiency = exec.parallel_efficiency();
+        self.steals = exec.steals;
+        self.idle_waits = exec.idle_waits;
     }
 }
 
@@ -137,6 +143,8 @@ impl TaskGraph {
             wall_seconds: 0.0,
             busy_seconds: 0.0,
             parallel_efficiency: 0.0,
+            steals: 0,
+            idle_waits: 0,
         }
     }
 }

@@ -18,5 +18,5 @@ pub mod tile;
 
 pub use graph::{DagStats, TaskGraph};
 pub use ops::{tiled_potrf, tiled_sygst_trsm};
-pub use scheduler::{run_graph, ExecStats};
+pub use scheduler::{run_graph, run_graph_ctx, ExecStats};
 pub use tile::TiledMatrix;

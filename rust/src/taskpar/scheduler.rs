@@ -1,36 +1,49 @@
-//! Worker-pool executor for task DAGs.
+//! Work-stealing worker-pool executor for task DAGs.
 //!
-//! A shared ready-queue plus per-task remaining-dependency counters: when a
-//! task finishes, it decrements its dependents and pushes the newly-ready
-//! ones — the standard PLASMA/QUARK execution model.  Workers are real
-//! scoped threads; each one runs its tasks under a
-//! [`crate::util::parallel`] budget of `current_threads() / workers`, so
-//! tile kernels never oversubscribe the machine on top of the DAG-level
-//! parallelism (DESIGN.md §Threading-Model).  [`run_graph`] returns the
-//! *measured* execution statistics (wall clock, summed task time, ready
-//! depth) that the Table 4 bench turns into speedup and efficiency.
+//! Per-worker ready deques plus per-task remaining-dependency counters:
+//! when a task finishes, it decrements its dependents and pushes the
+//! newly-ready ones onto the *finishing worker's own* deque (locality —
+//! a task's dependents touch the tiles it just wrote); idle workers steal
+//! from a victim's back, so ragged DAGs no longer serialize on whichever
+//! worker the round-robin handed the long chain to.  Workers are real
+//! scoped threads; each runs its tasks under a child [`ExecCtx`] holding a
+//! `1/workers` share of the caller's budget, so tile kernels never
+//! oversubscribe the machine on top of the DAG-level parallelism
+//! (DESIGN.md §3 Threading-Model).  [`run_graph`] returns the *measured*
+//! execution statistics — wall clock, summed task time, ready depth, and
+//! the steal/idle counters the Table 4 bench turns into scheduler
+//! efficiency.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::util::parallel;
+use crate::util::parallel::{seed_queues, steal_claim, ExecCtx};
 
 use super::graph::TaskGraph;
+
+/// How long an idle worker sleeps before re-scanning for work.  Bounds the
+/// lost-wakeup window of the check-then-wait race without a heavyweight
+/// handshake; also bounds shutdown latency.
+const IDLE_WAIT: Duration = Duration::from_micros(500);
 
 /// Measured execution statistics of one [`run_graph`] call.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ExecStats {
     /// Worker threads used.
     pub workers: usize,
-    /// Observed maximum ready-queue depth (a lower bound on exploitable
+    /// Observed maximum ready-task count (a lower bound on exploitable
     /// width).
     pub max_ready_depth: usize,
     /// Wall-clock of the whole DAG execution.
     pub wall_seconds: f64,
     /// Sum of individual task execution times (the serial work content).
     pub busy_seconds: f64,
+    /// Tasks obtained by stealing from another worker's deque.
+    pub steals: u64,
+    /// Times a worker found every deque empty and had to wait.
+    pub idle_waits: u64,
 }
 
 impl ExecStats {
@@ -54,98 +67,159 @@ impl ExecStats {
 }
 
 struct Shared {
-    ready: Mutex<VecDeque<usize>>,
+    /// One ready deque per worker (owner pops front, thieves pop back).
+    queues: Vec<Mutex<VecDeque<usize>>>,
+    /// Sleeping-idle handshake (paired with `cv`; holds no data).
+    sleep: Mutex<()>,
     cv: Condvar,
     remaining: Vec<AtomicUsize>,
     done_count: AtomicUsize,
     total: usize,
+    /// Current number of ready-but-unclaimed tasks across all deques.
+    ready_len: AtomicUsize,
+    max_depth: AtomicUsize,
+    steals: AtomicU64,
+    idle_waits: AtomicU64,
+    busy_ns: AtomicU64,
 }
 
-/// Execute all tasks of the graph with `workers` threads and return the
-/// measured statistics.
+/// Execute all tasks of the graph with `workers` threads under the ambient
+/// [`ExecCtx`] and return the measured statistics.
 pub fn run_graph(graph: TaskGraph, workers: usize) -> ExecStats {
+    run_graph_ctx(graph, workers, &ExecCtx::current())
+}
+
+/// Execute all tasks of the graph with `workers` threads, splitting `ctx`'s
+/// thread budget across them and charging steal counters to `ctx`'s pool.
+pub fn run_graph_ctx(graph: TaskGraph, workers: usize, ctx: &ExecCtx) -> ExecStats {
     let workers = workers.max(1);
     let total = graph.nodes.len();
     if total == 0 {
-        return ExecStats { workers, max_ready_depth: 0, wall_seconds: 0.0, busy_seconds: 0.0 };
+        return ExecStats {
+            workers,
+            max_ready_depth: 0,
+            wall_seconds: 0.0,
+            busy_seconds: 0.0,
+            steals: 0,
+            idle_waits: 0,
+        };
     }
     let mut tasks: Vec<Option<super::graph::TaskFn>> = Vec::with_capacity(total);
     let mut dependents: Vec<Vec<usize>> = Vec::with_capacity(total);
     let mut remaining: Vec<AtomicUsize> = Vec::with_capacity(total);
-    let mut initial: VecDeque<usize> = VecDeque::new();
+    let mut initial: Vec<usize> = Vec::new();
     for (i, node) in graph.nodes.into_iter().enumerate() {
         remaining.push(AtomicUsize::new(node.deps.len()));
         dependents.push(node.dependents);
         tasks.push(Some(node.run));
         if remaining[i].load(Ordering::Relaxed) == 0 {
-            initial.push_back(i);
+            initial.push(i);
         }
     }
-    let shared = Arc::new(Shared {
-        ready: Mutex::new(initial),
+    // seed the deques per the ctx's placement hint (roots keep program
+    // order within each deque either way — shared protocol:
+    // parallel::seed_queues)
+    let n_initial = initial.len();
+    let queues = seed_queues(initial, workers, ctx.placement());
+    let shared = Shared {
+        queues,
+        sleep: Mutex::new(()),
         cv: Condvar::new(),
         remaining,
         done_count: AtomicUsize::new(0),
         total,
-    });
-    let tasks = Arc::new(Mutex::new(tasks));
-    let dependents = Arc::new(dependents);
-    let max_depth = Arc::new(AtomicUsize::new(0));
-    let busy_ns = Arc::new(AtomicU64::new(0));
+        ready_len: AtomicUsize::new(n_initial),
+        max_depth: AtomicUsize::new(n_initial),
+        steals: AtomicU64::new(0),
+        idle_waits: AtomicU64::new(0),
+        busy_ns: AtomicU64::new(0),
+    };
+    let tasks = Mutex::new(tasks);
+    let shared = &shared;
+    let tasks = &tasks;
+    let dependents = &dependents;
 
-    // split the caller's thread budget across the workers so tile kernels
-    // calling the parallel BLAS don't multiply the thread count
-    let child_budget = (parallel::current_threads() / workers).max(1);
+    // split the caller's budget across the workers so tile kernels calling
+    // the parallel BLAS don't multiply the thread count
+    let child = ctx.split(workers);
 
     let t0 = Instant::now();
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let shared = Arc::clone(&shared);
-            let tasks = Arc::clone(&tasks);
-            let dependents = Arc::clone(&dependents);
-            let max_depth = Arc::clone(&max_depth);
-            let busy_ns = Arc::clone(&busy_ns);
+        for w in 0..workers {
+            let worker_ctx = child.clone();
             scope.spawn(move || {
-                parallel::with_threads(child_budget, || loop {
-                    let id = {
-                        let mut q = shared.ready.lock().unwrap();
-                        loop {
-                            if shared.done_count.load(Ordering::SeqCst) >= shared.total {
-                                return;
-                            }
-                            if let Some(id) = q.pop_front() {
-                                break id;
-                            }
-                            q = shared.cv.wait(q).unwrap();
-                        }
-                    };
-                    // run outside the lock
-                    let f = tasks.lock().unwrap()[id].take().expect("task taken twice");
-                    let tt = Instant::now();
-                    f();
-                    busy_ns.fetch_add(tt.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    shared.done_count.fetch_add(1, Ordering::SeqCst);
-                    // release dependents
-                    {
-                        let mut q = shared.ready.lock().unwrap();
-                        for &d in &dependents[id] {
-                            if shared.remaining[d].fetch_sub(1, Ordering::SeqCst) == 1 {
-                                q.push_back(d);
-                            }
-                        }
-                        let depth = q.len();
-                        max_depth.fetch_max(depth, Ordering::SeqCst);
-                        shared.cv.notify_all();
-                    }
-                })
+                worker_ctx.install(|| worker_loop(w, shared, tasks, dependents, &worker_ctx))
             });
         }
     });
     ExecStats {
         workers,
-        max_ready_depth: max_depth.load(Ordering::SeqCst),
+        max_ready_depth: shared.max_depth.load(Ordering::SeqCst),
         wall_seconds: t0.elapsed().as_secs_f64(),
-        busy_seconds: busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        busy_seconds: shared.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        steals: shared.steals.load(Ordering::Relaxed),
+        idle_waits: shared.idle_waits.load(Ordering::Relaxed),
+    }
+}
+
+fn worker_loop(
+    w: usize,
+    shared: &Shared,
+    tasks: &Mutex<Vec<Option<super::graph::TaskFn>>>,
+    dependents: &[Vec<usize>],
+    ctx: &ExecCtx,
+) {
+    loop {
+        if shared.done_count.load(Ordering::SeqCst) >= shared.total {
+            shared.cv.notify_all();
+            return;
+        }
+        // own deque first (front: program order for chains), then steal
+        // from a victim's back (shared protocol: parallel::steal_claim)
+        let claimed = steal_claim(&shared.queues, w);
+        if let Some((_, true)) = claimed {
+            shared.steals.fetch_add(1, Ordering::Relaxed);
+            ctx.count_steal();
+        }
+        let Some((id, _)) = claimed else {
+            // nothing ready anywhere, but tasks are still in flight on
+            // other workers: sleep until a completion pushes new work.
+            // The short timeout bounds the check-then-wait race.
+            shared.idle_waits.fetch_add(1, Ordering::Relaxed);
+            let guard = shared.sleep.lock().unwrap();
+            let _ = shared.cv.wait_timeout(guard, IDLE_WAIT).unwrap();
+            continue;
+        };
+        shared.ready_len.fetch_sub(1, Ordering::Relaxed);
+        // run outside every lock
+        let f = tasks.lock().unwrap()[id].take().expect("task taken twice");
+        let tt = Instant::now();
+        f();
+        shared.busy_ns.fetch_add(tt.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        ctx.count_executed();
+        shared.done_count.fetch_add(1, Ordering::SeqCst);
+        // release dependents onto our own deque (locality: they read what
+        // this task just wrote)
+        {
+            let mut q = shared.queues[w].lock().unwrap();
+            let mut newly = 0usize;
+            for &d in &dependents[id] {
+                if shared.remaining[d].fetch_sub(1, Ordering::SeqCst) == 1 {
+                    q.push_back(d);
+                    newly += 1;
+                }
+            }
+            if newly > 0 {
+                // count while still holding the deque lock: a thief can
+                // only pop these tasks after acquiring it, so their
+                // ready_len decrements always follow this increment and
+                // the counter can never transiently underflow
+                let depth = shared.ready_len.fetch_add(newly, Ordering::Relaxed) + newly;
+                shared.max_depth.fetch_max(depth, Ordering::Relaxed);
+            }
+        }
+        // wake sleepers: for new work, or (after the last task) to exit
+        shared.cv.notify_all();
     }
 }
 
@@ -153,7 +227,9 @@ pub fn run_graph(graph: TaskGraph, workers: usize) -> ExecStats {
 mod tests {
     use super::*;
     use crate::taskpar::graph::TaskGraph;
+    use crate::util::parallel::{self, Placement};
     use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
 
     #[test]
     fn runs_all_tasks() {
@@ -191,6 +267,7 @@ mod tests {
         let stats = run_graph(TaskGraph::new(), 2);
         assert_eq!(stats.max_ready_depth, 0);
         assert_eq!(stats.busy_seconds, 0.0);
+        assert_eq!(stats.steals, 0);
     }
 
     #[test]
@@ -203,8 +280,9 @@ mod tests {
                 c.fetch_add(1, Ordering::SeqCst);
             });
         }
-        run_graph(g, 1);
+        let stats = run_graph(g, 1);
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+        assert_eq!(stats.steals, 0, "a lone worker has nobody to steal from");
     }
 
     #[test]
@@ -234,5 +312,28 @@ mod tests {
         assert!(stats.busy_seconds >= 0.015, "busy {}", stats.busy_seconds);
         assert!(stats.speedup() > 0.0);
         assert!(stats.parallel_efficiency() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn ragged_roots_get_stolen() {
+        // compact seeding with a straggler at the head of worker 0's
+        // deque: once the other workers drain their own deques they must
+        // steal worker 0's backlog out from under it
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut g = TaskGraph::new();
+        for k in 0..32 {
+            let c = Arc::clone(&counter);
+            g.add(format!("t{k}"), &[], &[k], move || {
+                if k == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let ctx = ExecCtx::with_threads(4).with_placement(Placement::Compact);
+        let stats = run_graph_ctx(g, 4, &ctx);
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+        assert!(stats.steals > 0, "expected steals, got {:?}", stats);
+        assert_eq!(ctx.steal_stats().steals, stats.steals);
     }
 }

@@ -1,5 +1,6 @@
 //! Shared infrastructure: PRNG, timers, table formatting, and the
-//! scoped-thread parallel substrate.
+//! scoped-thread parallel substrate (`ExecCtx`: explicit execution
+//! contexts with a work-stealing pool — DESIGN.md §3).
 
 pub mod parallel;
 pub mod rng;

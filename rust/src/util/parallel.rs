@@ -1,41 +1,73 @@
-//! Scoped-thread parallel-for infrastructure — the multi-threading substrate
-//! of the whole stack (DESIGN.md §Threading-Model).
+//! Scoped-thread parallel infrastructure — the multi-threading substrate
+//! of the whole stack (DESIGN.md §3 Threading-Model).
 //!
 //! The paper's platform is an 8-core machine running multi-threaded BLAS, a
 //! SuperMatrix-style task runtime, and a parallel tridiagonal eigensolver.
 //! This module is the std-only substitute for the thread-pool layer those
 //! libraries bring along (GotoBLAS threads, SuperMatrix workers, MR³-SMP's
-//! pthreads): data-parallel helpers built on [`std::thread::scope`] plus a
-//! cooperative *thread-budget* protocol that keeps nested parallel regions
-//! (e.g. a task-parallel tile kernel calling a parallel GEMM, or concurrent
-//! coordinator jobs each running a parallel solver) from oversubscribing
-//! the machine.
+//! pthreads): data-parallel helpers built on [`std::thread::scope`] plus an
+//! explicit **execution context** ([`ExecCtx`]) that carries a thread
+//! budget, a work-stealing pool handle, and placement hints from the
+//! coordinator down through the solvers to the kernels.
+//!
+//! ## ExecCtx
+//!
+//! [`ExecCtx`] is the unit of parallel resource management: every layer
+//! that forks work receives one (explicitly as a parameter, or ambiently
+//! via [`ExecCtx::current`]) instead of consulting a hidden global.
+//! [`ExecCtx::global`] keeps the public API ergonomic — it binds to the
+//! process-wide setting (`GSYEIG_THREADS` / [`set_global_threads`]) and the
+//! shared global pool, so `dstebz(&t, 0, 9)` still "just works".
+//! [`ExecCtx::install`] scopes a context onto the current thread; nested
+//! regions *split* their parent's budget (see below), never multiply it.
+//!
+//! ## Static partitioning vs work stealing
+//!
+//! * [`parallel_chunks`] / [`parallel_map`] use **static index
+//!   partitioning**: the split is a pure function of `(n, threads)`.
+//!   [`parallel_for`] self-schedules indices over a shared atomic counter
+//!   (which worker runs which index varies run to run), but like the
+//!   static helpers it never changes per-index arithmetic, so all three
+//!   produce results bitwise independent of the thread count — the
+//!   determinism contract `tests/prop_threading.rs` pins down.
+//! * [`ExecCtx::parallel_items`] (ragged task sets: eigenvalue clusters,
+//!   uneven tile rows) and the DAG scheduler's `run_graph` use **work
+//!   stealing**: per-worker `Mutex<VecDeque>` deques, owners pop the front,
+//!   idle workers steal from a victim's back.  Scheduling order varies run
+//!   to run, but each item is still self-contained, so results do not.
+//!   Steal/execution counters accumulate on the ctx's pool handle
+//!   ([`ExecCtx::steal_stats`]) for the Table-4 efficiency reporting.
 //!
 //! ## Configuration
 //!
 //! * `GSYEIG_THREADS=<n>` — environment knob, read once per process.
 //! * [`set_global_threads`] — programmatic override (takes precedence).
 //! * [`with_threads`] — scoped, thread-local budget for one region; this is
-//!   what the schedulers use to give each worker a fair share.
+//!   what [`ExecCtx::install`] uses under the hood.
 //!
-//! ## Determinism
+//! ## Offload interplay
 //!
-//! The helpers only split *index spaces*; they never change the arithmetic
-//! performed per index. Callers that keep per-index work self-contained
-//! (as `dstebz`'s per-eigenvalue bisection does) therefore produce results
-//! bitwise identical at every thread count — the property
-//! `tests/prop_threading.rs` pins down.
+//! While a stage runs on the accelerator the host cores idle (the paper's
+//! GPU timelines); [`with_offloaded_stage`] pins the *calling* thread's
+//! nested budget to 1 for the duration and counts the stage in a global
+//! gauge ([`active_offload_stages`]), so host-side helpers invoked around a
+//! device call (packing loops, fallbacks) do not fork threads that would
+//! fight the transfer for memory bandwidth.
 
-use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
 static OVERRIDE_THREADS: AtomicUsize = AtomicUsize::new(0);
+static ACTIVE_OFFLOADS: AtomicUsize = AtomicUsize::new(0);
 
 thread_local! {
     /// Thread-local budget: 0 = unset (fall back to the global setting).
     static BUDGET: Cell<usize> = Cell::new(0);
+    /// Innermost installed execution context (None = use the global ctx).
+    static CURRENT_CTX: RefCell<Option<ExecCtx>> = RefCell::new(None);
 }
 
 /// The process-wide thread setting: [`set_global_threads`] override if any,
@@ -92,10 +124,362 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
-/// Run `f(i)` for every `i in 0..n`, work-stealing indices over up to
-/// `current_threads()` scoped workers.  Each worker's own budget is the
-/// parent's share, so nested parallel calls degrade to serial instead of
-/// multiplying threads.
+// ---------------------------------------------------------------------------
+// Offload interplay
+// ---------------------------------------------------------------------------
+
+struct OffloadGuard;
+
+impl Drop for OffloadGuard {
+    fn drop(&mut self) {
+        ACTIVE_OFFLOADS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Run `f` as an *offloaded stage*: the calling thread's nested host budget
+/// shrinks to 1 (its cores are idle while the device computes — DESIGN.md
+/// §3), and the stage is counted in the [`active_offload_stages`] gauge for
+/// the duration (guard-dropped even on unwind).
+pub fn with_offloaded_stage<R>(f: impl FnOnce() -> R) -> R {
+    ACTIVE_OFFLOADS.fetch_add(1, Ordering::Relaxed);
+    let _guard = OffloadGuard;
+    with_threads(1, f)
+}
+
+/// Number of stages currently executing on the accelerator, process-wide.
+pub fn active_offload_stages() -> usize {
+    ACTIVE_OFFLOADS.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Execution contexts
+// ---------------------------------------------------------------------------
+
+/// Placement hint for distributing work across a ctx's workers.
+///
+/// A *hint*, not a binding (std has no portable thread-affinity API):
+/// it picks the initial distribution of items over the per-worker deques.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Round-robin items over all workers (default: balances homogeneous
+    /// work up front, minimal stealing needed).
+    #[default]
+    Spread,
+    /// Pack items onto the lowest-indexed workers (keeps cache-warm work
+    /// together; relies on stealing to balance).
+    Compact,
+}
+
+/// Snapshot of a ctx pool's work-stealing counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StealStats {
+    /// Items obtained by stealing from another worker's deque.
+    pub steals: u64,
+    /// Items executed in total (stolen or not).
+    pub executed: u64,
+}
+
+/// The persistent identity of a ctx's worker pool: steal/execution counters
+/// shared (via `Arc`) by the ctx and every child split from it.
+///
+/// The *deques themselves* are created per parallel region, not stored
+/// here: regions nest (a stolen cluster may run a parallel GEMM), so one
+/// shared set of deques would interleave indices from unrelated regions.
+/// What persists across calls — and across the ctx → child-ctx tree — is
+/// this handle and its counters.
+#[derive(Debug, Default)]
+pub struct StealPool {
+    steals: AtomicU64,
+    executed: AtomicU64,
+}
+
+impl StealPool {
+    fn snapshot(&self) -> StealStats {
+        StealStats {
+            steals: self.steals.load(Ordering::Relaxed),
+            executed: self.executed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn global_pool() -> Arc<StealPool> {
+    static POOL: OnceLock<Arc<StealPool>> = OnceLock::new();
+    Arc::clone(POOL.get_or_init(|| Arc::new(StealPool::default())))
+}
+
+/// An explicit execution context: thread budget + work-stealing pool handle
+/// + placement hint.  See the module docs for the full model.
+///
+/// `threads == 0` means *inherit*: the ctx resolves to the ambient budget
+/// ([`current_threads`]) at use time, so a config built before a
+/// `with_threads` scope still honours that scope.
+#[derive(Clone)]
+pub struct ExecCtx {
+    threads: usize,
+    placement: Placement,
+    pool: Arc<StealPool>,
+}
+
+impl std::fmt::Debug for ExecCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecCtx")
+            .field("threads", &self.threads)
+            .field("placement", &self.placement)
+            .field("stats", &self.pool.snapshot())
+            .finish()
+    }
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx::global()
+    }
+}
+
+impl ExecCtx {
+    /// The default context: inherits the ambient budget (`GSYEIG_THREADS` /
+    /// [`with_threads`] scope) and shares the process-global pool.
+    pub fn global() -> ExecCtx {
+        ExecCtx { threads: 0, placement: Placement::Spread, pool: global_pool() }
+    }
+
+    /// A context with a fixed thread budget and a fresh pool (fresh
+    /// counters — what the coordinator hands each job).
+    pub fn with_threads(threads: usize) -> ExecCtx {
+        ExecCtx {
+            threads: threads.max(1),
+            placement: Placement::Spread,
+            pool: Arc::new(StealPool::default()),
+        }
+    }
+
+    /// The innermost installed context on this thread (budget re-resolved
+    /// from the ambient [`current_threads`], so nested [`with_threads`]
+    /// scopes are honoured), else [`ExecCtx::global`].
+    pub fn current() -> ExecCtx {
+        CURRENT_CTX
+            .with(|c| c.borrow().clone())
+            .map(|ctx| ExecCtx { threads: 0, ..ctx })
+            .unwrap_or_else(ExecCtx::global)
+    }
+
+    /// Replace the placement hint.
+    pub fn with_placement(mut self, placement: Placement) -> ExecCtx {
+        self.placement = placement;
+        self
+    }
+
+    /// The effective thread budget of this ctx.
+    pub fn threads(&self) -> usize {
+        if self.threads == 0 {
+            current_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    /// A child ctx with an explicit budget, sharing this ctx's pool handle
+    /// (so steal counters aggregate up the ctx tree) and placement.
+    pub fn child(&self, threads: usize) -> ExecCtx {
+        ExecCtx {
+            threads: threads.max(1),
+            placement: self.placement,
+            pool: Arc::clone(&self.pool),
+        }
+    }
+
+    /// A child ctx holding a `1/parts` share of this ctx's budget — what
+    /// schedulers hand each of their `parts` workers so nested regions
+    /// split rather than multiply threads.
+    pub fn split(&self, parts: usize) -> ExecCtx {
+        self.child((self.threads() / parts.max(1)).max(1))
+    }
+
+    /// Run `f` with this ctx installed on the current thread: the ambient
+    /// budget becomes `self.threads()` and [`ExecCtx::current`] returns
+    /// this ctx's pool/placement.  Restored on exit, including on unwind.
+    pub fn install<R>(&self, f: impl FnOnce() -> R) -> R {
+        struct CtxGuard(Option<ExecCtx>);
+        impl Drop for CtxGuard {
+            fn drop(&mut self) {
+                let prev = self.0.take();
+                CURRENT_CTX.with(|c| *c.borrow_mut() = prev);
+            }
+        }
+        // resolve once, before touching any thread-local state
+        let n = self.threads();
+        let resolved = self.child(n);
+        let prev = CURRENT_CTX.with(|c| c.borrow_mut().replace(resolved));
+        let _guard = CtxGuard(prev);
+        with_threads(n, f)
+    }
+
+    /// Snapshot of the pool's steal counters (aggregated over this ctx and
+    /// every child split from it).
+    pub fn steal_stats(&self) -> StealStats {
+        self.pool.snapshot()
+    }
+
+    /// Charge one steal to this ctx's pool counters (the DAG scheduler
+    /// aggregates its steals here so coordinator-level stats see them).
+    pub(crate) fn count_steal(&self) {
+        self.pool.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Charge one executed work item to this ctx's pool counters.
+    pub(crate) fn count_executed(&self) {
+        self.pool.executed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Statically partitioned `f(i)` for `i in 0..n` under this ctx's
+    /// budget (deterministic — see module docs).
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.install(|| parallel_for(n, f));
+    }
+
+    /// Statically partitioned `(0..n).map(f).collect()` under this ctx's
+    /// budget (deterministic).
+    pub fn parallel_map<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        self.install(|| parallel_map(n, f))
+    }
+
+    /// Statically partitioned chunk sweep under this ctx's budget
+    /// (deterministic).
+    pub fn parallel_chunks<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        self.install(|| parallel_chunks(data, chunk, f));
+    }
+
+    /// Consume `items`, calling `f` on each, over a **work-stealing** deque
+    /// pool: one `Mutex<VecDeque>` per worker seeded by the placement hint;
+    /// owners pop the front, idle workers steal from a victim's back.
+    ///
+    /// This is the ragged-workload path (eigenvalue clusters, uneven tile
+    /// rows): per-item work may vary wildly, and stealing keeps every lane
+    /// busy where the old round-robin bucket assignment serialized on the
+    /// unluckiest bucket.  Each item is executed exactly once (it lives in
+    /// exactly one deque and every pop is exclusive); as long as items are
+    /// self-contained (they own or uniquely borrow their outputs), results
+    /// are independent of the scheduling order.
+    pub fn parallel_items<T, F>(&self, items: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(T) + Sync,
+    {
+        let len = items.len();
+        let t = self.threads().min(len);
+        if t <= 1 {
+            // still install: a 1-lane ctx must cap nested regions inside
+            // `f` exactly like the parallel branch's worker ctxs do
+            self.install(|| {
+                for it in items {
+                    f(it);
+                }
+            });
+            self.pool.executed.fetch_add(len as u64, Ordering::Relaxed);
+            return;
+        }
+        let child_budget = (self.threads() / t).max(1);
+        let queues = seed_queues(items, t, self.placement);
+        let queues = &queues;
+        let f = &f;
+        let pool = &self.pool;
+        std::thread::scope(|s| {
+            for w in 0..t {
+                let worker_ctx = self.child(child_budget);
+                s.spawn(move || {
+                    worker_ctx.install(|| {
+                        // every deque empty and no new work is ever
+                        // produced: done
+                        while let Some((item, stolen)) = steal_claim(queues, w) {
+                            if stolen {
+                                pool.steals.fetch_add(1, Ordering::Relaxed);
+                            }
+                            f(item);
+                            pool.executed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                });
+            }
+        });
+    }
+}
+
+/// Distribute `items` over `t` per-worker deques per the placement hint
+/// (`Spread` round-robins, `Compact` packs onto the low-index workers) and
+/// wrap them for the stealing workers.  Shared by
+/// [`ExecCtx::parallel_items`] and the DAG scheduler so the seeding half
+/// of the stealing protocol cannot drift between them; the deques are
+/// built unwrapped (no worker exists yet), then wrapped once.
+pub(crate) fn seed_queues<T>(
+    items: Vec<T>,
+    t: usize,
+    placement: Placement,
+) -> Vec<Mutex<VecDeque<T>>> {
+    let len = items.len();
+    let t = t.max(1);
+    let mut queues: Vec<VecDeque<T>> =
+        (0..t).map(|_| VecDeque::with_capacity(len.div_ceil(t))).collect();
+    match placement {
+        Placement::Spread => {
+            for (i, it) in items.into_iter().enumerate() {
+                queues[i % t].push_back(it);
+            }
+        }
+        Placement::Compact => {
+            let per = len.div_ceil(t).max(1);
+            for (i, it) in items.into_iter().enumerate() {
+                queues[i / per].push_back(it);
+            }
+        }
+    }
+    queues.into_iter().map(Mutex::new).collect()
+}
+
+/// Claim one work item for worker `w` from a set of per-worker deques:
+/// pop the front of `w`'s own deque, else sweep the victims `w+1, w+2, …`
+/// and steal from the first non-empty deque's back.  Returns the item and
+/// whether it was stolen; `None` means every deque was empty at scan time.
+/// Shared by [`ExecCtx::parallel_items`] and the DAG scheduler so the
+/// stealing protocol cannot drift between them.
+pub(crate) fn steal_claim<T>(queues: &[Mutex<VecDeque<T>>], w: usize) -> Option<(T, bool)> {
+    if let Some(it) = queues[w].lock().unwrap().pop_front() {
+        return Some((it, false));
+    }
+    let t = queues.len();
+    for off in 1..t {
+        let v = (w + off) % t;
+        if let Some(it) = queues[v].lock().unwrap().pop_back() {
+            return Some((it, true));
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Static-partitioning helpers (deterministic; free functions resolve the
+// ambient budget — `ExecCtx::global()` semantics)
+// ---------------------------------------------------------------------------
+
+/// Run `f(i)` for every `i in 0..n`, work-sharing indices over up to
+/// `current_threads()` scoped workers.  Each worker installs a child of
+/// the ambient [`ExecCtx`] holding the parent's share of the budget, so
+/// nested parallel calls degrade to serial instead of multiplying threads
+/// and nested stealing activity keeps charging the ambient ctx's pool.
 pub fn parallel_for<F>(n: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -107,14 +491,15 @@ where
         }
         return;
     }
-    let child = (current_threads() / t).max(1);
+    let worker_ctx = ExecCtx::current().split(t);
     let next = AtomicUsize::new(0);
     let f = &f;
     let next = &next;
     std::thread::scope(|s| {
         for _ in 0..t {
+            let wctx = worker_ctx.clone();
             s.spawn(move || {
-                with_threads(child, || loop {
+                wctx.install(|| loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
@@ -127,32 +512,43 @@ where
 }
 
 /// Consume `items`, calling `f` on each from up to `current_threads()`
-/// scoped workers (round-robin assignment — deterministic, no locking).
+/// scoped workers (static round-robin assignment — deterministic, no
+/// locking).  For ragged task sets prefer [`ExecCtx::parallel_items`],
+/// which work-steals.
 pub fn parallel_items<T, F>(items: Vec<T>, f: F)
 where
     T: Send,
     F: Fn(T) + Sync,
 {
-    let t = current_threads().min(items.len());
+    let len = items.len();
+    let t = current_threads().min(len);
     if t <= 1 {
         for it in items {
             f(it);
         }
         return;
     }
-    let child = (current_threads() / t).max(1);
-    let mut buckets: Vec<Vec<T>> = Vec::new();
+    let worker_ctx = ExecCtx::current().split(t);
+    let mut buckets: Vec<Vec<T>> = Vec::with_capacity(t);
     for _ in 0..t {
-        buckets.push(Vec::new());
+        buckets.push(Vec::with_capacity(len.div_ceil(t)));
     }
     for (i, it) in items.into_iter().enumerate() {
         buckets[i % t].push(it);
     }
     let f = &f;
+    let worker_ctx = &worker_ctx;
     std::thread::scope(|s| {
         for bucket in buckets {
+            if bucket.is_empty() {
+                // defensive: unreachable while t = min(threads, len) (every
+                // round-robin bucket then gets ≥ 1 item), but a future
+                // placement-driven worker count must not spawn for nothing
+                continue;
+            }
+            let wctx = worker_ctx.clone();
             s.spawn(move || {
-                with_threads(child, || {
+                wctx.install(|| {
                     for it in bucket {
                         f(it);
                     }
@@ -289,5 +685,84 @@ mod tests {
         assert!(out.is_empty());
         let mut empty: Vec<f64> = vec![];
         parallel_chunks(&mut empty, 4, |_, _| panic!("must not run"));
+        ExecCtx::with_threads(4).parallel_items(Vec::<usize>::new(), |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn exec_ctx_install_sets_ambient_budget() {
+        let ctx = ExecCtx::with_threads(3);
+        ctx.install(|| {
+            assert_eq!(current_threads(), 3);
+            assert_eq!(ExecCtx::current().threads(), 3);
+            // nested with_threads still wins over the installed ctx
+            with_threads(2, || assert_eq!(ExecCtx::current().threads(), 2));
+        });
+    }
+
+    #[test]
+    fn exec_ctx_inherits_ambient_when_deferred() {
+        // a ctx built outside a with_threads scope still honours it
+        let ctx = ExecCtx::global();
+        with_threads(6, || assert_eq!(ctx.threads(), 6));
+    }
+
+    #[test]
+    fn exec_ctx_split_shares_pool() {
+        let ctx = ExecCtx::with_threads(8);
+        let child = ctx.split(4);
+        assert_eq!(child.threads(), 2);
+        // counters charged on the child aggregate on the parent's pool
+        child.count_steal();
+        child.count_executed();
+        assert_eq!(ctx.steal_stats(), StealStats { steals: 1, executed: 1 });
+    }
+
+    #[test]
+    fn stealing_items_runs_every_item_once() {
+        let hits = (0..103).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>();
+        let ctx = ExecCtx::with_threads(4);
+        let items: Vec<usize> = (0..103).collect();
+        ctx.parallel_items(items, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "item {i}");
+        }
+        assert_eq!(ctx.steal_stats().executed, 103);
+    }
+
+    #[test]
+    fn stealing_balances_ragged_items() {
+        // one huge item in worker 0's deque + many small ones: the small
+        // ones must not wait behind it (the old round-robin pathology).
+        // We can't assert timing, but we can assert stealing engaged when
+        // the seed distribution is maximally imbalanced (Compact).
+        let ctx = ExecCtx::with_threads(4).with_placement(Placement::Compact);
+        let items: Vec<u64> = (0..64).collect();
+        let sum = AtomicU64::new(0);
+        ctx.parallel_items(items, |it| {
+            if it == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            sum.fetch_add(it, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 63 * 64 / 2);
+        assert!(
+            ctx.steal_stats().steals > 0,
+            "compact seeding with a straggler must trigger steals"
+        );
+    }
+
+    #[test]
+    fn offload_stage_shrinks_host_budget() {
+        with_threads(4, || {
+            assert_eq!(active_offload_stages(), 0);
+            with_offloaded_stage(|| {
+                assert_eq!(current_threads(), 1);
+                assert_eq!(active_offload_stages(), 1);
+            });
+            assert_eq!(current_threads(), 4);
+            assert_eq!(active_offload_stages(), 0);
+        });
     }
 }

@@ -15,6 +15,7 @@ fn inline_spec(n: usize, s: usize, seed: u64) -> JobSpec {
         s,
         variant: None,
         b_cache_key: None,
+        exec_threads: None,
     }
 }
 
@@ -39,11 +40,11 @@ fn mixed_job_stream_completes_in_order() {
 fn workload_specs_realize_and_solve() {
     let coord = Coordinator::new(CoordinatorConfig::default());
     coord
-        .submit(Job { id: 0, spec: JobSpec { workload: WorkloadSpec::Md { n: 90, seed: 1 }, s: 2, variant: None, b_cache_key: None } })
+        .submit(Job { id: 0, spec: JobSpec { workload: WorkloadSpec::Md { n: 90, seed: 1 }, s: 2, variant: None, b_cache_key: None, exec_threads: None } })
         .ok()
         .unwrap();
     coord
-        .submit(Job { id: 1, spec: JobSpec { workload: WorkloadSpec::Dft { n: 100, seed: 2 }, s: 3, variant: None, b_cache_key: None } })
+        .submit(Job { id: 1, spec: JobSpec { workload: WorkloadSpec::Dft { n: 100, seed: 2 }, s: 3, variant: None, b_cache_key: None, exec_threads: None } })
         .ok()
         .unwrap();
     coord.close();
@@ -78,6 +79,7 @@ fn scf_style_stream_hits_factor_cache() {
             s: 2,
             variant: Some(Variant::TD),
             b_cache_key: Some(1),
+            exec_threads: None,
         };
         coord.submit(Job { id, spec }).ok().unwrap();
     }

@@ -3,7 +3,7 @@
 //! inventory.  Requires `make artifacts` (the manifest ships sizes 256,
 //! 1000 and 1724 by default).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gsyeig::runtime::{ArtifactRegistry, OffloadKernels};
 use gsyeig::solver::accuracy::Accuracy;
@@ -13,8 +13,8 @@ use gsyeig::workloads::spectra::generate_problem;
 
 const N_ART: usize = 256; // an artifact size in the default manifest
 
-fn registry() -> Rc<ArtifactRegistry> {
-    Rc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"))
+fn registry() -> Arc<ArtifactRegistry> {
+    Arc::new(ArtifactRegistry::load_default().expect("run `make artifacts` first"))
 }
 
 #[test]
@@ -39,7 +39,7 @@ fn offloaded_solve_matches_truth_all_variants() {
     let (p, truth) = generate_problem(N_ART, &lams, 50.0, 21);
     let reg = registry();
     for variant in Variant::ALL {
-        let kernels = OffloadKernels::new(Rc::clone(&reg));
+        let kernels = OffloadKernels::new(Arc::clone(&reg));
         let cfg = SolverConfig::new(variant, 3, Which::Smallest);
         let sol = GsyeigSolver::with_kernels(cfg, kernels).solve(p.clone());
         for i in 0..3 {
@@ -82,7 +82,7 @@ fn device_memory_budget_forces_ki_fallback_at_scale() {
     // operands at N_ART
     let mut reg = ArtifactRegistry::load_default().unwrap();
     reg.set_device_memory(N_ART * N_ART * 8 + 4096);
-    let reg = Rc::new(reg);
+    let reg = Arc::new(reg);
     let lams: Vec<f64> = (0..N_ART).map(|i| i as f64 + 1.0).collect();
     let (p, truth) = generate_problem(N_ART, &lams, 50.0, 23);
     let kernels = OffloadKernels::new(reg);

@@ -9,15 +9,24 @@
 //! * tiled `potrf` / `sygst` — DAG execution under 1, 2, 8 workers agrees
 //!   with the dense reference (dependency edges force the same per-tile
 //!   accumulation order whatever the interleaving).
+//! * `ExecCtx::parallel_items` — ragged work over the work-stealing pool:
+//!   identical results at 1, 2, 8 threads (stealing moves items between
+//!   workers, never changes their arithmetic).
+//! * `sbrdt` — the wavefront bulge chase is **bitwise** identical to the
+//!   serial chase at every thread count.
+//! * `run_graph` — a ragged DAG under the work-stealing scheduler reports
+//!   nonzero steals and beats the wall-clock of the old static round-robin
+//!   assignment (modelled from the same per-task durations).
 
 use gsyeig::lapack::potrf::dpotrf_upper;
 use gsyeig::lapack::stebz::dstebz;
 use gsyeig::lapack::stein::dstein;
 use gsyeig::lapack::sygst::sygst_trsm;
 use gsyeig::matrix::{Matrix, SymTridiag};
-use gsyeig::taskpar::{tiled_potrf, tiled_sygst_trsm, TiledMatrix};
+use gsyeig::sbr::{sbrdt_ctx, syrdb};
+use gsyeig::taskpar::{run_graph_ctx, tiled_potrf, tiled_sygst_trsm, TaskGraph, TiledMatrix};
 use gsyeig::testing::{check_property, dim_in};
-use gsyeig::util::parallel::with_threads;
+use gsyeig::util::parallel::{with_threads, ExecCtx};
 use gsyeig::util::rng::Rng;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
@@ -141,6 +150,130 @@ fn tiled_sygst_matches_dense_at_every_worker_count() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn stealing_parallel_items_deterministic_on_ragged_sets() {
+    // ragged per-item work (item k does k+1 dependent float ops) writing
+    // into per-item slots: results must be identical whatever thread count
+    // executes — and whoever steals — each item.
+    check_property("work-stealing item determinism", 12, |rng| {
+        let len = 16 + rng.below(80);
+        let run = |threads: usize| -> Vec<f64> {
+            let mut out = vec![0.0f64; len];
+            {
+                let items: Vec<(usize, &mut f64)> =
+                    out.iter_mut().enumerate().collect();
+                ExecCtx::with_threads(threads).parallel_items(items, |(k, slot)| {
+                    let mut acc = 1.0f64;
+                    for i in 0..=k {
+                        acc = acc * 1.000001 + (i as f64).sin();
+                    }
+                    *slot = acc;
+                });
+            }
+            out
+        };
+        let base = run(1);
+        for threads in THREAD_COUNTS {
+            let got = run(threads);
+            for k in 0..len {
+                if base[k].to_bits() != got[k].to_bits() {
+                    return Err(format!(
+                        "item {k} differs at {threads} threads: {:?} vs {:?}",
+                        base[k], got[k]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wavefront_tt2_bitwise_matches_serial_chase() {
+    // the full TT1→TT2 pipeline on a dense symmetric matrix: the wavefront
+    // band→tridiagonal chase must be bitwise identical to the serial one
+    // at every thread count (matrix, accumulated Q, T, rotation count).
+    let n = 96;
+    let w = 6;
+    let mut rng = Rng::new(0x7A7E);
+    let a0 = Matrix::randn_sym(n, &mut rng);
+    let mut band = a0.clone();
+    let mut q0 = Matrix::identity(n);
+    syrdb(&mut band, w, Some(&mut q0));
+
+    let mut a1 = band.clone();
+    let mut q1 = q0.clone();
+    let (t1, r1) = sbrdt_ctx(&mut a1, w, Some(&mut q1), &ExecCtx::with_threads(1));
+    for threads in THREAD_COUNTS {
+        let mut at = band.clone();
+        let mut qt = q0.clone();
+        let (tt, rt) = sbrdt_ctx(&mut at, w, Some(&mut qt), &ExecCtx::with_threads(threads));
+        assert_eq!(r1, rt, "{threads} threads: rotation count");
+        assert_eq!(a1.max_abs_diff(&at), 0.0, "{threads} threads: matrix");
+        assert_eq!(q1.max_abs_diff(&qt), 0.0, "{threads} threads: Q");
+        for i in 0..n {
+            assert_eq!(t1.d[i].to_bits(), tt.d[i].to_bits(), "d[{i}] at {threads}");
+            if i + 1 < n {
+                assert_eq!(t1.e[i].to_bits(), tt.e[i].to_bits(), "e[{i}] at {threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_dag_steals_and_beats_round_robin() {
+    // 32 independent tasks, every 8th long: under the old deterministic
+    // round-robin with 4 workers, all four long tasks landed on worker 0
+    // (8 ≡ 0 mod 4) and the DAG serialized on it.  The work-stealing
+    // scheduler must report steals and finish well under that wall-clock.
+    // long/short chosen so the modelled round-robin wall (~128ms) has ~3x
+    // headroom over the ideal stealing wall (~44ms): scheduling jitter on
+    // a loaded CI runner (sibling tests run concurrently) stays well
+    // inside the margin, and the overshoot factor below absorbs slow
+    // sleeps themselves.
+    const WORKERS: usize = 4;
+    const LONG_MS: u64 = 30;
+    const SHORT_MS: u64 = 2;
+    let dur_ms = |k: usize| if k % 8 == 0 { LONG_MS } else { SHORT_MS };
+
+    let mut g = TaskGraph::new();
+    for k in 0..32usize {
+        let d = dur_ms(k);
+        g.add(format!("t{k}"), &[], &[k], move || {
+            std::thread::sleep(std::time::Duration::from_millis(d));
+        });
+    }
+    let ctx = ExecCtx::with_threads(WORKERS);
+    let stats = run_graph_ctx(g, WORKERS, &ctx);
+    assert!(stats.steals > 0, "ragged DAG must trigger steals: {stats:?}");
+
+    // model the old round-robin bucket assignment on the same durations,
+    // scaled by how much the sleeps actually overshot on this machine
+    // (stats.busy_seconds is the measured sum of task times)
+    let nominal_busy: u64 = (0..32).map(dur_ms).sum();
+    let overshoot = (stats.busy_seconds / (nominal_busy as f64 / 1e3)).max(1.0);
+    let mut bucket_ms = [0u64; WORKERS];
+    for k in 0..32usize {
+        bucket_ms[k % WORKERS] += dur_ms(k);
+    }
+    let round_robin_wall = *bucket_ms.iter().max().unwrap() as f64 / 1e3 * overshoot;
+    assert!(
+        stats.wall_seconds < round_robin_wall,
+        "stealing wall {:.3}s must beat modelled round-robin wall {:.3}s",
+        stats.wall_seconds,
+        round_robin_wall
+    );
+    // …equivalently, measured efficiency at least matches the round-robin
+    // model's busy/(wall·workers) on the same DAG
+    let rr_efficiency = stats.busy_seconds / (round_robin_wall * WORKERS as f64);
+    assert!(
+        stats.parallel_efficiency() >= rr_efficiency,
+        "stealing efficiency {:.2} below round-robin model {:.2}",
+        stats.parallel_efficiency(),
+        rr_efficiency
+    );
 }
 
 #[test]
