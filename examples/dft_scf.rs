@@ -56,13 +56,13 @@ fn main() {
             for i in 0..n {
                 hk[(i, i)] += 1e-3 * k as f64 * (i as f64 / n as f64);
             }
-            let spec = JobSpec {
-                workload: WorkloadSpec::Inline { a: hk, b: b.clone(), which: Which::Smallest },
+            // router decides the variant (§6 policy); B is shared within
+            // the cycle, so all k-points reuse one Cholesky factor
+            let mut spec = JobSpec::new(
+                WorkloadSpec::Inline { a: hk, b: b.clone(), which: Which::Smallest },
                 s,
-                variant: None,                   // router decides (§6 policy)
-                b_cache_key: Some(cycle as u64), // B shared within the cycle
-                exec_threads: None,              // coordinator sizes the ctx
-            };
+            );
+            spec.b_cache_key = Some(cycle as u64);
             coord.submit(Job { id: k, spec }).ok().expect("queue closed");
         }
         coord.close();

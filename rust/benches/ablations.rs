@@ -118,7 +118,7 @@ fn ablation_lanczos_basis() {
         let mut cfg = LanczosConfig::new(s, Want::Largest);
         cfg.m = m;
         let t0 = Instant::now();
-        let r = lanczos_solve(&op, &cfg);
+        let r = lanczos_solve(&op, &cfg).unwrap();
         t.row(vec![
             m.to_string(),
             r.matvecs.to_string(),

@@ -147,7 +147,49 @@ pub fn run_stage_table<K: Kernels>(
         let acc = Accuracy::measure(&a0, &b0, &sol.eigenvalues, &sol.x);
         table.solutions.insert(vname, (sol.eigenvalues, acc));
     }
+    emit_stage_json(&table, kernels.name());
     table
+}
+
+/// Machine-readable mirror of a stage table (`BENCH_stages_<kind>_<backend>.json`),
+/// emitted only when `GSYEIG_BENCH_JSON` is set.
+fn emit_stage_json(table: &StageTable, backend: &str) {
+    use super::json::{maybe_emit, JsonObject, JsonValue};
+    let kname = match table.kind {
+        ExperimentKind::Md => "md",
+        ExperimentKind::Dft => "dft",
+    };
+    let mut obj = JsonObject::new();
+    obj.str("experiment", table.kind.label());
+    obj.str("backend", backend);
+    let mut stages = JsonObject::new();
+    for (stage, per_variant) in &table.rows {
+        let mut row = JsonObject::new();
+        for (v, secs) in per_variant {
+            row.num(v, *secs);
+        }
+        stages.set(stage, JsonValue::Obj(row));
+    }
+    obj.set("stage_seconds", JsonValue::Obj(stages));
+    let mut totals = JsonObject::new();
+    for (v, secs) in &table.totals {
+        totals.num(v, *secs);
+    }
+    obj.set("total_seconds", JsonValue::Obj(totals));
+    let mut mv = JsonObject::new();
+    for (v, m) in &table.matvecs {
+        mv.num(v, *m as f64);
+    }
+    obj.set("matvecs", JsonValue::Obj(mv));
+    let mut acc = JsonObject::new();
+    for (v, (_, a)) in &table.solutions {
+        let mut pair = JsonObject::new();
+        pair.num("orthogonality", a.orthogonality);
+        pair.num("residual", a.residual);
+        acc.set(v, JsonValue::Obj(pair));
+    }
+    obj.set("accuracy", JsonValue::Obj(acc));
+    maybe_emit(&format!("stages_{kname}_{backend}"), &obj);
 }
 
 /// Borrowing adapter so one backend instance serves all four variants.

@@ -1,0 +1,172 @@
+//! Minimal std-only JSON emitter for machine-readable benchmark results.
+//!
+//! Experiment and serve runs print human tables; CI and scripts want the
+//! same numbers as JSON.  Setting `GSYEIG_BENCH_JSON` to a directory (or
+//! `1` for the current directory) makes the harness drop a
+//! `BENCH_<name>.json` file next to each table via [`maybe_emit`].
+
+use std::fmt::Write as _;
+
+/// A JSON value.  Only the shapes the bench harness needs.
+#[derive(Clone, Debug)]
+pub enum JsonValue {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<JsonValue>),
+    Obj(JsonObject),
+}
+
+/// An insertion-ordered JSON object.
+#[derive(Clone, Debug, Default)]
+pub struct JsonObject {
+    entries: Vec<(String, JsonValue)>,
+}
+
+fn escape(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl JsonValue {
+    fn render_into(&self, out: &mut String) {
+        match self {
+            JsonValue::Num(v) => {
+                if v.is_finite() {
+                    let _ = write!(out, "{v}");
+                } else {
+                    // JSON has no Inf/NaN literals; null keeps parsers happy
+                    out.push_str("null");
+                }
+            }
+            JsonValue::Str(s) => escape(s, out),
+            JsonValue::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    it.render_into(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(o) => o.render_into(out),
+        }
+    }
+}
+
+impl JsonObject {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, key: &str, value: JsonValue) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    pub fn num(&mut self, key: &str, value: f64) {
+        self.set(key, JsonValue::Num(value));
+    }
+
+    pub fn str(&mut self, key: &str, value: &str) {
+        self.set(key, JsonValue::Str(value.to_string()));
+    }
+
+    pub fn bool(&mut self, key: &str, value: bool) {
+        self.set(key, JsonValue::Bool(value));
+    }
+
+    fn render_into(&self, out: &mut String) {
+        out.push('{');
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            escape(k, out);
+            out.push(':');
+            v.render_into(out);
+        }
+        out.push('}');
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+}
+
+/// Directory selected by `GSYEIG_BENCH_JSON`, if emission is enabled.
+fn emit_dir() -> Option<std::path::PathBuf> {
+    match std::env::var("GSYEIG_BENCH_JSON") {
+        Ok(v) if v.is_empty() || v == "0" => None,
+        Ok(v) if v == "1" => Some(std::path::PathBuf::from(".")),
+        Ok(v) => Some(std::path::PathBuf::from(v)),
+        Err(_) => None,
+    }
+}
+
+/// Write `BENCH_<name>.json` when `GSYEIG_BENCH_JSON` is set; no-op
+/// otherwise.  Emission failures warn on stderr but never abort a run.
+pub fn maybe_emit(name: &str, obj: &JsonObject) {
+    let Some(dir) = emit_dir() else { return };
+    let path = dir.join(format!("BENCH_{name}.json"));
+    if let Err(e) = std::fs::write(&path, obj.render() + "\n") {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested_object() {
+        let mut inner = JsonObject::new();
+        inner.num("gs1", 0.25);
+        inner.bool("cached", true);
+        let mut obj = JsonObject::new();
+        obj.str("kind", "md");
+        obj.set("stages", JsonValue::Obj(inner));
+        obj.set(
+            "eigenvalues",
+            JsonValue::Arr(vec![JsonValue::Num(1.0), JsonValue::Num(2.5)]),
+        );
+        assert_eq!(
+            obj.render(),
+            r#"{"kind":"md","stages":{"gs1":0.25,"cached":true},"eigenvalues":[1,2.5]}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings_and_maps_nonfinite_to_null() {
+        let mut obj = JsonObject::new();
+        obj.str("msg", "a\"b\\c\nd");
+        obj.num("resid", f64::INFINITY);
+        assert_eq!(obj.render(), r#"{"msg":"a\"b\\c\nd","resid":null}"#);
+    }
+
+    #[test]
+    fn maybe_emit_is_noop_when_env_unset() {
+        // no GSYEIG_BENCH_JSON in the test env: must not create files
+        let obj = JsonObject::new();
+        maybe_emit("does_not_exist", &obj);
+        assert!(!std::path::Path::new("BENCH_does_not_exist.json").exists());
+    }
+}

@@ -2,6 +2,7 @@
 //! `cargo bench` targets: one function per paper table/figure.
 
 pub mod harness;
+pub mod json;
 
 pub use harness::{
     fig_sweep, run_accuracy_table, run_stage_table, run_table4, run_table4_thread_sweep,

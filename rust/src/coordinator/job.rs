@@ -1,8 +1,13 @@
 //! Job descriptions and outcomes.
 
+use std::time::Duration;
+
 use crate::matrix::Matrix;
 use crate::solver::accuracy::Accuracy;
+use crate::solver::error::SolverError;
 use crate::solver::gsyeig::{Problem, Variant, Which};
+use crate::solver::report::SolveReport;
+use crate::util::faults::FaultPlan;
 
 /// Where the pencil comes from.
 #[derive(Clone)]
@@ -46,6 +51,21 @@ impl WorkloadSpec {
     }
 }
 
+/// How often and how fast to retry a failed job attempt.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Additional attempts after the first (0 = fail fast).
+    pub max_retries: u32,
+    /// Base backoff before a retry; doubles per attempt.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 0, backoff: Duration::from_millis(10) }
+    }
+}
+
 /// What to solve and how.
 #[derive(Clone)]
 pub struct JobSpec {
@@ -61,6 +81,30 @@ pub struct JobSpec {
     /// coordinator size it by problem dimension
     /// ([`super::router::job_thread_budget`]).
     pub exec_threads: Option<usize>,
+    /// Wall-clock budget for the whole job (all attempts share one
+    /// deadline); `None` = unbounded.
+    pub deadline: Option<Duration>,
+    /// Retry policy for worker panics and offload failures.
+    pub retry: RetryPolicy,
+    /// Deterministic fault-injection schedule (disarmed by default).
+    pub faults: FaultPlan,
+}
+
+impl JobSpec {
+    /// A spec with coordinator defaults: router-chosen variant, auto
+    /// thread budget, no cache key, no deadline, fail-fast, no faults.
+    pub fn new(workload: WorkloadSpec, s: usize) -> Self {
+        JobSpec {
+            workload,
+            s,
+            variant: None,
+            b_cache_key: None,
+            exec_threads: None,
+            deadline: None,
+            retry: RetryPolicy::default(),
+            faults: FaultPlan::disarmed(),
+        }
+    }
 }
 
 pub struct Job {
@@ -87,4 +131,10 @@ pub struct JobOutcome {
     pub gs1_cached: bool,
     /// Thread budget the coordinator granted this job's `ExecCtx`.
     pub ctx_threads: usize,
+    /// Terminal error after all retries, if the job failed (`None` = Ok).
+    pub error: Option<SolverError>,
+    /// Attempts taken (1 = first try succeeded).
+    pub attempts: u32,
+    /// Route/fallback provenance from the winning attempt.
+    pub report: SolveReport,
 }

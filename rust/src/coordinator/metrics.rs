@@ -13,6 +13,11 @@ struct Inner {
     jobs_done: usize,
     gs1_cache_hits: usize,
     matvecs_total: usize,
+    retries: usize,
+    timeouts: usize,
+    worker_panics: usize,
+    failures: usize,
+    fallbacks: usize,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -23,6 +28,16 @@ pub struct MetricsSnapshot {
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_mean: f64,
+    /// Job attempts re-run after a retryable failure.
+    pub retries: usize,
+    /// Attempts abandoned at their wall-clock deadline.
+    pub timeouts: usize,
+    /// Worker panics caught at the job boundary.
+    pub worker_panics: usize,
+    /// Jobs that exhausted all retries and returned an error outcome.
+    pub failures: usize,
+    /// In-solve fallback events (route switches, diagonal boosts, …).
+    pub fallbacks: usize,
 }
 
 impl Metrics {
@@ -38,6 +53,26 @@ impl Metrics {
             g.gs1_cache_hits += 1;
         }
         g.matvecs_total += matvecs;
+    }
+
+    pub fn record_retry(&self) {
+        self.inner.lock().unwrap().retries += 1;
+    }
+
+    pub fn record_timeout(&self) {
+        self.inner.lock().unwrap().timeouts += 1;
+    }
+
+    pub fn record_worker_panic(&self) {
+        self.inner.lock().unwrap().worker_panics += 1;
+    }
+
+    pub fn record_failure(&self) {
+        self.inner.lock().unwrap().failures += 1;
+    }
+
+    pub fn record_fallbacks(&self, n: usize) {
+        self.inner.lock().unwrap().fallbacks += n;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -58,6 +93,11 @@ impl Metrics {
             latency_p50: pct(0.5),
             latency_p95: pct(0.95),
             latency_mean: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
+            retries: g.retries,
+            timeouts: g.timeouts,
+            worker_panics: g.worker_panics,
+            failures: g.failures,
+            fallbacks: g.fallbacks,
         }
     }
 }
@@ -84,5 +124,24 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.jobs_done, 0);
         assert_eq!(s.latency_p95, 0.0);
+        assert_eq!(s.retries, 0);
+        assert_eq!(s.failures, 0);
+    }
+
+    #[test]
+    fn fault_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_retry();
+        m.record_retry();
+        m.record_timeout();
+        m.record_worker_panic();
+        m.record_failure();
+        m.record_fallbacks(3);
+        let s = m.snapshot();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.failures, 1);
+        assert_eq!(s.fallbacks, 3);
     }
 }

@@ -16,7 +16,12 @@
 //!   dimension-sized `ExecCtx`, with a Cholesky-factor cache keyed by the
 //!   B-matrix fingerprint (within an SCF cycle every k-point shares B —
 //!   GS1 is paid once);
-//! * [`metrics`] — throughput/latency accounting.
+//! * [`metrics`] — throughput/latency accounting, plus fault counters
+//!   (retries, timeouts, worker panics, fallbacks — DESIGN.md §7).
+//!
+//! Workers execute each attempt under `catch_unwind` with a per-job
+//! deadline token and retry policy, so one poisoned pencil or panicking
+//! kernel cannot take the pool down (DESIGN.md §7).
 
 pub mod job;
 pub mod metrics;
@@ -24,7 +29,7 @@ pub mod queue;
 pub mod router;
 pub mod server;
 
-pub use job::{Job, JobOutcome, JobSpec, WorkloadSpec};
-pub use queue::BoundedQueue;
+pub use job::{Job, JobOutcome, JobSpec, RetryPolicy, WorkloadSpec};
+pub use queue::{BoundedQueue, PushError};
 pub use router::{job_thread_budget, select_variant, RouterConfig};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -3,7 +3,40 @@
 //! needs no async machinery — see DESIGN.md substitution #6).
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::{Condvar, Mutex};
+
+/// Why a push was rejected.  Carries the item back so the producer can
+/// retry or requeue it elsewhere.
+pub enum PushError<T> {
+    /// Non-blocking [`BoundedQueue::try_push`] found the queue at capacity.
+    Full(T),
+    /// The queue was closed; no further items will be accepted.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the rejected item.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(item) | PushError::Closed(item) => item,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, PushError::Closed(_))
+    }
+}
+
+// Manual impl: the payload need not be Debug for `.unwrap()` to work.
+impl<T> fmt::Debug for PushError<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PushError::Full(_) => write!(f, "PushError::Full(..)"),
+            PushError::Closed(_) => write!(f, "PushError::Closed(..)"),
+        }
+    }
+}
 
 /// Bounded blocking queue.  `push` blocks while full (backpressure on the
 /// producer), `pop` blocks while empty; `close` drains producers and wakes
@@ -33,14 +66,34 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Blocking push; returns Err(item) if the queue is closed.
-    pub fn push(&self, item: T) -> Result<(), T> {
+    /// Blocking push; waits while full (backpressure), so the only error
+    /// is [`PushError::Closed`].
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
         let mut g = self.inner.lock().unwrap();
         while g.items.len() >= self.capacity && !g.closed {
             g = self.not_full.wait(g).unwrap();
         }
         if g.closed {
-            return Err(item);
+            return Err(PushError::Closed(item));
+        }
+        g.items.push_back(item);
+        let depth = g.items.len();
+        if depth > g.max_depth {
+            g.max_depth = depth;
+        }
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push: distinguishes a transient [`PushError::Full`]
+    /// (retry later) from a permanent [`PushError::Closed`].
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
         }
         g.items.push_back(item);
         let depth = g.items.len();
@@ -110,6 +163,34 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), None);
         assert!(q.push(2).is_err());
+    }
+
+    #[test]
+    fn push_after_close_reports_closed_with_item() {
+        let q = BoundedQueue::new(2);
+        q.close();
+        match q.push(7) {
+            Err(e) => {
+                assert!(e.is_closed());
+                assert_eq!(e.into_inner(), 7);
+            }
+            Ok(()) => panic!("push must fail on a closed queue"),
+        }
+    }
+
+    #[test]
+    fn try_push_distinguishes_full_from_closed() {
+        let q = BoundedQueue::new(1);
+        assert!(q.try_push(1).is_ok());
+        match q.try_push(2) {
+            Err(PushError::Full(item)) => assert_eq!(item, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        q.close();
+        match q.try_push(3) {
+            Err(PushError::Closed(item)) => assert_eq!(item, 3),
+            other => panic!("expected Closed, got {other:?}"),
+        }
     }
 
     #[test]

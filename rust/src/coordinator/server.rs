@@ -11,20 +11,25 @@
 //! Threading-Model).
 
 use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::util::cancel::CancelToken;
+use crate::util::faults::FaultSite;
 use crate::util::parallel::{self, ExecCtx};
 
 use crate::lapack::LapackError;
 use crate::matrix::Matrix;
 use crate::solver::accuracy::Accuracy;
 use crate::solver::backend::{Kernels, NativeKernels};
-use crate::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant};
+use crate::solver::error::SolverError;
+use crate::solver::gsyeig::{GsyeigSolver, Solution, SolverConfig, Variant};
+use crate::solver::report::SolveReport;
 
 use super::job::{Job, JobOutcome};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::queue::BoundedQueue;
+use super::queue::{BoundedQueue, PushError};
 use super::router::{job_thread_budget, select_variant, RouterConfig};
 
 #[derive(Clone, Debug)]
@@ -116,8 +121,9 @@ impl Coordinator {
         }
     }
 
-    /// Submit a job (blocks under backpressure).
-    pub fn submit(&self, job: Job) -> Result<(), Job> {
+    /// Submit a job (blocks under backpressure); fails with
+    /// [`PushError::Closed`] after [`Coordinator::close`].
+    pub fn submit(&self, job: Job) -> Result<(), PushError<Job>> {
         self.queue.push(job)
     }
 
@@ -170,10 +176,11 @@ impl Coordinator {
                             lanes_in_use.fetch_sub(wish - budget, Ordering::SeqCst);
                         }
                         let ctx = ExecCtx::with_threads(budget);
-                        let outcome =
-                            ctx.install(|| execute_job(job, &cache, &router_cfg, &ctx));
+                        let outcome = ctx
+                            .install(|| execute_job(job, &cache, &router_cfg, &ctx, &metrics));
                         lanes_in_use.fetch_sub(budget, Ordering::SeqCst);
                         metrics.record(outcome.total_seconds, outcome.gs1_cached, outcome.matvecs);
+                        metrics.record_fallbacks(outcome.report.events.len());
                         results.lock().unwrap().push(outcome);
                     }
                 });
@@ -185,51 +192,140 @@ impl Coordinator {
     }
 }
 
-fn execute_job(
-    job: Job,
+/// Render a caught panic payload into a human-readable message.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+/// One solve attempt: realize the pencil, solve, measure accuracy.
+fn run_attempt(
+    job: &Job,
+    variant: Variant,
     cache: &Arc<Mutex<HashMap<u64, Matrix>>>,
-    router_cfg: &RouterConfig,
     ctx: &ExecCtx,
-) -> JobOutcome {
+) -> Result<(Solution, Accuracy, bool), SolverError> {
     let (problem, which) = job.spec.workload.realize();
-    let n = problem.n();
-    let s = job.spec.s;
-    let (variant, reason) = match job.spec.variant {
-        Some(v) => (v, "caller-forced"),
-        None => select_variant(n, s, router_cfg),
-    };
     // keep the originals for the accuracy check (solver consumes its copy)
     let a0 = problem.a.clone();
     let b0 = problem.b.clone();
-
     let kernels = CachingKernels {
         inner: NativeKernels::default(),
         cache: Arc::clone(cache),
         key: job.spec.b_cache_key,
         hit: AtomicBool::new(false),
     };
-    let mut cfg = SolverConfig::new(variant, s, which);
+    let mut cfg = SolverConfig::new(variant, job.spec.s, which);
     cfg.exec = ctx.clone();
-    let ctx_threads = ctx.threads();
+    cfg.faults = job.spec.faults.clone();
     let solver = GsyeigSolver::with_kernels(cfg, kernels);
-    let t0 = std::time::Instant::now();
-    let sol = solver.solve(problem);
-    let total = t0.elapsed().as_secs_f64();
+    let sol = solver.try_solve(problem)?;
     let accuracy = Accuracy::measure(&a0, &b0, &sol.eigenvalues, &sol.x);
-    JobOutcome {
-        id: job.id,
-        variant,
-        router_reason: reason,
-        n,
-        s,
-        eigenvalues: sol.eigenvalues,
-        x: sol.x,
-        accuracy,
-        total_seconds: total,
-        matvecs: sol.matvecs,
-        converged: sol.converged,
-        gs1_cached: solver.kernels.hit.load(Ordering::Relaxed),
-        ctx_threads,
+    let gs1_cached = solver.kernels.hit.load(Ordering::Relaxed);
+    Ok((sol, accuracy, gs1_cached))
+}
+
+/// Execute a job with the fault-tolerance envelope: each attempt runs
+/// under `catch_unwind` so a worker panic cannot take down the pool, all
+/// attempts share one wall-clock deadline (cooperative, via the ctx's
+/// cancel token), and retryable failures (panics, offload errors) re-run
+/// with exponential backoff up to the spec's retry budget.  A job that
+/// exhausts its budget returns an error outcome instead of poisoning the
+/// queue — the coordinator always drains.
+fn execute_job(
+    job: Job,
+    cache: &Arc<Mutex<HashMap<u64, Matrix>>>,
+    router_cfg: &RouterConfig,
+    ctx: &ExecCtx,
+    metrics: &Metrics,
+) -> JobOutcome {
+    let n = job.spec.workload.n();
+    let s = job.spec.s;
+    let (variant, reason) = match job.spec.variant {
+        Some(v) => (v, "caller-forced"),
+        None => select_variant(n, s, router_cfg),
+    };
+    let ctx_threads = ctx.threads();
+    // one token for the whole job: retries share the deadline, so a
+    // timed-out job cannot extend its budget by failing
+    let token = job.spec.deadline.map(CancelToken::with_timeout);
+    let t0 = std::time::Instant::now();
+    let mut attempts = 0u32;
+    loop {
+        attempts += 1;
+        let mut attempt_ctx = ctx.clone();
+        if let Some(tok) = &token {
+            attempt_ctx = attempt_ctx.with_cancel(tok.clone());
+        }
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if job.spec.faults.fire(FaultSite::WorkerPanic) {
+                panic!("injected worker panic");
+            }
+            run_attempt(&job, variant, cache, &attempt_ctx)
+        }));
+        let err = match result {
+            Ok(Ok((sol, accuracy, gs1_cached))) => {
+                return JobOutcome {
+                    id: job.id,
+                    variant,
+                    router_reason: reason,
+                    n,
+                    s,
+                    eigenvalues: sol.eigenvalues,
+                    x: sol.x,
+                    accuracy,
+                    total_seconds: t0.elapsed().as_secs_f64(),
+                    matvecs: sol.matvecs,
+                    converged: sol.converged,
+                    gs1_cached,
+                    ctx_threads,
+                    error: None,
+                    attempts,
+                    report: sol.report,
+                };
+            }
+            Ok(Err(e)) => e,
+            Err(payload) => SolverError::WorkerPanic { detail: panic_message(payload) },
+        };
+        match &err {
+            SolverError::Timeout { .. } | SolverError::Cancelled { .. } => {
+                metrics.record_timeout()
+            }
+            SolverError::WorkerPanic { .. } => metrics.record_worker_panic(),
+            _ => {}
+        }
+        // deadline errors are not retryable — the shared token stays fired
+        let retryable =
+            matches!(err, SolverError::WorkerPanic { .. } | SolverError::Offload { .. });
+        if retryable && attempts <= job.spec.retry.max_retries {
+            metrics.record_retry();
+            std::thread::sleep(job.spec.retry.backoff * (1u32 << (attempts - 1).min(6)));
+            continue;
+        }
+        metrics.record_failure();
+        return JobOutcome {
+            id: job.id,
+            variant,
+            router_reason: reason,
+            n,
+            s,
+            eigenvalues: vec![],
+            x: Matrix::zeros(0, 0),
+            accuracy: Accuracy { residual: f64::INFINITY, orthogonality: f64::INFINITY },
+            total_seconds: t0.elapsed().as_secs_f64(),
+            matvecs: 0,
+            converged: false,
+            gs1_cached: false,
+            ctx_threads,
+            error: Some(err),
+            attempts,
+            report: SolveReport::default(),
+        };
     }
 }
 
@@ -244,13 +340,7 @@ mod tests {
     fn inline_spec(n: usize, s: usize, seed: u64) -> JobSpec {
         let lams: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
         let (p, _) = generate_problem(n, &lams, 20.0, seed);
-        JobSpec {
-            workload: WorkloadSpec::Inline { a: p.a, b: p.b, which: Which::Smallest },
-            s,
-            variant: None,
-            b_cache_key: None,
-            exec_threads: None,
-        }
+        JobSpec::new(WorkloadSpec::Inline { a: p.a, b: p.b, which: Which::Smallest }, s)
     }
 
     #[test]
@@ -288,8 +378,8 @@ mod tests {
         let (p, _) = generate_problem(n, &lams, 20.0, 99);
         let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
         for id in 0..3u64 {
-            let spec = JobSpec {
-                workload: WorkloadSpec::Inline {
+            let mut spec = JobSpec::new(
+                WorkloadSpec::Inline {
                     a: {
                         // different A per "k-point", same B
                         let mut a = p.a.clone();
@@ -299,11 +389,10 @@ mod tests {
                     b: p.b.clone(),
                     which: Which::Smallest,
                 },
-                s: 2,
-                variant: Some(Variant::TD),
-                b_cache_key: Some(42),
-                exec_threads: None,
-            };
+                2,
+            );
+            spec.variant = Some(Variant::TD);
+            spec.b_cache_key = Some(42);
             coord.submit(Job { id, spec }).ok().unwrap();
         }
         coord.close();

@@ -8,8 +8,11 @@
 //! pairs (KE3/KI5).
 
 use crate::blas::{daxpy, ddot, dgemm, dnrm2, dscal, Trans};
-use crate::lapack::syev::dsyev;
+use crate::lapack::syev::dsyev_robust;
 use crate::matrix::Matrix;
+use crate::solver::error::{checkpoint, SolverError};
+use crate::util::faults::{FaultPlan, FaultSite};
+use crate::util::parallel::ExecCtx;
 use crate::util::rng::Rng;
 use crate::util::timer::StageTimer;
 
@@ -35,11 +38,21 @@ pub struct LanczosConfig {
     pub max_matvecs: usize,
     pub want: Want,
     pub seed: u64,
+    /// Deterministic fault-injection schedule (disarmed by default).
+    pub faults: FaultPlan,
 }
 
 impl LanczosConfig {
     pub fn new(s: usize, want: Want) -> Self {
-        LanczosConfig { s, m: 0, tol: 0.0, max_matvecs: 200_000, want, seed: 0x1a2c_05 }
+        LanczosConfig {
+            s,
+            m: 0,
+            tol: 0.0,
+            max_matvecs: 200_000,
+            want,
+            seed: 0x1a2c_05,
+            faults: FaultPlan::disarmed(),
+        }
     }
 
     fn basis_size(&self, n: usize) -> usize {
@@ -63,15 +76,21 @@ pub struct LanczosResult {
     /// Wall-clock spent in the recurrence/orthogonalization (KE2/KI4) and
     /// in the final Ritz assembly (KE3/KI5), for the stage tables.
     pub stage_times: StageTimer,
+    /// Projected eigensolves that needed the dstebz+dstein fallback after a
+    /// dsteqr convergence failure.
+    pub steqr_fallbacks: usize,
 }
 
-/// Run thick-restart Lanczos on `op`.
-pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> LanczosResult {
+/// Run thick-restart Lanczos on `op`.  Polls the ambient [`ExecCtx`]'s
+/// cancel token once per restart cycle, so a deadline stops the iteration
+/// within one cycle.
+pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> Result<LanczosResult, SolverError> {
     let n = op.n();
     let s = cfg.s.min(n);
     let m = cfg.basis_size(n).max(s + 2).min(n);
     let tol = if cfg.tol <= 0.0 { f64::EPSILON } else { cfg.tol };
     let mut timer = StageTimer::new();
+    let mut steqr_fallbacks = 0usize;
 
     // Krylov basis V (n x m+1): m basis columns + the residual slot.
     let mut v = Matrix::zeros(n, m + 1);
@@ -92,6 +111,7 @@ pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> LanczosResult {
     let mut restarts = 0usize;
 
     loop {
+        checkpoint(&ExecCtx::current(), "lanczos")?;
         // ---- Lanczos extension from column k to m
         let mut alpha = vec![0.0; m];
         let mut beta = vec![0.0; m]; // beta[j]: coupling (v_j, v_{j+1})
@@ -165,7 +185,12 @@ pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> LanczosResult {
                 tm[(j, j + 1)] = beta[j];
             }
         }
-        let (theta, y) = dsyev(&tm).expect("projected eigenproblem");
+        let force_fallback = cfg.faults.fire(FaultSite::ProjectedNoConv);
+        let (theta, y, used_fallback) = dsyev_robust(&tm, force_fallback)
+            .map_err(|e| SolverError::from_lapack("lanczos", e))?;
+        if used_fallback {
+            steqr_fallbacks += 1;
+        }
         // wanted order: indices from the wanted end of the projected spectrum
         let order: Vec<usize> = match cfg.want {
             Want::Smallest => (0..mcur).collect(),
@@ -174,11 +199,15 @@ pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> LanczosResult {
         // residual estimates: |beta_last * y[last, i]|
         let blast = beta[mcur - 1];
         let tnorm = theta.iter().fold(0.0f64, |acc, t| acc.max(t.abs())).max(1.0);
-        let converged_count = order
+        let mut converged_count = order
             .iter()
             .take(s)
             .filter(|&&i| (blast * y[(mcur - 1, i)]).abs() <= tol.max(f64::EPSILON) * tnorm)
             .count();
+        if cfg.faults.fire(FaultSite::LanczosStall) {
+            // injected stall: pretend nothing converged this cycle
+            converged_count = 0;
+        }
         timer.add("ritz_assembly", t1.elapsed());
 
         let budget_exhausted = op.matvecs() >= cfg.max_matvecs;
@@ -210,14 +239,15 @@ pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> LanczosResult {
                 n,
             );
             timer.add("ritz_assembly", t2.elapsed());
-            return LanczosResult {
+            return Ok(LanczosResult {
                 eigenvalues: vals,
                 vectors: xs,
                 matvecs: op.matvecs(),
                 restarts,
                 converged: converged_count >= s,
                 stage_times: timer,
-            };
+                steqr_fallbacks,
+            });
         }
 
         // ---- thick restart: retain kr Ritz vectors from the wanted end
@@ -304,7 +334,7 @@ mod tests {
         let lams: Vec<f64> = (1..=60).map(|i| i as f64).collect();
         let a = with_spectrum(&lams, 1);
         let op = ExplicitOp::new(&a);
-        let r = lanczos_solve(&op, &LanczosConfig::new(5, Want::Largest));
+        let r = lanczos_solve(&op, &LanczosConfig::new(5, Want::Largest)).unwrap();
         assert!(r.converged);
         for (i, expect) in [60.0, 59.0, 58.0, 57.0, 56.0].iter().enumerate() {
             assert!(
@@ -320,7 +350,7 @@ mod tests {
         let lams: Vec<f64> = (1..=50).map(|i| (i * i) as f64).collect();
         let a = with_spectrum(&lams, 2);
         let op = ExplicitOp::new(&a);
-        let r = lanczos_solve(&op, &LanczosConfig::new(4, Want::Smallest));
+        let r = lanczos_solve(&op, &LanczosConfig::new(4, Want::Smallest)).unwrap();
         assert!(r.converged);
         for (i, expect) in [1.0, 4.0, 9.0, 16.0].iter().enumerate() {
             assert!((r.eigenvalues[i] - expect).abs() < 1e-7, "eig {i}");
@@ -332,7 +362,7 @@ mod tests {
         let lams: Vec<f64> = (0..40).map(|i| (i as f64 - 5.0) * 2.0).collect();
         let a = with_spectrum(&lams, 3);
         let op = ExplicitOp::new(&a);
-        let r = lanczos_solve(&op, &LanczosConfig::new(3, Want::Largest));
+        let r = lanczos_solve(&op, &LanczosConfig::new(3, Want::Largest)).unwrap();
         for j in 0..3 {
             let xj: Vec<f64> = r.vectors.col(j).to_vec();
             let ax = a.matvec_naive(&xj);
@@ -350,7 +380,7 @@ mod tests {
         let lams: Vec<f64> = (0..35).map(|i| (i as f64).exp().min(1e6)).collect();
         let a = with_spectrum(&lams, 4);
         let op = ExplicitOp::new(&a);
-        let r = lanczos_solve(&op, &LanczosConfig::new(4, Want::Largest));
+        let r = lanczos_solve(&op, &LanczosConfig::new(4, Want::Largest)).unwrap();
         let xtx = r.vectors.transpose().matmul_naive(&r.vectors);
         assert!(xtx.max_abs_diff(&Matrix::identity(4)) < 1e-9);
     }
@@ -362,7 +392,7 @@ mod tests {
         let a = Matrix::randn_sym(n, &mut rng);
         let (w, _) = dsyev(&a).unwrap();
         let op = ExplicitOp::new(&a);
-        let r = lanczos_solve(&op, &LanczosConfig::new(6, Want::Smallest));
+        let r = lanczos_solve(&op, &LanczosConfig::new(6, Want::Smallest)).unwrap();
         for i in 0..6 {
             assert!(
                 (r.eigenvalues[i] - w[i]).abs() < 1e-7 * a.frobenius_norm(),
@@ -382,7 +412,7 @@ mod tests {
         let op = ExplicitOp::new(&a);
         let mut cfg = LanczosConfig::new(3, Want::Smallest);
         cfg.tol = 1e-10;
-        let r = lanczos_solve(&op, &cfg);
+        let r = lanczos_solve(&op, &cfg).unwrap();
         assert!(r.converged, "matvecs={} restarts={}", r.matvecs, r.restarts);
         assert!((r.eigenvalues[0] - 1.0).abs() < 1e-6);
     }
@@ -394,7 +424,7 @@ mod tests {
         let op = ExplicitOp::new(&a);
         let mut cfg = LanczosConfig::new(10, Want::Smallest);
         cfg.max_matvecs = 25;
-        let r = lanczos_solve(&op, &cfg);
+        let r = lanczos_solve(&op, &cfg).unwrap();
         assert!(r.matvecs <= 26, "matvecs {}", r.matvecs);
     }
 
@@ -403,7 +433,7 @@ mod tests {
         let lams: Vec<f64> = (1..=30).map(|i| i as f64).collect();
         let a = with_spectrum(&lams, 8);
         let op = ExplicitOp::new(&a);
-        let r = lanczos_solve(&op, &LanczosConfig::new(2, Want::Largest));
+        let r = lanczos_solve(&op, &LanczosConfig::new(2, Want::Largest)).unwrap();
         assert!(r.matvecs > 0);
         assert_eq!(r.matvecs, op.matvecs());
     }

@@ -36,7 +36,9 @@ pub fn dstebz(t: &SymTridiag, il: usize, iu: usize) -> Vec<f64> {
 /// deterministic).
 pub fn dstebz_ctx(t: &SymTridiag, il: usize, iu: usize, ctx: &ExecCtx) -> Vec<f64> {
     let n = t.n();
-    assert!(il <= iu && iu < n, "index range {il}..={iu} out of 0..{n}");
+    // invariant: callers (wanted_indices, dsyev_robust) derive il/iu from
+    // validated s and n, so the range is always in bounds
+    debug_assert!(il <= iu && iu < n, "index range {il}..={iu} out of 0..{n}");
     let (glo, ghi) = t.gershgorin();
     let span = (ghi - glo).max(f64::MIN_POSITIVE);
     let abs_tol = f64::EPSILON * (glo.abs().max(ghi.abs()) + span).max(1.0);

@@ -3,6 +3,8 @@
 //! problems (order m ≪ n) and as the exhaustive oracle in tests.
 
 use super::ormtr::dormtr_lower;
+use super::stebz::dstebz;
+use super::stein::dstein;
 use super::steqr::dsteqr;
 use super::sytrd::dsytrd_lower;
 use super::LapackError;
@@ -29,6 +31,48 @@ pub fn dsyev(a: &Matrix) -> Result<(Vec<f64>, Matrix), LapackError> {
     // eigenvectors of A: back-transform by the tridiagonalization's Q
     dormtr_lower(Trans::N, n, n, ared.as_slice(), n, &tau, z.as_mut_slice(), n);
     Ok((t.d, z))
+}
+
+/// [`dsyev`] with a recorded fallback: when the implicit-QL sweep fails to
+/// converge — or `force_fallback` is set (fault injection) — the
+/// tridiagonal eigenproblem is re-solved by bisection + inverse iteration
+/// (`dstebz` + `dstein`), which cannot stall.  The returned `bool` is
+/// `true` when the fallback path produced the result.
+pub fn dsyev_robust(
+    a: &Matrix,
+    force_fallback: bool,
+) -> Result<(Vec<f64>, Matrix, bool), LapackError> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    if n == 0 {
+        return Ok((vec![], Matrix::zeros(0, 0), false));
+    }
+    if n == 1 {
+        return Ok((vec![a[(0, 0)]], Matrix::identity(1), false));
+    }
+    let mut ared = a.clone();
+    let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
+    dsytrd_lower(n, ared.as_mut_slice(), n, &mut d, &mut e, &mut tau);
+    // keep a pristine copy of T for the fallback path
+    let t0 = SymTridiag::new(d, e);
+    let steqr_result = if force_fallback {
+        Err(LapackError::NoConvergence(0))
+    } else {
+        let mut t = t0.clone();
+        let mut z = Matrix::identity(n);
+        dsteqr(&mut t, Some(&mut z)).map(|()| (t.d, z))
+    };
+    let (w, mut z, used_fallback) = match steqr_result {
+        Ok((w, z)) => (w, z, false),
+        Err(LapackError::NoConvergence(_)) => {
+            let w = dstebz(&t0, 0, n - 1);
+            let z = dstein(&t0, &w);
+            (w, z, true)
+        }
+        Err(e) => return Err(e),
+    };
+    dormtr_lower(Trans::N, n, n, ared.as_slice(), n, &tau, z.as_mut_slice(), n);
+    Ok((w, z, used_fallback))
 }
 
 #[cfg(test)]

@@ -38,3 +38,4 @@ pub mod workloads;
 
 pub use matrix::dense::Matrix;
 pub use solver::gsyeig::{GsyeigSolver, Problem, Solution, SolverConfig, Variant, Which};
+pub use solver::{FallbackEvent, SolveReport, SolverError};

@@ -16,6 +16,7 @@
 #[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
+use gsyeig::bench::json::{maybe_emit, JsonObject};
 use gsyeig::bench::{
     fig_sweep, run_accuracy_table, run_stage_table, run_table4, run_table4_thread_sweep,
     ExperimentKind, ExperimentScale,
@@ -243,34 +244,59 @@ fn cmd_serve(args: &Args) {
     let coord = Coordinator::new(CoordinatorConfig { workers, ..Default::default() });
     // an SCF-flavoured stream: alternating k-points sharing B per cycle
     for id in 0..jobs as u64 {
-        let spec = JobSpec {
-            workload: WorkloadSpec::Dft { n, seed: 100 + id / 3 },
-            s: (n * 26 / 1000).max(1),
-            variant: None,
-            b_cache_key: Some(id / 3), // 3 "k-points" share each cycle's B
-            exec_threads: None,        // coordinator sizes the ctx by n
-        };
-        coord.submit(Job { id, spec }).ok().expect("queue closed");
+        let mut spec = JobSpec::new(WorkloadSpec::Dft { n, seed: 100 + id / 3 }, (n * 26 / 1000).max(1));
+        spec.b_cache_key = Some(id / 3); // 3 "k-points" share each cycle's B
+        if let Err(e) = coord.submit(Job { id, spec }) {
+            eprintln!("submit failed (closed={}): job {id} dropped", e.is_closed());
+            break;
+        }
     }
     coord.close();
     let outcomes = coord.run_to_completion();
     for o in &outcomes {
-        println!(
-            "job {:>3}: {} ({}) n={} s={} {:.2}s resid={:.1E} gs1-cached={} matvecs={}",
-            o.id,
-            o.variant.name(),
-            o.router_reason,
-            o.n,
-            o.s,
-            o.total_seconds,
-            o.accuracy.residual,
-            o.gs1_cached,
-            o.matvecs
-        );
+        match &o.error {
+            None => println!(
+                "job {:>3}: {} ({}) n={} s={} {:.2}s resid={:.1E} gs1-cached={} matvecs={} attempts={}",
+                o.id,
+                o.variant.name(),
+                o.router_reason,
+                o.n,
+                o.s,
+                o.total_seconds,
+                o.accuracy.residual,
+                o.gs1_cached,
+                o.matvecs,
+                o.attempts
+            ),
+            Some(err) => println!(
+                "job {:>3}: FAILED after {} attempt(s): {err}",
+                o.id, o.attempts
+            ),
+        }
+        for ev in &o.report.events {
+            println!("         fallback at {}: {} -> {}", ev.stage, ev.fault, ev.action);
+        }
     }
     let m = coord.metrics();
     println!(
         "jobs={} p50={:.2}s p95={:.2}s mean={:.2}s gs1-cache-hits={} matvecs={}",
         m.jobs_done, m.latency_p50, m.latency_p95, m.latency_mean, m.gs1_cache_hits, m.matvecs_total
     );
+    println!(
+        "faults: retries={} timeouts={} worker-panics={} failures={} fallbacks={}",
+        m.retries, m.timeouts, m.worker_panics, m.failures, m.fallbacks
+    );
+    let mut obj = JsonObject::new();
+    obj.num("jobs", m.jobs_done as f64);
+    obj.num("latency_p50_s", m.latency_p50);
+    obj.num("latency_p95_s", m.latency_p95);
+    obj.num("latency_mean_s", m.latency_mean);
+    obj.num("gs1_cache_hits", m.gs1_cache_hits as f64);
+    obj.num("matvecs_total", m.matvecs_total as f64);
+    obj.num("retries", m.retries as f64);
+    obj.num("timeouts", m.timeouts as f64);
+    obj.num("worker_panics", m.worker_panics as f64);
+    obj.num("failures", m.failures as f64);
+    obj.num("fallbacks", m.fallbacks as f64);
+    maybe_emit("serve", &obj);
 }

@@ -1,0 +1,129 @@
+//! Structured errors for the solver stack (DESIGN.md §7).
+//!
+//! Every fallible path in the numerical core surfaces one of these instead
+//! of panicking, so a coordinator worker — or an SCF loop calling the
+//! library directly — can tell *recoverable* conditions (switch method,
+//! boost the diagonal, retry) from hard input errors.
+
+use crate::lapack::LapackError;
+use crate::util::cancel::CancelStatus;
+use crate::util::parallel::ExecCtx;
+
+/// What went wrong during a solve.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolverError {
+    /// `B` is not positive definite (Cholesky failed at this leading
+    /// minor, 1-based — LAPACK `info` convention).
+    NotSpd { minor: usize },
+    /// An iterative stage ran out of its iteration budget.
+    NoConvergence { stage: &'static str, iters: usize },
+    /// A numerical breakdown that is not a convergence failure (e.g. the
+    /// projected eigenproblem could not be solved).
+    Breakdown { stage: &'static str, detail: String },
+    /// The pencil is too ill-conditioned for the requested route.
+    IllConditioned { stage: &'static str, rcond: f64 },
+    /// An accelerator/offload backend failed or refused the stage.
+    Offload { stage: &'static str, reason: String },
+    /// The job's wall-clock deadline passed (cooperative check at a stage
+    /// boundary).
+    Timeout { stage: &'static str },
+    /// The job's [`crate::util::cancel::CancelToken`] was cancelled.
+    Cancelled { stage: &'static str },
+    /// A worker thread panicked while executing the job (caught at the
+    /// coordinator boundary; the payload message is preserved).
+    WorkerPanic { detail: String },
+    /// The problem itself is malformed (empty pencil, NaN/Inf entries,
+    /// `s` out of range, …).
+    BadInput { reason: String },
+}
+
+impl SolverError {
+    /// Lift a kernel-level [`LapackError`] into a solver error, tagging the
+    /// pipeline stage it surfaced in.
+    pub fn from_lapack(stage: &'static str, e: LapackError) -> SolverError {
+        match e {
+            LapackError::NotPositiveDefinite(minor) => SolverError::NotSpd { minor },
+            LapackError::NoConvergence(i) => SolverError::NoConvergence { stage, iters: i },
+            LapackError::BadArgument(s) => SolverError::BadInput { reason: s.to_string() },
+        }
+    }
+}
+
+impl std::fmt::Display for SolverError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolverError::NotSpd { minor } => {
+                write!(f, "B not positive definite (leading minor {minor})")
+            }
+            SolverError::NoConvergence { stage, iters } => {
+                write!(f, "no convergence in {stage} after {iters} iterations")
+            }
+            SolverError::Breakdown { stage, detail } => {
+                write!(f, "numerical breakdown in {stage}: {detail}")
+            }
+            SolverError::IllConditioned { stage, rcond } => {
+                write!(f, "pencil too ill-conditioned for {stage} (rcond ~ {rcond:.1e})")
+            }
+            SolverError::Offload { stage, reason } => {
+                write!(f, "offload failure in {stage}: {reason}")
+            }
+            SolverError::Timeout { stage } => write!(f, "deadline exceeded at {stage}"),
+            SolverError::Cancelled { stage } => write!(f, "cancelled at {stage}"),
+            SolverError::WorkerPanic { detail } => write!(f, "worker panicked: {detail}"),
+            SolverError::BadInput { reason } => write!(f, "bad input: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for SolverError {}
+
+/// Stage-boundary cancellation checkpoint: maps the ctx's token state to a
+/// structured error.  Every variant pipeline calls this between stages;
+/// the Lanczos driver calls it once per restart cycle.
+pub(crate) fn checkpoint(exec: &ExecCtx, stage: &'static str) -> Result<(), SolverError> {
+    match exec.cancel_status() {
+        CancelStatus::Live => Ok(()),
+        CancelStatus::TimedOut => Err(SolverError::Timeout { stage }),
+        CancelStatus::Cancelled => Err(SolverError::Cancelled { stage }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cancel::CancelToken;
+    use std::time::Duration;
+
+    #[test]
+    fn lapack_errors_lift_with_stage() {
+        assert_eq!(
+            SolverError::from_lapack("GS1", LapackError::NotPositiveDefinite(3)),
+            SolverError::NotSpd { minor: 3 }
+        );
+        assert_eq!(
+            SolverError::from_lapack("TT3", LapackError::NoConvergence(5)),
+            SolverError::NoConvergence { stage: "TT3", iters: 5 }
+        );
+    }
+
+    #[test]
+    fn checkpoint_maps_token_states() {
+        let live = ExecCtx::with_threads(1);
+        assert!(checkpoint(&live, "GS1").is_ok());
+
+        let timed =
+            ExecCtx::with_threads(1).with_cancel(CancelToken::with_timeout(Duration::ZERO));
+        assert_eq!(checkpoint(&timed, "GS2"), Err(SolverError::Timeout { stage: "GS2" }));
+
+        let token = CancelToken::new();
+        token.cancel();
+        let cancelled = ExecCtx::with_threads(1).with_cancel(token);
+        assert_eq!(checkpoint(&cancelled, "TD1"), Err(SolverError::Cancelled { stage: "TD1" }));
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let s = SolverError::NotSpd { minor: 2 }.to_string();
+        assert!(s.contains("positive definite") && s.contains('2'));
+    }
+}

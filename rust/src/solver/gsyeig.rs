@@ -2,10 +2,13 @@
 
 use crate::lanczos::thick_restart::Want;
 use crate::matrix::Matrix;
+use crate::util::faults::{FaultPlan, FaultSite};
 use crate::util::parallel::ExecCtx;
 use crate::util::timer::StageTimer;
 
 use super::backend::{Kernels, NativeKernels};
+use super::error::{checkpoint, SolverError};
+use super::report::{FallbackEvent, SolveReport};
 use super::{ke, ki, td, tt};
 
 /// The four solver variants of the paper (§2).
@@ -75,6 +78,10 @@ pub struct SolverConfig {
     /// solve time); the coordinator swaps in a per-job ctx sized by
     /// problem dimension (DESIGN.md §3).
     pub exec: ExecCtx,
+    /// Deterministic fault-injection schedule (DESIGN.md §7).  Disarmed by
+    /// default; the test harness arms specific sites to exercise the
+    /// fallback chains.
+    pub faults: FaultPlan,
 }
 
 impl SolverConfig {
@@ -90,6 +97,7 @@ impl SolverConfig {
             gs2_sygst: false,
             seed: 0xEE6_1A9,
             exec: ExecCtx::global(),
+            faults: FaultPlan::disarmed(),
         }
     }
 }
@@ -137,6 +145,8 @@ pub struct Solution {
     pub restarts: usize,
     pub converged: bool,
     pub backend: &'static str,
+    /// How the solve actually ran: route taken, fallbacks, shifts.
+    pub report: SolveReport,
 }
 
 impl Solution {
@@ -164,33 +174,172 @@ impl<K: Kernels> GsyeigSolver<K> {
         GsyeigSolver { config, kernels }
     }
 
+    /// Solve the problem with the configured variant, panicking on failure.
+    /// Convenience wrapper over [`GsyeigSolver::try_solve`] for callers
+    /// (benchmarks, experiment drivers) that treat any failure as fatal.
+    pub fn solve(&self, problem: Problem) -> Solution {
+        self.try_solve(problem).unwrap_or_else(|e| panic!("gsyeig solve failed: {e}"))
+    }
+
     /// Solve the problem with the configured variant.  The config's
     /// [`ExecCtx`] is installed for the whole solve, so every stage — the
     /// explicitly ctx-threaded ones (SBR, bisection, inverse iteration)
     /// and the ambient consumers (panel GEMM under Cholesky/DSYGST/TRSM)
     /// — runs under the same budget.
-    pub fn solve(&self, problem: Problem) -> Solution {
-        assert!(problem.n() >= 2, "problem too small");
-        assert!(self.config.s >= 1 && self.config.s <= problem.n());
-        self.config.exec.install(|| match self.config.variant {
+    ///
+    /// Recoverable faults are handled internally and recorded in
+    /// [`Solution::report`] (DESIGN.md §7): a non-SPD `B` is retried with
+    /// an escalating diagonal boost, a stalled or broken-down Krylov solve
+    /// re-routes through TT, and a `dsteqr` convergence failure inside the
+    /// projected eigensolve falls back to bisection + inverse iteration.
+    /// Only unrecoverable conditions surface as `Err`.
+    pub fn try_solve(&self, problem: Problem) -> Result<Solution, SolverError> {
+        let n = problem.n();
+        let s = self.config.s;
+        if s < 1 || s > n {
+            return Err(SolverError::BadInput {
+                reason: format!("s = {s} outside 1..={n}"),
+            });
+        }
+        if problem
+            .a
+            .as_slice()
+            .iter()
+            .chain(problem.b.as_slice())
+            .any(|v| !v.is_finite())
+        {
+            return Err(SolverError::BadInput {
+                reason: "matrix entries must be finite (NaN/Inf found)".to_string(),
+            });
+        }
+        checkpoint(&self.config.exec, "GS1")?;
+        if n == 1 {
+            return self.solve_1x1(&problem);
+        }
+        self.config.exec.install(|| self.solve_with_fallbacks(problem))
+    }
+
+    /// Degenerate n = 1 pencil: λ = a/b, x = 1/√b — no factorizations.
+    fn solve_1x1(&self, problem: &Problem) -> Result<Solution, SolverError> {
+        let (a00, b00) = (problem.a[(0, 0)], problem.b[(0, 0)]);
+        if b00 <= 0.0 {
+            return Err(SolverError::NotSpd { minor: 1 });
+        }
+        let mut x = Matrix::zeros(1, 1);
+        x[(0, 0)] = 1.0 / b00.sqrt();
+        let mut report = SolveReport::default();
+        report.route.push(self.config.variant.name());
+        Ok(Solution {
+            eigenvalues: vec![a00 / b00],
+            x,
+            stages: StageTimer::new(),
+            matvecs: 0,
+            restarts: 0,
+            converged: true,
+            backend: self.kernels.name(),
+            report,
+        })
+    }
+
+    fn dispatch(&self, variant: Variant, problem: Problem) -> Result<Solution, SolverError> {
+        match variant {
             Variant::TD => td::solve(&self.config, &self.kernels, problem),
             Variant::TT => tt::solve(&self.config, &self.kernels, problem),
             Variant::KE => ke::solve(&self.config, &self.kernels, problem),
             Variant::KI => ki::solve(&self.config, &self.kernels, problem),
-        })
+        }
+    }
+
+    /// The recorded fallback chain: each attempt clones the pristine
+    /// problem, so a failed route never corrupts the next one.
+    fn solve_with_fallbacks(&self, problem: Problem) -> Result<Solution, SolverError> {
+        let n = problem.n();
+        let mut report = SolveReport::default();
+        let mut variant = self.config.variant;
+        // Diagonal-boost ladder for a (near-)semidefinite B, scaled by ‖B‖_F
+        // so the escalation is dimensionless.
+        let bnorm = problem.b.frobenius_norm().max(1.0);
+        let boosts = [n as f64 * f64::EPSILON * bnorm, 1e-8 * bnorm, 1e-4 * bnorm];
+        let mut shift = 0.0_f64;
+        let mut next_boost = 0;
+        let mut krylov_rerouted = false;
+        loop {
+            if report.route.last() != Some(&variant.name()) {
+                report.route.push(variant.name());
+            }
+            let mut attempt = problem.clone();
+            if shift > 0.0 {
+                for i in 0..n {
+                    attempt.b[(i, i)] += shift;
+                }
+            }
+            match self.dispatch(variant, attempt) {
+                Ok(mut sol) => {
+                    let krylov = matches!(variant, Variant::KE | Variant::KI);
+                    if krylov && !sol.converged && !krylov_rerouted {
+                        report.events.push(FallbackEvent {
+                            stage: if variant == Variant::KE { "KE2" } else { "KI4" },
+                            fault: format!(
+                                "Lanczos not converged after {} matvecs",
+                                sol.matvecs
+                            ),
+                            action: "re-solve via TT route",
+                        });
+                        krylov_rerouted = true;
+                        variant = Variant::TT;
+                        continue;
+                    }
+                    // Merge the chain's bookkeeping with the route's own
+                    // (offload refusals, steqr fallbacks recorded inside).
+                    let mut events = report.events;
+                    events.append(&mut sol.report.events);
+                    sol.report.route = report.route;
+                    sol.report.events = events;
+                    sol.report.cholesky_shift = shift;
+                    return Ok(sol);
+                }
+                Err(SolverError::NotSpd { minor }) if next_boost < boosts.len() => {
+                    shift = boosts[next_boost];
+                    next_boost += 1;
+                    report.events.push(FallbackEvent {
+                        stage: "GS1",
+                        fault: format!("B not positive definite (minor {minor})"),
+                        action: "retry Cholesky with diagonal boost",
+                    });
+                }
+                Err(
+                    e @ (SolverError::NoConvergence { .. } | SolverError::Breakdown { .. }),
+                ) if matches!(variant, Variant::KE | Variant::KI) && !krylov_rerouted => {
+                    report.events.push(FallbackEvent {
+                        stage: if variant == Variant::KE { "KE2" } else { "KI4" },
+                        fault: e.to_string(),
+                        action: "re-solve via TT route",
+                    });
+                    krylov_rerouted = true;
+                    variant = Variant::TT;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 }
 
-/// Shared GS1 stage: Cholesky of B (returns U, timed).
+/// Shared GS1 stage: Cholesky of B (returns U, timed).  A non-SPD `B`
+/// surfaces as [`SolverError::NotSpd`]; the fallback chain in
+/// [`GsyeigSolver::try_solve`] retries with a diagonal boost.
 pub(crate) fn stage_gs1<K: Kernels>(
+    cfg: &SolverConfig,
     kernels: &K,
     timer: &mut StageTimer,
     mut b: Matrix,
-) -> Matrix {
-    timer.time("GS1", || {
-        kernels.cholesky(&mut b).expect("B must be positive definite");
-    });
-    b
+) -> Result<Matrix, SolverError> {
+    if cfg.faults.fire(FaultSite::Gs1NotSpd) {
+        return Err(SolverError::NotSpd { minor: 1 });
+    }
+    timer
+        .time("GS1", || kernels.cholesky(&mut b))
+        .map_err(|e| SolverError::from_lapack("GS1", e))?;
+    Ok(b)
 }
 
 /// Shared subset-extraction helper: pick the wanted `s` indices of an

@@ -9,25 +9,35 @@ use crate::lanczos::thick_restart::{lanczos_solve, LanczosConfig};
 use crate::util::timer::StageTimer;
 
 use super::backend::Kernels;
+use super::error::{checkpoint, SolverError};
 use super::gsyeig::{stage_gs1, Problem, Solution, SolverConfig};
+use super::report::SolveReport;
 
-pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> Solution {
+pub fn solve<K: Kernels>(
+    cfg: &SolverConfig,
+    kernels: &K,
+    problem: Problem,
+) -> Result<Solution, SolverError> {
     let mut timer = StageTimer::new();
     let Problem { a, b } = problem;
 
     // GS1 + GS2
-    let u = stage_gs1(kernels, &mut timer, b);
+    checkpoint(&cfg.exec, "GS1")?;
+    let u = stage_gs1(cfg, kernels, &mut timer, b)?;
+    checkpoint(&cfg.exec, "GS2")?;
     let mut c = a;
     timer.time("GS2", || kernels.build_c(&mut c, &u));
 
     // Krylov iteration on explicit C
+    checkpoint(&cfg.exec, "KE2")?;
     let op = kernels.explicit_op(&c);
     let mut lcfg = LanczosConfig::new(cfg.s, cfg.which.want());
     lcfg.m = cfg.krylov_m;
     lcfg.tol = cfg.krylov_tol;
     lcfg.max_matvecs = cfg.max_matvecs;
     lcfg.seed = cfg.seed;
-    let res = lanczos_solve(op.as_ref(), &lcfg);
+    lcfg.faults = cfg.faults.clone();
+    let res = lanczos_solve(op.as_ref(), &lcfg)?;
     // stage bookkeeping: the operator time is KE1; the recurrence and
     // restarts are KE2 (ARPACK DSAUPD); the Ritz assembly is KE3 (DSEUPD).
     op.drain_stages(&mut timer);
@@ -39,10 +49,13 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     timer.add("KE3", res.stage_times.get("ritz_assembly").unwrap_or_default());
 
     // BT1: X := U⁻¹ Y
+    checkpoint(&cfg.exec, "BT1")?;
     let mut x = res.vectors;
     timer.time("BT1", || kernels.back_transform(&u, &mut x));
 
-    Solution {
+    let mut report = SolveReport::default();
+    report.steqr_fallbacks = res.steqr_fallbacks;
+    Ok(Solution {
         eigenvalues: res.eigenvalues,
         x,
         stages: timer,
@@ -50,7 +63,8 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
         restarts: res.restarts,
         converged: res.converged,
         backend: kernels.name(),
-    }
+        report,
+    })
 }
 
 #[cfg(test)]

@@ -7,27 +7,48 @@
 //! flops.  The paper's Table 2 shows this trade losing badly when the
 //! iteration count is high (DFT: 4 261 iterations → KI1+KI3 dominate).
 
+use crate::lanczos::operator::{ImplicitOp, SymOp};
 use crate::lanczos::thick_restart::{lanczos_solve, LanczosConfig};
+use crate::util::faults::FaultSite;
 use crate::util::timer::StageTimer;
 
 use super::backend::Kernels;
+use super::error::{checkpoint, SolverError};
 use super::gsyeig::{stage_gs1, Problem, Solution, SolverConfig};
+use super::report::{FallbackEvent, SolveReport};
 
-pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> Solution {
+pub fn solve<K: Kernels>(
+    cfg: &SolverConfig,
+    kernels: &K,
+    problem: Problem,
+) -> Result<Solution, SolverError> {
     let mut timer = StageTimer::new();
+    let mut report = SolveReport::default();
     let Problem { a, b } = problem;
 
     // GS1 only: KI skips GS2 entirely
-    let u = stage_gs1(kernels, &mut timer, b);
+    checkpoint(&cfg.exec, "GS1")?;
+    let u = stage_gs1(cfg, kernels, &mut timer, b)?;
 
     // Krylov iteration with the implicit operator; backends may refuse
-    // (device-memory budget — Table 6's KI@DFT case) and fall back native.
-    let native = crate::solver::backend::NativeKernels::default();
-    let op = match kernels.implicit_op(&a, &u) {
-        Some(op) => op,
-        None => {
+    // (device-memory budget — Table 6's KI@DFT case) and fall back to the
+    // native operator, recorded as a fallback event.
+    checkpoint(&cfg.exec, "KI1")?;
+    let refused = cfg.faults.fire(FaultSite::OffloadRefusal);
+    let op: Box<dyn SymOp + '_> = match (refused, kernels.implicit_op(&a, &u)) {
+        (false, Some(op)) => op,
+        (true, _) | (false, None) => {
+            report.events.push(FallbackEvent {
+                stage: "KI1",
+                fault: if refused {
+                    "injected offload refusal".to_string()
+                } else {
+                    format!("backend '{}' refused the implicit operator", kernels.name())
+                },
+                action: "native implicit operator",
+            });
             timer.add("fallback_native_op", std::time::Duration::ZERO);
-            native.implicit_op(&a, &u).unwrap()
+            Box::new(ImplicitOp::new(&a, &u))
         }
     };
     let mut lcfg = LanczosConfig::new(cfg.s, cfg.which.want());
@@ -35,13 +56,14 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     lcfg.tol = cfg.krylov_tol;
     lcfg.max_matvecs = cfg.max_matvecs;
     lcfg.seed = cfg.seed;
+    lcfg.faults = cfg.faults.clone();
     // The iteration already runs under the job's ExecCtx — solve()
     // installed cfg.exec around the whole variant dispatch — so the
     // restart GEMMs split panels across its budget, and with the offload
     // backend each device matvec shrinks the host budget to 1 for its
     // duration (parallel::with_offloaded_stage; the CPU cores idle while
     // the device computes — DESIGN.md §3).
-    let res = lanczos_solve(op.as_ref(), &lcfg);
+    let res = lanczos_solve(op.as_ref(), &lcfg)?;
     op.drain_stages(&mut timer);
     timer.add(
         "KI4",
@@ -51,10 +73,12 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     timer.add("KI5", res.stage_times.get("ritz_assembly").unwrap_or_default());
 
     // BT1
+    checkpoint(&cfg.exec, "BT1")?;
     let mut x = res.vectors;
     timer.time("BT1", || kernels.back_transform(&u, &mut x));
 
-    Solution {
+    report.steqr_fallbacks = res.steqr_fallbacks;
+    Ok(Solution {
         eigenvalues: res.eigenvalues,
         x,
         stages: timer,
@@ -62,7 +86,8 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
         restarts: res.restarts,
         converged: res.converged,
         backend: kernels.name(),
-    }
+        report,
+    })
 }
 
 #[cfg(test)]

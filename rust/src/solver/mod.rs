@@ -12,12 +12,16 @@
 
 pub mod accuracy;
 pub mod backend;
+pub mod error;
 pub mod gsyeig;
 pub mod ke;
 pub mod ki;
+pub mod report;
 pub mod td;
 pub mod tt;
 
 pub use accuracy::Accuracy;
 pub use backend::{Kernels, NativeKernels};
+pub use error::SolverError;
 pub use gsyeig::{GsyeigSolver, Problem, Solution, SolverConfig, Variant, Which};
+pub use report::{FallbackEvent, SolveReport};

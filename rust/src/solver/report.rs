@@ -1,0 +1,63 @@
+//! Per-solve provenance: which route(s) ran, what fell back, and why.
+//!
+//! A [`SolveReport`] rides along in every `Solution` so callers — and the
+//! coordinator's metrics — can distinguish a clean first-try solve from
+//! one that recovered through a fallback chain (DESIGN.md §7).
+
+/// One recorded recovery action.
+#[derive(Clone, Debug)]
+pub struct FallbackEvent {
+    /// The stage the fault surfaced in (GS1, KE2, KI3, …).
+    pub stage: &'static str,
+    /// Human-readable description of the fault.
+    pub fault: String,
+    /// The recovery that was taken.
+    pub action: &'static str,
+}
+
+/// How the solve actually ran.
+#[derive(Clone, Debug, Default)]
+pub struct SolveReport {
+    /// Variant(s) attempted, in order; the last entry produced the result.
+    pub route: Vec<&'static str>,
+    /// Every fallback/recovery action taken, in order.
+    pub events: Vec<FallbackEvent>,
+    /// Diagonal boost that made Cholesky succeed (0.0 = none needed).
+    pub cholesky_shift: f64,
+    /// How many projected eigensolves took the dstebz+dstein path after a
+    /// dsteqr convergence failure.
+    pub steqr_fallbacks: usize,
+}
+
+impl SolveReport {
+    /// True when the solve completed on its first route with no recovery.
+    pub fn clean(&self) -> bool {
+        self.route.len() <= 1
+            && self.events.is_empty()
+            && self.cholesky_shift == 0.0
+            && self.steqr_fallbacks == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_report_is_clean() {
+        assert!(SolveReport::default().clean());
+    }
+
+    #[test]
+    fn fallback_marks_report_dirty() {
+        let mut r = SolveReport::default();
+        r.route.push("KE");
+        r.route.push("TT");
+        r.events.push(FallbackEvent {
+            stage: "KE2",
+            fault: "no convergence".to_string(),
+            action: "re-solve via TT route",
+        });
+        assert!(!r.clean());
+    }
+}

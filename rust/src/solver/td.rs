@@ -16,21 +16,30 @@ use crate::matrix::{Matrix, SymTridiag};
 use crate::util::timer::StageTimer;
 
 use super::backend::Kernels;
+use super::error::{checkpoint, SolverError};
 use super::gsyeig::{stage_gs1, wanted_indices, Problem, Solution, SolverConfig};
+use super::report::SolveReport;
 
-pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> Solution {
+pub fn solve<K: Kernels>(
+    cfg: &SolverConfig,
+    kernels: &K,
+    problem: Problem,
+) -> Result<Solution, SolverError> {
     let n = problem.n();
     let s = cfg.s;
     let mut timer = StageTimer::new();
     let Problem { a, b } = problem;
 
     // GS1: B = UᵀU
-    let u = stage_gs1(kernels, &mut timer, b);
+    checkpoint(&cfg.exec, "GS1")?;
+    let u = stage_gs1(cfg, kernels, &mut timer, b)?;
     // GS2: C := U⁻ᵀ A U⁻¹ (overwrites A)
+    checkpoint(&cfg.exec, "GS2")?;
     let mut c = a;
     timer.time("GS2", || kernels.build_c(&mut c, &u));
 
     // TD1: QᵀCQ = T
+    checkpoint(&cfg.exec, "TD1")?;
     let (mut d, mut e, mut tau) = (vec![0.0; n], vec![0.0; n - 1], vec![0.0; n - 1]);
     timer.time("TD1", || {
         dsytrd_lower(n, c.as_mut_slice(), n, &mut d, &mut e, &mut tau);
@@ -43,6 +52,7 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     let t = SymTridiag::new(d, e);
     let (il, iu, reversed) = wanted_indices(n, s, cfg.which);
     let ctx = &cfg.exec;
+    checkpoint(ctx, "TD2")?;
     let (lams, z) = timer.time("TD2", || {
         let lams = dstebz_ctx(&t, il, iu, ctx);
         let z = dstein_ctx(&t, &lams, ctx);
@@ -50,18 +60,20 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     });
 
     // TD3: Y := QZ
+    checkpoint(ctx, "TD3")?;
     let mut y = z;
     timer.time("TD3", || {
         dormtr_lower(Trans::N, n, s, c.as_slice(), n, &tau, y.as_mut_slice(), n);
     });
 
     // BT1: X := U⁻¹Y
+    checkpoint(ctx, "BT1")?;
     timer.time("BT1", || kernels.back_transform(&u, &mut y));
 
     // order from the wanted end
     let (eigenvalues, x) = order_from_wanted_end(lams, y, reversed);
 
-    Solution {
+    Ok(Solution {
         eigenvalues,
         x,
         stages: timer,
@@ -69,7 +81,8 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
         restarts: 0,
         converged: true,
         backend: kernels.name(),
-    }
+        report: SolveReport::default(),
+    })
 }
 
 /// Reverse (eigenvalues, columns) when the wanted end is the top.

@@ -15,10 +15,16 @@ use crate::sbr::{sbrdt_ctx, syrdb_ctx};
 use crate::util::timer::StageTimer;
 
 use super::backend::Kernels;
+use super::error::{checkpoint, SolverError};
 use super::gsyeig::{stage_gs1, wanted_indices, Problem, Solution, SolverConfig};
+use super::report::SolveReport;
 use super::td::order_from_wanted_end;
 
-pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> Solution {
+pub fn solve<K: Kernels>(
+    cfg: &SolverConfig,
+    kernels: &K,
+    problem: Problem,
+) -> Result<Solution, SolverError> {
     let n = problem.n();
     let s = cfg.s;
     let w = cfg.bandwidth.clamp(1, n.saturating_sub(2).max(1));
@@ -27,20 +33,25 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     let Problem { a, b } = problem;
 
     // GS1 + GS2
-    let u = stage_gs1(kernels, &mut timer, b);
+    checkpoint(ctx, "GS1")?;
+    let u = stage_gs1(cfg, kernels, &mut timer, b)?;
+    checkpoint(ctx, "GS2")?;
     let mut c = a;
     timer.time("GS2", || kernels.build_c(&mut c, &u));
 
     // TT1: Q₁ᵀ C Q₁ = W (band) with Q₁ explicitly accumulated
+    checkpoint(ctx, "TT1")?;
     let mut q1 = Matrix::identity(n);
     timer.time("TT1", || syrdb_ctx(&mut c, w, Some(&mut q1), ctx));
 
     // TT2: Q₂ᵀ W Q₂ = T, rotations folded into Q₁ (the paper's "accumulated
     // from the right into the previously constructed Q₁") — a wavefront
     // pipeline under a multi-thread ctx, bitwise equal to the serial chase
+    checkpoint(ctx, "TT2")?;
     let (t, _nrot) = timer.time("TT2", || sbrdt_ctx(&mut c, w, Some(&mut q1), ctx));
 
     // TT3: subset eigenpairs of T
+    checkpoint(ctx, "TT3")?;
     let (il, iu, reversed) = wanted_indices(n, s, cfg.which);
     let (lams, z) = timer.time("TT3", || {
         let lams = dstebz_ctx(&t, il, iu, ctx);
@@ -49,6 +60,7 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     });
 
     // TT4: Y := (Q₁Q₂) Z  (Q₁ already holds the product)
+    checkpoint(ctx, "TT4")?;
     let mut y = Matrix::zeros(n, s);
     timer.time("TT4", || {
         dgemm(
@@ -69,10 +81,11 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
     });
 
     // BT1
+    checkpoint(ctx, "BT1")?;
     timer.time("BT1", || kernels.back_transform(&u, &mut y));
 
     let (eigenvalues, x) = order_from_wanted_end(lams, y, reversed);
-    Solution {
+    Ok(Solution {
         eigenvalues,
         x,
         stages: timer,
@@ -80,7 +93,8 @@ pub fn solve<K: Kernels>(cfg: &SolverConfig, kernels: &K, problem: Problem) -> S
         restarts: 0,
         converged: true,
         backend: kernels.name(),
-    }
+        report: SolveReport::default(),
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,115 @@
+//! Cooperative cancellation: a cloneable token carrying an optional
+//! wall-clock deadline, threaded through [`crate::util::parallel::ExecCtx`]
+//! so the coordinator can bound a job's latency without preemption.
+//!
+//! Nothing is interrupted: the solvers poll the token at **stage
+//! boundaries** (GS1/GS2/TD1/…, and once per Lanczos restart cycle), the
+//! coarsest granularity at which abandoning work is safe and cheap.  A
+//! fired token therefore stops a solve within one stage, not one
+//! instruction — the same contract a SIGTERM-honouring batch job offers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a token is no longer live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelStatus {
+    /// Keep going.
+    Live,
+    /// [`CancelToken::cancel`] was called.
+    Cancelled,
+    /// The construction-time deadline has passed.
+    TimedOut,
+}
+
+/// Shared cancellation handle: clones observe the same state.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    cancelled: AtomicBool,
+    /// Immutable after construction; `None` = no deadline.
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token with no deadline (cancel-only).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A token that reports [`CancelStatus::TimedOut`] once `timeout` has
+    /// elapsed from now.
+    pub fn with_timeout(timeout: Duration) -> Self {
+        CancelToken {
+            inner: Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: Instant::now().checked_add(timeout),
+            }),
+        }
+    }
+
+    /// Request cancellation; all clones observe it.
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn status(&self) -> CancelStatus {
+        if self.inner.cancelled.load(Ordering::Relaxed) {
+            return CancelStatus::Cancelled;
+        }
+        if let Some(deadline) = self.inner.deadline {
+            if Instant::now() >= deadline {
+                return CancelStatus::TimedOut;
+            }
+        }
+        CancelStatus::Live
+    }
+
+    pub fn is_live(&self) -> bool {
+        self.status() == CancelStatus::Live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_is_live() {
+        let t = CancelToken::new();
+        assert_eq!(t.status(), CancelStatus::Live);
+        assert!(t.is_live());
+    }
+
+    #[test]
+    fn cancel_propagates_to_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        t.cancel();
+        assert_eq!(c.status(), CancelStatus::Cancelled);
+    }
+
+    #[test]
+    fn zero_timeout_fires_immediately() {
+        let t = CancelToken::with_timeout(Duration::ZERO);
+        assert_eq!(t.status(), CancelStatus::TimedOut);
+    }
+
+    #[test]
+    fn long_timeout_stays_live() {
+        let t = CancelToken::with_timeout(Duration::from_secs(3600));
+        assert_eq!(t.status(), CancelStatus::Live);
+    }
+
+    #[test]
+    fn cancel_wins_over_timeout() {
+        let t = CancelToken::with_timeout(Duration::ZERO);
+        t.cancel();
+        assert_eq!(t.status(), CancelStatus::Cancelled);
+    }
+}

@@ -1,0 +1,214 @@
+//! Deterministic fault injection for the fault-tolerance test harness.
+//!
+//! A [`FaultPlan`] is carried *explicitly* by a `SolverConfig` or `JobSpec`
+//! — never ambient state — so production solves (the default, disarmed
+//! plan) pay one `Option` check per registered site and two solves with
+//! different plans can run concurrently without interfering.
+//!
+//! Injection is **count-based**: `inject(site, k)` makes the next `k`
+//! calls to [`FaultPlan::fire`] at that site report `true`
+//! ([`INJECT_ALWAYS`] = every call).  Counts live behind an `Arc`, so the
+//! clone handed to a solver shares state with the harness's handle: a
+//! transient fault stays consumed across the retry/fallback attempts that
+//! follow it, which is exactly how a recovery path gets exercised.
+//! Because firing depends only on the call sequence at one site — not on
+//! clocks or thread interleaving — a faulted run is as reproducible as a
+//! clean one.
+//!
+//! [`site_for`] scatters sites over a job stream from a seeded
+//! [`crate::util::rng::Rng`], giving the mixed-fault coordinator tests a
+//! deterministic but "random-looking" fault assignment.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use super::rng::Rng;
+
+/// Pass to [`FaultPlan::inject`] to make a site fire on every call.
+pub const INJECT_ALWAYS: u32 = u32::MAX;
+
+/// The registered injection points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// GS1 reports B not positive definite before running Cholesky.
+    Gs1NotSpd,
+    /// One Lanczos restart cycle reports zero converged Ritz pairs.
+    LanczosStall,
+    /// The Lanczos projected eigensolve takes the dsteqr-failure path.
+    ProjectedNoConv,
+    /// The coordinator worker panics inside job execution.
+    WorkerPanic,
+    /// The KI offload operator refuses, forcing the native fallback.
+    OffloadRefusal,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 5] = [
+        FaultSite::Gs1NotSpd,
+        FaultSite::LanczosStall,
+        FaultSite::ProjectedNoConv,
+        FaultSite::WorkerPanic,
+        FaultSite::OffloadRefusal,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Gs1NotSpd => 0,
+            FaultSite::LanczosStall => 1,
+            FaultSite::ProjectedNoConv => 2,
+            FaultSite::WorkerPanic => 3,
+            FaultSite::OffloadRefusal => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Gs1NotSpd => "gs1-not-spd",
+            FaultSite::LanczosStall => "lanczos-stall",
+            FaultSite::ProjectedNoConv => "projected-no-convergence",
+            FaultSite::WorkerPanic => "worker-panic",
+            FaultSite::OffloadRefusal => "offload-refusal",
+        }
+    }
+}
+
+const N_SITES: usize = FaultSite::ALL.len();
+
+/// Per-config fault schedule.  `Default` is disarmed: every `fire` returns
+/// `false` without touching shared state.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    inner: Option<Arc<Inner>>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    seed: u64,
+    remaining: [AtomicU32; N_SITES],
+    fired: [AtomicU32; N_SITES],
+}
+
+impl FaultPlan {
+    /// The production plan: no sites armed, near-zero overhead.
+    pub fn disarmed() -> Self {
+        FaultPlan::default()
+    }
+
+    /// An armed-but-empty plan carrying `seed` (recorded for harness
+    /// bookkeeping; firing itself is count-based and needs no randomness).
+    pub fn seeded(seed: u64) -> Self {
+        FaultPlan {
+            inner: Some(Arc::new(Inner {
+                seed,
+                remaining: std::array::from_fn(|_| AtomicU32::new(0)),
+                fired: std::array::from_fn(|_| AtomicU32::new(0)),
+            })),
+        }
+    }
+
+    /// Arm `site` for the next `times` fires ([`INJECT_ALWAYS`] = forever).
+    pub fn inject(self, site: FaultSite, times: u32) -> Self {
+        let plan = if self.inner.is_some() { self } else { FaultPlan::seeded(0) };
+        if let Some(inner) = &plan.inner {
+            inner.remaining[site.index()].store(times, Ordering::SeqCst);
+        }
+        plan
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.seed)
+    }
+
+    /// Whether any site still has fires scheduled.
+    pub fn is_armed(&self) -> bool {
+        self.inner
+            .as_ref()
+            .is_some_and(|i| i.remaining.iter().any(|r| r.load(Ordering::SeqCst) > 0))
+    }
+
+    /// Called by an instrumented site: `true` = inject the fault now.
+    /// Consumes one scheduled fire (unless armed with [`INJECT_ALWAYS`]).
+    pub fn fire(&self, site: FaultSite) -> bool {
+        let Some(inner) = &self.inner else {
+            return false;
+        };
+        let hit = inner.remaining[site.index()]
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| match v {
+                0 => None,
+                INJECT_ALWAYS => Some(INJECT_ALWAYS),
+                v => Some(v - 1),
+            })
+            .is_ok();
+        if hit {
+            inner.fired[site.index()].fetch_add(1, Ordering::SeqCst);
+        }
+        hit
+    }
+
+    /// How many times `site` actually fired.
+    pub fn fired(&self, site: FaultSite) -> u32 {
+        self.inner.as_ref().map_or(0, |i| i.fired[site.index()].load(Ordering::SeqCst))
+    }
+}
+
+/// Deterministically pick a fault site for stream element `k` — the
+/// mixed-fault coordinator harness scatters faults over a job stream with
+/// this, reproducibly for a given `seed`.
+pub fn site_for(seed: u64, k: u64) -> FaultSite {
+    let mut rng = Rng::new(seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    FaultSite::ALL[rng.below(FaultSite::ALL.len())]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_plan_never_fires() {
+        let p = FaultPlan::default();
+        assert!(!p.is_armed());
+        for site in FaultSite::ALL {
+            assert!(!p.fire(site));
+            assert_eq!(p.fired(site), 0);
+        }
+    }
+
+    #[test]
+    fn counts_are_consumed() {
+        let p = FaultPlan::seeded(7).inject(FaultSite::Gs1NotSpd, 2);
+        assert!(p.is_armed());
+        assert!(p.fire(FaultSite::Gs1NotSpd));
+        assert!(p.fire(FaultSite::Gs1NotSpd));
+        assert!(!p.fire(FaultSite::Gs1NotSpd), "third fire must not trigger");
+        assert_eq!(p.fired(FaultSite::Gs1NotSpd), 2);
+        assert!(!p.fire(FaultSite::LanczosStall), "other sites stay disarmed");
+    }
+
+    #[test]
+    fn clones_share_counts() {
+        let p = FaultPlan::seeded(1).inject(FaultSite::WorkerPanic, 1);
+        let solver_side = p.clone();
+        assert!(solver_side.fire(FaultSite::WorkerPanic));
+        assert!(!p.fire(FaultSite::WorkerPanic), "consumed through the clone");
+        assert_eq!(p.fired(FaultSite::WorkerPanic), 1);
+    }
+
+    #[test]
+    fn always_never_exhausts() {
+        let p = FaultPlan::seeded(2).inject(FaultSite::LanczosStall, INJECT_ALWAYS);
+        for _ in 0..100 {
+            assert!(p.fire(FaultSite::LanczosStall));
+        }
+        assert!(p.is_armed());
+    }
+
+    #[test]
+    fn site_scatter_is_deterministic_and_covering() {
+        let a: Vec<FaultSite> = (0..64).map(|k| site_for(42, k)).collect();
+        let b: Vec<FaultSite> = (0..64).map(|k| site_for(42, k)).collect();
+        assert_eq!(a, b);
+        for site in FaultSite::ALL {
+            assert!(a.contains(&site), "{} never drawn in 64 samples", site.name());
+        }
+    }
+}

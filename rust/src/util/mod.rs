@@ -1,7 +1,11 @@
-//! Shared infrastructure: PRNG, timers, table formatting, and the
+//! Shared infrastructure: PRNG, timers, table formatting, the
 //! scoped-thread parallel substrate (`ExecCtx`: explicit execution
-//! contexts with a work-stealing pool — DESIGN.md §3).
+//! contexts with a work-stealing pool — DESIGN.md §3), cooperative
+//! cancellation tokens, and the deterministic fault-injection plans
+//! (DESIGN.md §7).
 
+pub mod cancel;
+pub mod faults;
 pub mod parallel;
 pub mod rng;
 pub mod table;

@@ -59,6 +59,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use super::cancel::{CancelStatus, CancelToken};
+
 static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
 static OVERRIDE_THREADS: AtomicUsize = AtomicUsize::new(0);
 static ACTIVE_OFFLOADS: AtomicUsize = AtomicUsize::new(0);
@@ -218,6 +220,10 @@ pub struct ExecCtx {
     threads: usize,
     placement: Placement,
     pool: Arc<StealPool>,
+    /// Cooperative cancellation handle (deadline and/or explicit cancel);
+    /// `None` = never cancelled.  Inherited by children, so a job token
+    /// reaches every nested stage of its solve.
+    cancel: Option<CancelToken>,
 }
 
 impl std::fmt::Debug for ExecCtx {
@@ -226,6 +232,7 @@ impl std::fmt::Debug for ExecCtx {
             .field("threads", &self.threads)
             .field("placement", &self.placement)
             .field("stats", &self.pool.snapshot())
+            .field("cancel", &self.cancel.as_ref().map(|t| t.status()))
             .finish()
     }
 }
@@ -240,7 +247,7 @@ impl ExecCtx {
     /// The default context: inherits the ambient budget (`GSYEIG_THREADS` /
     /// [`with_threads`] scope) and shares the process-global pool.
     pub fn global() -> ExecCtx {
-        ExecCtx { threads: 0, placement: Placement::Spread, pool: global_pool() }
+        ExecCtx { threads: 0, placement: Placement::Spread, pool: global_pool(), cancel: None }
     }
 
     /// A context with a fixed thread budget and a fresh pool (fresh
@@ -250,6 +257,7 @@ impl ExecCtx {
             threads: threads.max(1),
             placement: Placement::Spread,
             pool: Arc::new(StealPool::default()),
+            cancel: None,
         }
     }
 
@@ -267,6 +275,20 @@ impl ExecCtx {
     pub fn with_placement(mut self, placement: Placement) -> ExecCtx {
         self.placement = placement;
         self
+    }
+
+    /// Attach a cancellation token: the solvers poll it at stage
+    /// boundaries and abandon the solve with a structured error once it
+    /// fires (the coordinator's per-job deadline rides on this).
+    pub fn with_cancel(mut self, token: CancelToken) -> ExecCtx {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Current cancellation state ([`CancelStatus::Live`] when no token is
+    /// attached).
+    pub fn cancel_status(&self) -> CancelStatus {
+        self.cancel.as_ref().map_or(CancelStatus::Live, |t| t.status())
     }
 
     /// The effective thread budget of this ctx.
@@ -289,6 +311,7 @@ impl ExecCtx {
             threads: threads.max(1),
             placement: self.placement,
             pool: Arc::clone(&self.pool),
+            cancel: self.cancel.clone(),
         }
     }
 
@@ -704,6 +727,22 @@ mod tests {
         // a ctx built outside a with_threads scope still honours it
         let ctx = ExecCtx::global();
         with_threads(6, || assert_eq!(ctx.threads(), 6));
+    }
+
+    #[test]
+    fn cancel_token_reaches_installed_and_child_ctxs() {
+        use crate::util::cancel::{CancelStatus, CancelToken};
+        let token = CancelToken::new();
+        let ctx = ExecCtx::with_threads(2).with_cancel(token.clone());
+        assert_eq!(ctx.cancel_status(), CancelStatus::Live);
+        assert_eq!(ctx.child(1).cancel_status(), CancelStatus::Live);
+        ctx.install(|| {
+            token.cancel();
+            // ambient ctx and children both observe the shared token
+            assert_eq!(ExecCtx::current().cancel_status(), CancelStatus::Cancelled);
+            assert_eq!(ExecCtx::current().split(2).cancel_status(), CancelStatus::Cancelled);
+        });
+        assert_eq!(ExecCtx::global().cancel_status(), CancelStatus::Live);
     }
 
     #[test]

@@ -1,0 +1,402 @@
+//! Fault-injection harness: proves the fault-tolerance contract of
+//! DESIGN.md §7 end to end.
+//!
+//! * No panic escapes the solver or the coordinator — injected faults end
+//!   in a correct result or a structured [`SolverError`], never an abort.
+//! * Fallback routes produce **bitwise** the same eigenpairs as running
+//!   the fallback variant directly (the determinism contract extends to
+//!   the recovery paths).
+//! * The coordinator drains a mixed-fault job stream completely, with the
+//!   fault counters accounting for every retry/panic/timeout.
+//!
+//! All injection is count-based and carried per-config ([`FaultPlan`]), so
+//! every test here is exactly reproducible — no clocks, no races.
+
+use std::time::Duration;
+
+use gsyeig::coordinator::{Coordinator, CoordinatorConfig, Job, JobSpec, WorkloadSpec};
+use gsyeig::solver::gsyeig::{GsyeigSolver, Problem, SolverConfig, Variant, Which};
+use gsyeig::solver::SolverError;
+use gsyeig::util::cancel::CancelToken;
+use gsyeig::util::faults::{site_for, FaultPlan, FaultSite, INJECT_ALWAYS};
+use gsyeig::util::parallel::ExecCtx;
+use gsyeig::workloads::spectra::generate_problem;
+use gsyeig::Matrix;
+
+fn test_problem(n: usize, seed: u64) -> Problem {
+    let lams: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+    let (p, _) = generate_problem(n, &lams, 20.0, seed);
+    p
+}
+
+fn inline_spec(n: usize, s: usize, seed: u64) -> JobSpec {
+    let p = test_problem(n, seed);
+    JobSpec::new(WorkloadSpec::Inline { a: p.a, b: p.b, which: Which::Smallest }, s)
+}
+
+// ---------------------------------------------------------------------------
+// The tentpole: a 100-job stream with scattered faults drains completely.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_fault_queue_drains_completely() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 4,
+        queue_capacity: 128,
+        ..Default::default()
+    });
+    let seed = 0xFA17u64;
+    for id in 0..100u64 {
+        let n = 40 + (id as usize % 3) * 8;
+        let mut spec = inline_spec(n, 2, id);
+        if id % 3 == 0 {
+            // first five faulted jobs cover every site once, the rest are
+            // scattered deterministically — same plan every run
+            let site = if id < 15 {
+                FaultSite::ALL[(id / 3) as usize]
+            } else {
+                site_for(seed, id)
+            };
+            spec.faults = FaultPlan::seeded(seed ^ id).inject(site, 1);
+            match site {
+                // a transient panic must be survivable with one retry
+                FaultSite::WorkerPanic => spec.retry.max_retries = 2,
+                // Krylov-only sites need a Krylov route to be reachable
+                FaultSite::LanczosStall | FaultSite::ProjectedNoConv => {
+                    spec.variant = Some(Variant::KE)
+                }
+                FaultSite::OffloadRefusal => spec.variant = Some(Variant::KI),
+                FaultSite::Gs1NotSpd => {}
+            }
+        }
+        coord.submit(Job { id, spec }).ok().unwrap();
+    }
+    coord.close();
+    let out = coord.run_to_completion();
+
+    assert_eq!(out.len(), 100, "every job must produce an outcome");
+    let ids: Vec<u64> = out.iter().map(|o| o.id).collect();
+    assert_eq!(ids, (0..100).collect::<Vec<u64>>(), "sorted, no losses");
+    for o in &out {
+        assert!(o.error.is_none(), "job {} failed: {:?}", o.id, o.error);
+        assert!(o.converged, "job {} did not converge", o.id);
+        assert!(o.accuracy.residual < 1e-6, "job {}: residual {}", o.id, o.accuracy.residual);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.jobs_done, 100);
+    assert_eq!(m.failures, 0, "every injected fault must be recovered");
+    assert!(m.worker_panics >= 1, "the WorkerPanic site was armed");
+    assert!(m.retries >= 1, "the panicked job must have retried");
+    assert!(m.fallbacks >= 2, "GS1 boost and KI offload fallbacks were armed");
+}
+
+#[test]
+fn persistent_panic_exhausts_retries_without_poisoning_the_pool() {
+    let coord = Coordinator::new(CoordinatorConfig { workers: 2, ..Default::default() });
+    for id in 0..4u64 {
+        coord.submit(Job { id, spec: inline_spec(40, 2, id) }).ok().unwrap();
+    }
+    let mut spec = inline_spec(40, 2, 99);
+    spec.faults = FaultPlan::seeded(9).inject(FaultSite::WorkerPanic, INJECT_ALWAYS);
+    spec.retry.max_retries = 1;
+    spec.retry.backoff = Duration::from_millis(1);
+    coord.submit(Job { id: 4, spec }).ok().unwrap();
+    coord.close();
+    let out = coord.run_to_completion();
+
+    assert_eq!(out.len(), 5, "the poisoned job must not block the drain");
+    for o in &out[..4] {
+        assert!(o.error.is_none() && o.converged, "clean job {} was damaged", o.id);
+    }
+    let bad = &out[4];
+    assert!(
+        matches!(bad.error, Some(SolverError::WorkerPanic { .. })),
+        "expected WorkerPanic, got {:?}",
+        bad.error
+    );
+    assert_eq!(bad.attempts, 2, "initial attempt + one retry");
+    assert!(!bad.converged);
+    let m = coord.metrics();
+    assert_eq!(m.failures, 1);
+    assert_eq!(m.worker_panics, 2, "both attempts panicked");
+    assert_eq!(m.retries, 1);
+}
+
+#[test]
+fn worker_panic_retry_succeeds_on_second_attempt() {
+    let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+    let mut spec = inline_spec(40, 2, 7);
+    spec.faults = FaultPlan::seeded(4).inject(FaultSite::WorkerPanic, 1);
+    spec.retry.max_retries = 2;
+    spec.retry.backoff = Duration::from_millis(1);
+    coord.submit(Job { id: 0, spec }).ok().unwrap();
+    coord.close();
+    let out = coord.run_to_completion();
+    assert!(out[0].error.is_none(), "retry must recover: {:?}", out[0].error);
+    assert_eq!(out[0].attempts, 2);
+    assert!(out[0].converged);
+    let m = coord.metrics();
+    assert_eq!(m.worker_panics, 1);
+    assert_eq!(m.retries, 1);
+    assert_eq!(m.failures, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Fallback chains: recorded, and bitwise-faithful to the direct route.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ke_stall_reroutes_to_tt_bitwise() {
+    let p = test_problem(60, 31);
+    for threads in [1usize, 2, 8] {
+        let mut fb_cfg = SolverConfig::new(Variant::KE, 3, Which::Smallest);
+        fb_cfg.max_matvecs = 60; // tiny budget: the stalled run exhausts it fast
+        fb_cfg.exec = ExecCtx::with_threads(threads);
+        fb_cfg.faults = FaultPlan::seeded(7).inject(FaultSite::LanczosStall, INJECT_ALWAYS);
+        let fb = GsyeigSolver::native(fb_cfg).try_solve(p.clone()).unwrap();
+        assert!(fb.converged, "TT fallback must converge (threads={threads})");
+        assert_eq!(fb.report.route, vec!["KE", "TT"]);
+        assert!(
+            fb.report.events.iter().any(|e| e.action == "re-solve via TT route"),
+            "reroute must be recorded: {:?}",
+            fb.report.events
+        );
+
+        let mut tt_cfg = SolverConfig::new(Variant::TT, 3, Which::Smallest);
+        tt_cfg.exec = ExecCtx::with_threads(threads);
+        let direct = GsyeigSolver::native(tt_cfg).try_solve(p.clone()).unwrap();
+        // the fallback result must be bitwise the direct TT route's result
+        assert_eq!(fb.eigenvalues, direct.eigenvalues, "threads={threads}");
+        assert_eq!(fb.x.as_slice(), direct.x.as_slice(), "threads={threads}");
+    }
+}
+
+#[test]
+fn injected_notspd_recovers_with_diagonal_boost() {
+    let p = test_problem(50, 5);
+    let mut cfg = SolverConfig::new(Variant::TD, 3, Which::Smallest);
+    cfg.faults = FaultPlan::seeded(3).inject(FaultSite::Gs1NotSpd, 1);
+    let sol = GsyeigSolver::native(cfg).try_solve(p.clone()).unwrap();
+    assert!(sol.report.cholesky_shift > 0.0, "boost must be recorded");
+    assert!(
+        sol.report.events.iter().any(|e| e.stage == "GS1"),
+        "GS1 retry must be recorded: {:?}",
+        sol.report.events
+    );
+
+    let clean =
+        GsyeigSolver::native(SolverConfig::new(Variant::TD, 3, Which::Smallest)).try_solve(p).unwrap();
+    assert!(clean.report.clean(), "unfaulted solve must report clean");
+    for i in 0..3 {
+        assert!(
+            (sol.eigenvalues[i] - clean.eigenvalues[i]).abs() < 1e-6,
+            "eig {i}: boosted {} vs clean {}",
+            sol.eigenvalues[i],
+            clean.eigenvalues[i]
+        );
+    }
+}
+
+#[test]
+fn steqr_fallback_still_matches_direct_route() {
+    let p = test_problem(60, 13);
+    let mut cfg = SolverConfig::new(Variant::KE, 3, Which::Smallest);
+    cfg.faults = FaultPlan::seeded(2).inject(FaultSite::ProjectedNoConv, 1);
+    let sol = GsyeigSolver::native(cfg).try_solve(p.clone()).unwrap();
+    assert!(sol.converged);
+    assert!(sol.report.steqr_fallbacks >= 1, "the bisection fallback must have run");
+
+    let td =
+        GsyeigSolver::native(SolverConfig::new(Variant::TD, 3, Which::Smallest)).try_solve(p).unwrap();
+    for i in 0..3 {
+        assert!(
+            (sol.eigenvalues[i] - td.eigenvalues[i]).abs() < 1e-6,
+            "eig {i}: {} vs {}",
+            sol.eigenvalues[i],
+            td.eigenvalues[i]
+        );
+    }
+}
+
+#[test]
+fn ki_offload_refusal_falls_back_to_native_operator() {
+    let p = test_problem(50, 17);
+    let mut cfg = SolverConfig::new(Variant::KI, 2, Which::Smallest);
+    cfg.faults = FaultPlan::seeded(6).inject(FaultSite::OffloadRefusal, 1);
+    let sol = GsyeigSolver::native(cfg).try_solve(p).unwrap();
+    assert!(sol.converged);
+    assert!(
+        sol.report.events.iter().any(|e| e.stage == "KI1"),
+        "offload refusal must be recorded: {:?}",
+        sol.report.events
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Degenerate and hostile inputs: structured errors, never panics.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn exactly_singular_b_is_boosted_to_a_solve() {
+    let n = 30;
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        a[(i, i)] = (i + 1) as f64;
+    }
+    let mut b = Matrix::identity(n);
+    b[(n - 1, n - 1)] = 0.0; // exactly singular, PSD
+    let cfg = SolverConfig::new(Variant::TD, 2, Which::Smallest);
+    let sol = GsyeigSolver::native(cfg).try_solve(Problem::new(a, b)).unwrap();
+    assert!(sol.report.cholesky_shift > 0.0, "singular B needs a boost");
+    // the boost regularizes B, so only modest accuracy is recoverable —
+    // the point is a *clean* recovery, not precision on a singular pencil
+    assert!((sol.eigenvalues[0] - 1.0).abs() < 1e-2, "got {}", sol.eigenvalues[0]);
+    assert!((sol.eigenvalues[1] - 2.0).abs() < 1e-2, "got {}", sol.eigenvalues[1]);
+}
+
+#[test]
+fn indefinite_b_fails_with_structured_error() {
+    let n = 20;
+    let a = Matrix::identity(n);
+    let mut b = Matrix::identity(n);
+    b[(0, 0)] = -1.0; // beyond any boost in the ladder
+    let cfg = SolverConfig::new(Variant::TD, 2, Which::Smallest);
+    let err = GsyeigSolver::native(cfg).try_solve(Problem::new(a, b)).unwrap_err();
+    assert!(matches!(err, SolverError::NotSpd { .. }), "got {err:?}");
+}
+
+#[test]
+fn degenerate_inputs_never_panic() {
+    // n = 0: no valid s exists
+    let err = GsyeigSolver::native(SolverConfig::new(Variant::TD, 1, Which::Smallest))
+        .try_solve(Problem::new(Matrix::zeros(0, 0), Matrix::zeros(0, 0)))
+        .unwrap_err();
+    assert!(matches!(err, SolverError::BadInput { .. }), "got {err:?}");
+
+    // n = 1, SPD: exact closed form
+    let mut a = Matrix::zeros(1, 1);
+    a[(0, 0)] = 4.0;
+    let mut b = Matrix::zeros(1, 1);
+    b[(0, 0)] = 2.0;
+    let sol = GsyeigSolver::native(SolverConfig::new(Variant::KE, 1, Which::Smallest))
+        .try_solve(Problem::new(a, b))
+        .unwrap();
+    assert_eq!(sol.eigenvalues, vec![2.0]);
+    assert!((sol.x[(0, 0)] - 1.0 / 2.0_f64.sqrt()).abs() < 1e-15);
+
+    // n = 1, non-SPD
+    let mut a = Matrix::zeros(1, 1);
+    a[(0, 0)] = 1.0;
+    let mut b = Matrix::zeros(1, 1);
+    b[(0, 0)] = -2.0;
+    let err = GsyeigSolver::native(SolverConfig::new(Variant::TD, 1, Which::Smallest))
+        .try_solve(Problem::new(a, b))
+        .unwrap_err();
+    assert!(matches!(err, SolverError::NotSpd { minor: 1 }), "got {err:?}");
+
+    // NaN / Inf entries are rejected up front
+    let mut a = Matrix::identity(8);
+    a[(3, 3)] = f64::NAN;
+    let err = GsyeigSolver::native(SolverConfig::new(Variant::TD, 2, Which::Smallest))
+        .try_solve(Problem::new(a, Matrix::identity(8)))
+        .unwrap_err();
+    assert!(matches!(err, SolverError::BadInput { .. }), "got {err:?}");
+    let a = Matrix::identity(8);
+    let mut b = Matrix::identity(8);
+    b[(0, 1)] = f64::INFINITY;
+    let err = GsyeigSolver::native(SolverConfig::new(Variant::TD, 2, Which::Smallest))
+        .try_solve(Problem::new(a, b))
+        .unwrap_err();
+    assert!(matches!(err, SolverError::BadInput { .. }), "got {err:?}");
+}
+
+#[test]
+fn lambda_i_pencil_with_fully_degenerate_spectrum() {
+    // A = 2I, B = I: every eigenvalue is 2, a maximal cluster for the
+    // tridiagonal subset solver
+    let n = 20;
+    let mut a = Matrix::identity(n);
+    for i in 0..n {
+        a[(i, i)] = 2.0;
+    }
+    let sol = GsyeigSolver::native(SolverConfig::new(Variant::TD, 3, Which::Smallest))
+        .try_solve(Problem::new(a, Matrix::identity(n)))
+        .unwrap();
+    for (i, ev) in sol.eigenvalues.iter().enumerate() {
+        assert!((ev - 2.0).abs() < 1e-10, "eig {i}: {ev}");
+    }
+    assert!(sol.accuracy_check_ok());
+}
+
+// the λI test wants B-orthonormality of the cluster vectors without
+// pulling in the accuracy module; a tiny helper keeps it self-contained
+trait OrthCheck {
+    fn accuracy_check_ok(&self) -> bool;
+}
+
+impl OrthCheck for gsyeig::Solution {
+    fn accuracy_check_ok(&self) -> bool {
+        // XᵀX = I for B = I; check pairwise dot products
+        let s = self.x.cols();
+        let n = self.x.rows();
+        for i in 0..s {
+            for j in 0..s {
+                let mut d = 0.0;
+                for r in 0..n {
+                    d += self.x[(r, i)] * self.x[(r, j)];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                if (d - want).abs() > 1e-8 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deadlines and queue-closure semantics.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn expired_deadline_surfaces_structured_timeout() {
+    let p = test_problem(40, 23);
+    let mut cfg = SolverConfig::new(Variant::TD, 2, Which::Smallest);
+    cfg.exec = ExecCtx::with_threads(1).with_cancel(CancelToken::with_timeout(Duration::ZERO));
+    let err = GsyeigSolver::native(cfg).try_solve(p).unwrap_err();
+    assert!(matches!(err, SolverError::Timeout { .. }), "got {err:?}");
+}
+
+#[test]
+fn coordinator_deadline_times_out_job_without_retry() {
+    let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+    let mut spec = inline_spec(40, 2, 3);
+    spec.deadline = Some(Duration::ZERO);
+    spec.retry.max_retries = 3; // must NOT be spent on a dead deadline
+    coord.submit(Job { id: 0, spec }).ok().unwrap();
+    coord.close();
+    let out = coord.run_to_completion();
+    assert!(
+        matches!(out[0].error, Some(SolverError::Timeout { .. })),
+        "got {:?}",
+        out[0].error
+    );
+    assert_eq!(out[0].attempts, 1, "deadline errors are not retryable");
+    let m = coord.metrics();
+    assert!(m.timeouts >= 1);
+    assert_eq!(m.retries, 0);
+    assert_eq!(m.failures, 1);
+}
+
+#[test]
+fn submit_after_close_reports_closed_with_the_job() {
+    let coord = Coordinator::new(CoordinatorConfig::default());
+    coord.close();
+    let err = coord.submit(Job { id: 0, spec: inline_spec(10, 1, 0) }).unwrap_err();
+    assert!(err.is_closed());
+    let job = err.into_inner();
+    assert_eq!(job.id, 0, "the rejected job must come back to the caller");
+    // the pool still drains cleanly with nothing enqueued
+    assert!(coord.run_to_completion().is_empty());
+}

@@ -10,13 +10,7 @@ use gsyeig::workloads::spectra::generate_problem;
 fn inline_spec(n: usize, s: usize, seed: u64) -> JobSpec {
     let lams: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
     let (p, _) = generate_problem(n, &lams, 20.0, seed);
-    JobSpec {
-        workload: WorkloadSpec::Inline { a: p.a, b: p.b, which: Which::Smallest },
-        s,
-        variant: None,
-        b_cache_key: None,
-        exec_threads: None,
-    }
+    JobSpec::new(WorkloadSpec::Inline { a: p.a, b: p.b, which: Which::Smallest }, s)
 }
 
 #[test]
@@ -40,11 +34,11 @@ fn mixed_job_stream_completes_in_order() {
 fn workload_specs_realize_and_solve() {
     let coord = Coordinator::new(CoordinatorConfig::default());
     coord
-        .submit(Job { id: 0, spec: JobSpec { workload: WorkloadSpec::Md { n: 90, seed: 1 }, s: 2, variant: None, b_cache_key: None, exec_threads: None } })
+        .submit(Job { id: 0, spec: JobSpec::new(WorkloadSpec::Md { n: 90, seed: 1 }, 2) })
         .ok()
         .unwrap();
     coord
-        .submit(Job { id: 1, spec: JobSpec { workload: WorkloadSpec::Dft { n: 100, seed: 2 }, s: 3, variant: None, b_cache_key: None, exec_threads: None } })
+        .submit(Job { id: 1, spec: JobSpec::new(WorkloadSpec::Dft { n: 100, seed: 2 }, 3) })
         .ok()
         .unwrap();
     coord.close();
@@ -74,13 +68,12 @@ fn scf_style_stream_hits_factor_cache() {
     let (p, _) = generate_problem(n, &lams, 20.0, 7);
     let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
     for id in 0..4u64 {
-        let spec = JobSpec {
-            workload: WorkloadSpec::Inline { a: p.a.clone(), b: p.b.clone(), which: Which::Smallest },
-            s: 2,
-            variant: Some(Variant::TD),
-            b_cache_key: Some(1),
-            exec_threads: None,
-        };
+        let mut spec = JobSpec::new(
+            WorkloadSpec::Inline { a: p.a.clone(), b: p.b.clone(), which: Which::Smallest },
+            2,
+        );
+        spec.variant = Some(Variant::TD);
+        spec.b_cache_key = Some(1);
         coord.submit(Job { id, spec }).ok().unwrap();
     }
     coord.close();

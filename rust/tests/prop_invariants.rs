@@ -119,7 +119,7 @@ fn prop_lanczos_ritz_values_bounded_by_extremes() {
         let op = ExplicitOp::new(&a);
         let mut cfg = LanczosConfig::new(3, Want::Largest);
         cfg.seed = rng.next_u64();
-        let r = lanczos_solve(&op, &cfg);
+        let r = lanczos_solve(&op, &cfg).unwrap();
         // Gershgorin bound of the dense matrix
         let mut hi = f64::NEG_INFINITY;
         let mut lo = f64::INFINITY;
