@@ -96,6 +96,9 @@ fn main() {
                 "last cycle: {} jobs, latency p50 {:.3}s p95 {:.3}s",
                 m.jobs_done, m.latency_p50, m.latency_p95
             );
+            println!("\n{}", coord.metrics_snapshot());
+            // std has no atexit: flush the GSYEIG_TRACE span tree explicitly
+            gsyeig::obs::flush_env();
             return;
         }
         e_prev = e_band;
@@ -136,5 +139,6 @@ fn main() {
         h.symmetrize();
     }
     println!("\nSCF did NOT converge in {max_cycles} cycles (tighten mixing?)");
+    gsyeig::obs::flush_env();
     std::process::exit(1);
 }

@@ -1,0 +1,62 @@
+//! Tracing overhead pin (DESIGN.md §8 budget): a fully traced solve must
+//! cost < 2 % over the untraced baseline, because every span is one
+//! atomic id fetch + one short `Mutex` push at *stage* granularity —
+//! thousands of events per solve, not millions.
+//!
+//!   cargo bench --bench obs_overhead
+//!
+//! The driver reports best-of-3 for an n = 512 MD-shaped TT solve with
+//! tracing off, then on, and flags the overhead against the budget.
+
+use gsyeig::obs::span;
+use gsyeig::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant};
+use gsyeig::workloads::MdWorkload;
+
+const N: usize = 512;
+const REPS: usize = 3;
+const BUDGET_PCT: f64 = 2.0;
+
+fn best_of(reps: usize, mut f: impl FnMut() -> f64) -> f64 {
+    (0..reps).map(|_| f()).fold(f64::INFINITY, f64::min)
+}
+
+fn main() {
+    let w = MdWorkload::with_n(N);
+    let (problem, which, _) = w.solver_problem();
+    let cfg = SolverConfig::new(Variant::TT, w.s, which);
+    let solver = GsyeigSolver::native(cfg);
+
+    // warm-up: fault in page allocations, thread pool, etc.
+    solver.solve(problem.clone());
+
+    let untraced = best_of(REPS, || {
+        let t0 = std::time::Instant::now();
+        solver.solve(problem.clone());
+        t0.elapsed().as_secs_f64()
+    });
+
+    span::enable();
+    let traced = best_of(REPS, || {
+        let t0 = std::time::Instant::now();
+        solver.solve(problem.clone());
+        let dt = t0.elapsed().as_secs_f64();
+        // keep the collector bounded so later reps don't pay Vec growth
+        let events = span::drain();
+        assert!(!events.is_empty(), "tracing was on but recorded nothing");
+        dt
+    });
+    span::disable();
+
+    let overhead = (traced / untraced - 1.0) * 100.0;
+    println!("obs overhead: n = {N}, s = {}, TT route, best of {REPS}", w.s);
+    println!("  untraced {untraced:.4} s");
+    println!("  traced   {traced:.4} s");
+    println!("  overhead {overhead:+.2} %  (budget < {BUDGET_PCT} %)");
+    if overhead < BUDGET_PCT {
+        println!("  PASS");
+    } else {
+        // best-of-3 on a loaded machine can jitter past the budget; report
+        // loudly instead of failing the bench run
+        println!("  WARN: overhead exceeds the {BUDGET_PCT} % budget");
+    }
+}

@@ -112,6 +112,42 @@ impl JsonObject {
     }
 }
 
+/// Version of the BENCH file shape.  v2 added the host metadata header
+/// (`bench_schema_version`, `hostname`, `threads`).
+pub const BENCH_SCHEMA_VERSION: u32 = 2;
+
+/// Best-effort hostname: `$HOSTNAME`, else `/etc/hostname`, else "unknown".
+/// Std has no gethostname, and benches from different hosts must stay
+/// distinguishable once the ≥8-core sweep lands.
+pub fn hostname() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    if let Ok(h) = std::fs::read_to_string("/etc/hostname") {
+        let h = h.trim();
+        if !h.is_empty() {
+            return h.to_string();
+        }
+    }
+    "unknown".to_string()
+}
+
+impl JsonObject {
+    /// Copy of `self` with the schema/host metadata header prepended:
+    /// `bench_schema_version`, `hostname`, `threads`, then the original
+    /// entries in order.
+    pub fn with_metadata(&self) -> JsonObject {
+        let mut out = JsonObject::new();
+        out.num("bench_schema_version", BENCH_SCHEMA_VERSION as f64);
+        out.str("hostname", &hostname());
+        out.num("threads", crate::util::parallel::current_threads() as f64);
+        out.entries.extend(self.entries.iter().cloned());
+        out
+    }
+}
+
 /// Directory selected by `GSYEIG_BENCH_JSON`, if emission is enabled.
 fn emit_dir() -> Option<std::path::PathBuf> {
     match std::env::var("GSYEIG_BENCH_JSON") {
@@ -123,12 +159,32 @@ fn emit_dir() -> Option<std::path::PathBuf> {
 }
 
 /// Write `BENCH_<name>.json` when `GSYEIG_BENCH_JSON` is set; no-op
-/// otherwise.  Emission failures warn on stderr but never abort a run.
+/// otherwise.  The schema/host metadata header is prepended to every file.
+/// Emission failures warn on stderr but never abort a run.
 pub fn maybe_emit(name: &str, obj: &JsonObject) {
     let Some(dir) = emit_dir() else { return };
     let path = dir.join(format!("BENCH_{name}.json"));
-    if let Err(e) = std::fs::write(&path, obj.render() + "\n") {
+    if let Err(e) = std::fs::write(&path, obj.with_metadata().render() + "\n") {
         eprintln!("warning: could not write {}: {e}", path.display());
+    }
+}
+
+/// Append pre-rendered JSONL `lines` to `BENCH_<name>.jsonl` when
+/// `GSYEIG_BENCH_JSON` is set; no-op otherwise.  Used by the trace
+/// exporter to stream span events next to the bench tables.
+pub fn maybe_append_jsonl(name: &str, lines: &str) {
+    let Some(dir) = emit_dir() else { return };
+    if lines.is_empty() {
+        return;
+    }
+    let path = dir.join(format!("BENCH_{name}.jsonl"));
+    let res = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| std::io::Write::write_all(&mut f, lines.as_bytes()));
+    if let Err(e) = res {
+        eprintln!("warning: could not append {}: {e}", path.display());
     }
 }
 
@@ -160,6 +216,17 @@ mod tests {
         obj.str("msg", "a\"b\\c\nd");
         obj.num("resid", f64::INFINITY);
         assert_eq!(obj.render(), r#"{"msg":"a\"b\\c\nd","resid":null}"#);
+    }
+
+    #[test]
+    fn metadata_header_comes_first() {
+        let mut obj = JsonObject::new();
+        obj.str("kind", "md");
+        let r = obj.with_metadata().render();
+        assert!(r.starts_with(r#"{"bench_schema_version":2,"hostname":""#), "{r}");
+        assert!(r.contains(r#""threads":"#));
+        assert!(r.ends_with(r#""kind":"md"}"#), "original entries follow: {r}");
+        assert!(!hostname().is_empty());
     }
 
     #[test]

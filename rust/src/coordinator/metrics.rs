@@ -1,10 +1,26 @@
 //! Coordinator metrics: throughput, latency distribution, cache hits.
+//!
+//! Every count recorded here is simultaneously mirrored into an
+//! [`obs::Registry`] under `coordinator.*` names (plus a
+//! `coordinator.job_latency_ns` histogram), so the snapshot a test asserts
+//! against and the registry dump a trace consumer reads can never disagree
+//! — they are written by the same `record_*` call.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-#[derive(Default)]
+use crate::obs::{Counter, Histogram, Registry};
+
 pub struct Metrics {
     inner: Mutex<Inner>,
+    c_jobs: Arc<Counter>,
+    c_hits: Arc<Counter>,
+    c_matvecs: Arc<Counter>,
+    c_retries: Arc<Counter>,
+    c_timeouts: Arc<Counter>,
+    c_panics: Arc<Counter>,
+    c_failures: Arc<Counter>,
+    c_fallbacks: Arc<Counter>,
+    h_latency: Arc<Histogram>,
 }
 
 #[derive(Default)]
@@ -40,9 +56,32 @@ pub struct MetricsSnapshot {
     pub fallbacks: usize,
 }
 
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Metrics {
+    /// Mirrors into the global registry (the production wiring).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_registry(&Registry::global_arc())
+    }
+
+    /// Mirrors into `registry` — tests use a fresh one for exact counts.
+    pub fn with_registry(registry: &Arc<Registry>) -> Self {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            c_jobs: registry.counter("coordinator.jobs_done"),
+            c_hits: registry.counter("coordinator.gs1_cache_hits"),
+            c_matvecs: registry.counter("coordinator.matvecs"),
+            c_retries: registry.counter("coordinator.retries"),
+            c_timeouts: registry.counter("coordinator.timeouts"),
+            c_panics: registry.counter("coordinator.worker_panics"),
+            c_failures: registry.counter("coordinator.failures"),
+            c_fallbacks: registry.counter("coordinator.fallbacks"),
+            h_latency: registry.histogram("coordinator.job_latency_ns"),
+        }
     }
 
     pub fn record(&self, latency_s: f64, gs1_cached: bool, matvecs: usize) {
@@ -51,28 +90,38 @@ impl Metrics {
         g.jobs_done += 1;
         if gs1_cached {
             g.gs1_cache_hits += 1;
+            self.c_hits.incr();
         }
         g.matvecs_total += matvecs;
+        drop(g);
+        self.c_jobs.incr();
+        self.c_matvecs.add(matvecs as u64);
+        self.h_latency.record((latency_s.max(0.0) * 1e9) as u64);
     }
 
     pub fn record_retry(&self) {
         self.inner.lock().unwrap().retries += 1;
+        self.c_retries.incr();
     }
 
     pub fn record_timeout(&self) {
         self.inner.lock().unwrap().timeouts += 1;
+        self.c_timeouts.incr();
     }
 
     pub fn record_worker_panic(&self) {
         self.inner.lock().unwrap().worker_panics += 1;
+        self.c_panics.incr();
     }
 
     pub fn record_failure(&self) {
         self.inner.lock().unwrap().failures += 1;
+        self.c_failures.incr();
     }
 
     pub fn record_fallbacks(&self, n: usize) {
         self.inner.lock().unwrap().fallbacks += n;
+        self.c_fallbacks.add(n as u64);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -126,6 +175,32 @@ mod tests {
         assert_eq!(s.latency_p95, 0.0);
         assert_eq!(s.retries, 0);
         assert_eq!(s.failures, 0);
+    }
+
+    #[test]
+    fn registry_mirror_matches_snapshot_exactly() {
+        let reg = Arc::new(Registry::new());
+        let m = Metrics::with_registry(&reg);
+        m.record(0.25, true, 40);
+        m.record(1.5, false, 2);
+        m.record_retry();
+        m.record_retry();
+        m.record_timeout();
+        m.record_worker_panic();
+        m.record_failure();
+        m.record_fallbacks(4);
+        let s = m.snapshot();
+        assert_eq!(reg.counter_value("coordinator.jobs_done"), s.jobs_done as u64);
+        assert_eq!(reg.counter_value("coordinator.gs1_cache_hits"), s.gs1_cache_hits as u64);
+        assert_eq!(reg.counter_value("coordinator.matvecs"), s.matvecs_total as u64);
+        assert_eq!(reg.counter_value("coordinator.retries"), s.retries as u64);
+        assert_eq!(reg.counter_value("coordinator.timeouts"), s.timeouts as u64);
+        assert_eq!(reg.counter_value("coordinator.worker_panics"), s.worker_panics as u64);
+        assert_eq!(reg.counter_value("coordinator.failures"), s.failures as u64);
+        assert_eq!(reg.counter_value("coordinator.fallbacks"), s.fallbacks as u64);
+        let h = reg.histogram("coordinator.job_latency_ns");
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 250_000_000 + 1_500_000_000);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::obs::Gauge;
 
 /// Why a push was rejected.  Carries the item back so the producer can
 /// retry or requeue it elsewhere.
@@ -53,17 +55,40 @@ struct Inner<T> {
     closed: bool,
     /// High-water mark, for the metrics report.
     max_depth: usize,
+    /// Optional registry gauge mirroring the live depth after every
+    /// push/pop (the coordinator wires `coordinator.queue_depth` here).
+    depth_gauge: Option<Arc<Gauge>>,
+}
+
+impl<T> Inner<T> {
+    fn publish_depth(&self) {
+        if let Some(g) = &self.depth_gauge {
+            g.set(self.items.len() as i64);
+        }
+    }
 }
 
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1);
         BoundedQueue {
-            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false, max_depth: 0 }),
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+                max_depth: 0,
+                depth_gauge: None,
+            }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
         }
+    }
+
+    /// Mirror the live queue depth into `gauge` after every push/pop.
+    pub fn set_depth_gauge(&self, gauge: Arc<Gauge>) {
+        let mut g = self.inner.lock().unwrap();
+        gauge.set(g.items.len() as i64);
+        g.depth_gauge = Some(gauge);
     }
 
     /// Blocking push; waits while full (backpressure), so the only error
@@ -81,6 +106,7 @@ impl<T> BoundedQueue<T> {
         if depth > g.max_depth {
             g.max_depth = depth;
         }
+        g.publish_depth();
         self.not_empty.notify_one();
         Ok(())
     }
@@ -100,6 +126,7 @@ impl<T> BoundedQueue<T> {
         if depth > g.max_depth {
             g.max_depth = depth;
         }
+        g.publish_depth();
         self.not_empty.notify_one();
         Ok(())
     }
@@ -109,6 +136,7 @@ impl<T> BoundedQueue<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
+                g.publish_depth();
                 self.not_full.notify_one();
                 return Some(item);
             }
@@ -207,6 +235,21 @@ mod tests {
         assert_eq!(q.pop(), Some(0));
         h.join().unwrap();
         assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn depth_gauge_tracks_len() {
+        let q = BoundedQueue::new(8);
+        let g = Arc::new(Gauge::default());
+        q.set_depth_gauge(Arc::clone(&g));
+        assert_eq!(g.get(), 0);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(g.get(), 2);
+        q.pop();
+        assert_eq!(g.get(), 1);
+        q.pop();
+        assert_eq!(g.get(), 0);
     }
 
     #[test]

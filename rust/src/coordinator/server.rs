@@ -108,17 +108,55 @@ pub struct Coordinator {
     queue: Arc<BoundedQueue<Job>>,
     results: Arc<Mutex<Vec<JobOutcome>>>,
     metrics: Arc<Metrics>,
+    registry: Arc<crate::obs::Registry>,
     config: CoordinatorConfig,
 }
 
 impl Coordinator {
+    /// Mirrors metrics into the global obs registry (production wiring).
     pub fn new(config: CoordinatorConfig) -> Self {
+        Self::with_registry(config, crate::obs::Registry::global_arc())
+    }
+
+    /// Mirrors metrics into `registry` — tests pass a fresh instance for
+    /// exact-count isolation.
+    pub fn with_registry(config: CoordinatorConfig, registry: Arc<crate::obs::Registry>) -> Self {
+        let queue = Arc::new(BoundedQueue::new(config.queue_capacity));
+        queue.set_depth_gauge(registry.gauge("coordinator.queue_depth"));
         Coordinator {
-            queue: Arc::new(BoundedQueue::new(config.queue_capacity)),
+            queue,
             results: Arc::new(Mutex::new(Vec::new())),
-            metrics: Arc::new(Metrics::new()),
+            metrics: Arc::new(Metrics::with_registry(&registry)),
+            registry,
             config,
         }
+    }
+
+    /// Human-readable dump: the coordinator's own snapshot plus every
+    /// metric in the registry it mirrors into (taskpar steal/idle
+    /// counters, fault-injection hits, queue depth, latency histogram).
+    pub fn metrics_snapshot(&self) -> String {
+        use std::fmt::Write as _;
+        let s = self.metrics.snapshot();
+        let mut out = String::new();
+        let _ = writeln!(out, "coordinator metrics");
+        let _ = writeln!(out, "  jobs_done        {}", s.jobs_done);
+        let _ = writeln!(out, "  gs1_cache_hits   {}", s.gs1_cache_hits);
+        let _ = writeln!(out, "  matvecs_total    {}", s.matvecs_total);
+        let _ = writeln!(out, "  retries          {}", s.retries);
+        let _ = writeln!(out, "  timeouts         {}", s.timeouts);
+        let _ = writeln!(out, "  worker_panics    {}", s.worker_panics);
+        let _ = writeln!(out, "  failures         {}", s.failures);
+        let _ = writeln!(out, "  fallbacks        {}", s.fallbacks);
+        let _ = writeln!(out, "  queue_max_depth  {}", self.queue.max_depth());
+        let _ = writeln!(
+            out,
+            "  latency_s        p50={:.4} p95={:.4} mean={:.4}",
+            s.latency_p50, s.latency_p95, s.latency_mean
+        );
+        let _ = writeln!(out, "registry");
+        out.push_str(&self.registry.render_text());
+        out
     }
 
     /// Submit a job (blocks under backpressure); fails with
@@ -262,12 +300,17 @@ fn execute_job(
         if let Some(tok) = &token {
             attempt_ctx = attempt_ctx.with_cancel(tok.clone());
         }
-        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            if job.spec.faults.fire(FaultSite::WorkerPanic) {
-                panic!("injected worker panic");
-            }
-            run_attempt(&job, variant, cache, &attempt_ctx)
-        }));
+        let result = {
+            let _sp = crate::obs::span_detail("job.attempt", || {
+                format!("job={} variant={} attempt={attempts}", job.id, variant.name())
+            });
+            std::panic::catch_unwind(AssertUnwindSafe(|| {
+                if job.spec.faults.fire(FaultSite::WorkerPanic) {
+                    panic!("injected worker panic");
+                }
+                run_attempt(&job, variant, cache, &attempt_ctx)
+            }))
+        };
         let err = match result {
             Ok(Ok((sol, accuracy, gs1_cached))) => {
                 return JobOutcome {
@@ -303,6 +346,9 @@ fn execute_job(
         let retryable =
             matches!(err, SolverError::WorkerPanic { .. } | SolverError::Offload { .. });
         if retryable && attempts <= job.spec.retry.max_retries {
+            crate::obs::instant("job.retry", || {
+                format!("job={} attempt={attempts}: {err}", job.id)
+            });
             metrics.record_retry();
             std::thread::sleep(job.spec.retry.backoff * (1u32 << (attempts - 1).min(6)));
             continue;
@@ -358,6 +404,34 @@ mod tests {
         }
         let m = coord.metrics();
         assert_eq!(m.jobs_done, 4);
+    }
+
+    #[test]
+    fn metrics_snapshot_mirrors_registry_exactly() {
+        // acceptance: the registry mirror and the per-struct snapshot are
+        // written by the same record_* calls, so they must agree exactly
+        let reg = Arc::new(crate::obs::Registry::new());
+        let coord = Coordinator::with_registry(CoordinatorConfig::default(), Arc::clone(&reg));
+        for id in 0..3u64 {
+            coord.submit(Job { id, spec: inline_spec(40, 2, id) }).ok().unwrap();
+        }
+        coord.close();
+        coord.run_to_completion();
+        let m = coord.metrics();
+        assert_eq!(m.jobs_done, 3);
+        assert_eq!(reg.counter_value("coordinator.jobs_done"), m.jobs_done as u64);
+        assert_eq!(reg.counter_value("coordinator.gs1_cache_hits"), m.gs1_cache_hits as u64);
+        assert_eq!(reg.counter_value("coordinator.matvecs"), m.matvecs_total as u64);
+        assert_eq!(reg.counter_value("coordinator.retries"), m.retries as u64);
+        assert_eq!(reg.counter_value("coordinator.timeouts"), m.timeouts as u64);
+        assert_eq!(reg.counter_value("coordinator.failures"), m.failures as u64);
+        assert_eq!(reg.counter_value("coordinator.fallbacks"), m.fallbacks as u64);
+        assert_eq!(reg.histogram("coordinator.job_latency_ns").count(), m.jobs_done as u64);
+        assert_eq!(reg.gauge_value("coordinator.queue_depth"), 0, "drained queue");
+        let text = coord.metrics_snapshot();
+        assert!(text.contains("jobs_done        3"), "{text}");
+        assert!(text.contains("coordinator.jobs_done"), "{text}");
+        assert!(text.contains("coordinator.job_latency_ns"), "{text}");
     }
 
     #[test]

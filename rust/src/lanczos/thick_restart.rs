@@ -14,7 +14,7 @@ use crate::solver::error::{checkpoint, SolverError};
 use crate::util::faults::{FaultPlan, FaultSite};
 use crate::util::parallel::ExecCtx;
 use crate::util::rng::Rng;
-use crate::util::timer::StageTimer;
+use crate::util::timer::{now_ns, since, StageTimer};
 
 use super::operator::SymOp;
 
@@ -40,6 +40,11 @@ pub struct LanczosConfig {
     pub seed: u64,
     /// Deterministic fault-injection schedule (disarmed by default).
     pub faults: FaultPlan,
+    /// Trace span names for [operator application, recurrence/restart,
+    /// Ritz assembly].  The KE/KI variants override these with their paper
+    /// stage keys (KE1/KE2/KE3, KI123/KI4/KI5) so the span tree matches
+    /// Table 2 for whichever variant is driving.
+    pub span_stages: [&'static str; 3],
 }
 
 impl LanczosConfig {
@@ -52,6 +57,7 @@ impl LanczosConfig {
             want,
             seed: 0x1a2c_05,
             faults: FaultPlan::disarmed(),
+            span_stages: ["lanczos.op", "lanczos.recurrence", "lanczos.assembly"],
         }
     }
 
@@ -112,66 +118,75 @@ pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> Result<LanczosResul
 
     loop {
         checkpoint(&ExecCtx::current(), "lanczos")?;
+        let _cycle =
+            crate::obs::span_detail("lanczos.cycle", || format!("restart={restarts} k={k}"));
         // ---- Lanczos extension from column k to m
         let mut alpha = vec![0.0; m];
         let mut beta = vec![0.0; m]; // beta[j]: coupling (v_j, v_{j+1})
         let mut jlast = m;
-        for j in k..m {
-            // w := Op v_j
-            let mut w = vec![0.0; n];
-            op.apply(v.col(j), &mut w);
-            if op.matvecs() > cfg.max_matvecs {
-                jlast = j + 1;
-                // fall through with what we have
-            }
-            let t0 = std::time::Instant::now();
-            // three-term recurrence
-            alpha[j] = ddot(&w, v.col(j));
-            daxpy(-alpha[j], v.col(j), &mut w);
-            if j == k {
-                // coupling to all retained Ritz vectors
-                for (i, bc) in beta_c.iter().enumerate() {
-                    daxpy(-bc, v.col(i), &mut w);
+        {
+            let _rec = crate::obs::span(cfg.span_stages[1]);
+            for j in k..m {
+                // w := Op v_j
+                let mut w = vec![0.0; n];
+                {
+                    let _op = crate::obs::span(cfg.span_stages[0]);
+                    op.apply(v.col(j), &mut w);
                 }
-            } else {
-                daxpy(-beta[j - 1], v.col(j - 1), &mut w);
-            }
-            // full re-orthogonalization, two passes (Kahan: twice is enough)
-            for _pass in 0..2 {
-                for i in 0..=j {
-                    let proj = ddot(&w, v.col(i));
-                    daxpy(-proj, v.col(i), &mut w);
+                if op.matvecs() > cfg.max_matvecs {
+                    jlast = j + 1;
+                    // fall through with what we have
                 }
-            }
-            let bj = dnrm2(&w);
-            beta[j] = bj;
-            if bj < f64::EPSILON * alpha[j].abs().max(1.0) {
-                // invariant subspace found: restart the residual randomly
-                let wv = &mut w;
-                rng.fill_normal(wv);
-                for i in 0..=j {
-                    let proj = ddot(wv, v.col(i));
-                    daxpy(-proj, v.col(i), wv);
+                let t0 = now_ns();
+                // three-term recurrence
+                alpha[j] = ddot(&w, v.col(j));
+                daxpy(-alpha[j], v.col(j), &mut w);
+                if j == k {
+                    // coupling to all retained Ritz vectors
+                    for (i, bc) in beta_c.iter().enumerate() {
+                        daxpy(-bc, v.col(i), &mut w);
+                    }
+                } else {
+                    daxpy(-beta[j - 1], v.col(j - 1), &mut w);
                 }
-                let nb = dnrm2(wv);
-                if nb > 0.0 {
-                    dscal(1.0 / nb, wv);
+                // full re-orthogonalization, two passes (Kahan: twice is enough)
+                for _pass in 0..2 {
+                    for i in 0..=j {
+                        let proj = ddot(&w, v.col(i));
+                        daxpy(-proj, v.col(i), &mut w);
+                    }
                 }
-                beta[j] = 0.0;
-            } else {
-                dscal(1.0 / bj, &mut w);
-            }
-            v.col_mut(j + 1).copy_from_slice(&w);
-            timer.add("lanczos_recurrence", t0.elapsed());
-            if op.matvecs() >= cfg.max_matvecs {
-                jlast = j + 1;
-                break;
+                let bj = dnrm2(&w);
+                beta[j] = bj;
+                if bj < f64::EPSILON * alpha[j].abs().max(1.0) {
+                    // invariant subspace found: restart the residual randomly
+                    let wv = &mut w;
+                    rng.fill_normal(wv);
+                    for i in 0..=j {
+                        let proj = ddot(wv, v.col(i));
+                        daxpy(-proj, v.col(i), wv);
+                    }
+                    let nb = dnrm2(wv);
+                    if nb > 0.0 {
+                        dscal(1.0 / nb, wv);
+                    }
+                    beta[j] = 0.0;
+                } else {
+                    dscal(1.0 / bj, &mut w);
+                }
+                v.col_mut(j + 1).copy_from_slice(&w);
+                timer.add("lanczos_recurrence", since(t0));
+                if op.matvecs() >= cfg.max_matvecs {
+                    jlast = j + 1;
+                    break;
+                }
             }
         }
         let mcur = jlast.min(m);
 
         // ---- projected eigenproblem (order mcur)
-        let t1 = std::time::Instant::now();
+        let asm_span = crate::obs::span(cfg.span_stages[2]);
+        let t1 = now_ns();
         let mut tm = Matrix::zeros(mcur, mcur);
         for i in 0..k {
             tm[(i, i)] = ritz_kept[i];
@@ -208,12 +223,14 @@ pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> Result<LanczosResul
             // injected stall: pretend nothing converged this cycle
             converged_count = 0;
         }
-        timer.add("ritz_assembly", t1.elapsed());
+        timer.add("ritz_assembly", since(t1));
+        drop(asm_span);
 
         let budget_exhausted = op.matvecs() >= cfg.max_matvecs;
         if converged_count >= s || budget_exhausted {
             // ---- assemble the s wanted Ritz pairs: X = V(:, 0..mcur) Y_s
-            let t2 = std::time::Instant::now();
+            let _asm = crate::obs::span(cfg.span_stages[2]);
+            let t2 = now_ns();
             let mut xs = Matrix::zeros(n, s);
             let mut ys = Matrix::zeros(mcur, s);
             let mut vals = Vec::with_capacity(s);
@@ -238,7 +255,7 @@ pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> Result<LanczosResul
                 xs.as_mut_slice(),
                 n,
             );
-            timer.add("ritz_assembly", t2.elapsed());
+            timer.add("ritz_assembly", since(t2));
             return Ok(LanczosResult {
                 eigenvalues: vals,
                 vectors: xs,
@@ -251,7 +268,8 @@ pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> Result<LanczosResul
         }
 
         // ---- thick restart: retain kr Ritz vectors from the wanted end
-        let t3 = std::time::Instant::now();
+        let _restart = crate::obs::span(cfg.span_stages[1]);
+        let t3 = now_ns();
         restarts += 1;
         let kr = (s + (mcur - s) / 2).min(mcur - 1).max(s.min(mcur - 1));
         let mut ynew = Matrix::zeros(mcur, kr);
@@ -289,7 +307,7 @@ pub fn lanczos_solve(op: &dyn SymOp, cfg: &LanczosConfig) -> Result<LanczosResul
         k = kr;
         ritz_kept = ritz_new;
         beta_c = bc_new;
-        timer.add("lanczos_restart", t3.elapsed());
+        timer.add("lanczos_restart", since(t3));
     }
 }
 

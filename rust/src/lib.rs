@@ -28,6 +28,7 @@ pub mod coordinator;
 pub mod lanczos;
 pub mod lapack;
 pub mod matrix;
+pub mod obs;
 pub mod runtime;
 pub mod sbr;
 pub mod solver;

@@ -45,6 +45,9 @@ fn main() {
             std::process::exit(2);
         }
     }
+    // write the Chrome trace if GSYEIG_TRACE asked for one (std has no
+    // atexit, so every top-level exit path flushes explicitly)
+    gsyeig::obs::flush_env();
 }
 
 fn parse_variant(s: &str) -> Variant {
@@ -278,14 +281,7 @@ fn cmd_serve(args: &Args) {
         }
     }
     let m = coord.metrics();
-    println!(
-        "jobs={} p50={:.2}s p95={:.2}s mean={:.2}s gs1-cache-hits={} matvecs={}",
-        m.jobs_done, m.latency_p50, m.latency_p95, m.latency_mean, m.gs1_cache_hits, m.matvecs_total
-    );
-    println!(
-        "faults: retries={} timeouts={} worker-panics={} failures={} fallbacks={}",
-        m.retries, m.timeouts, m.worker_panics, m.failures, m.fallbacks
-    );
+    print!("{}", coord.metrics_snapshot());
     let mut obj = JsonObject::new();
     obj.num("jobs", m.jobs_done as f64);
     obj.num("latency_p50_s", m.latency_p50);

@@ -1,0 +1,63 @@
+//! The single monotonic clock behind every span and stage timer.
+//!
+//! All observability timestamps are nanosecond offsets from one process-wide
+//! epoch (`Instant` captured on first use).  Two measurements taken on
+//! different threads are therefore directly comparable — the property the
+//! Chrome trace exporter needs to lay spans from the solver thread, the
+//! taskpar workers and the coordinator pool on one shared timeline.
+//! `util::timer::StageTimer` reads this clock too (re-exported there), so
+//! stage rows and trace spans can never drift apart.
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide epoch every timestamp is relative to.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process epoch (monotonic, thread-comparable).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Duration between two [`now_ns`] readings (saturating: never negative).
+pub fn ns_between(start_ns: u64, end_ns: u64) -> Duration {
+    Duration::from_nanos(end_ns.saturating_sub(start_ns))
+}
+
+/// Duration from a [`now_ns`] reading to now.
+pub fn since(start_ns: u64) -> Duration {
+    ns_between(start_ns, now_ns())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_and_shared() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+        // a reading from another thread lands on the same timeline
+        let c = std::thread::spawn(now_ns).join().unwrap();
+        let d = now_ns();
+        assert!(c >= a && d >= c);
+    }
+
+    #[test]
+    fn since_measures_elapsed() {
+        let t0 = now_ns();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(since(t0) >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn ns_between_saturates() {
+        assert_eq!(ns_between(10, 5), Duration::ZERO);
+        assert_eq!(ns_between(5, 15), Duration::from_nanos(10));
+    }
+}

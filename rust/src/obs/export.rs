@@ -1,0 +1,169 @@
+//! Trace exporters: Chrome `trace_event` JSON (loadable in
+//! `about:tracing` / Perfetto), a JSONL event stream for the `bench::json`
+//! BENCH files, and the glue that flushes a `GSYEIG_TRACE=<path>` run.
+//!
+//! Chrome format: complete events (`"ph":"X"`, microsecond `ts`/`dur`)
+//! for spans, thread-scoped instants (`"ph":"i"`, `"s":"t"`) for the
+//! fallback annotations; parent links and span ids ride in `args` so a
+//! script can rebuild the tree exactly.
+
+use std::path::Path;
+
+use crate::bench::json::{hostname, JsonObject, JsonValue};
+use crate::util::parallel;
+
+use super::span::{self, TraceEvent};
+
+/// Version of both trace export shapes (bumped with any field change).
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+fn event_args(e: &TraceEvent) -> JsonObject {
+    let mut args = JsonObject::new();
+    args.num("id", e.id as f64);
+    args.num("parent", e.parent as f64);
+    if let Some(d) = &e.detail {
+        args.str("detail", d);
+    }
+    args
+}
+
+/// Render events as a Chrome `trace_event` JSON document.
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    let mut arr = Vec::with_capacity(events.len());
+    for e in events {
+        let mut o = JsonObject::new();
+        o.str("name", e.name);
+        o.str("ph", if e.instant { "i" } else { "X" });
+        o.num("ts", e.start_ns as f64 / 1000.0);
+        if e.instant {
+            o.str("s", "t"); // thread-scoped instant
+        } else {
+            // about:tracing drops zero-width slices; clamp to 1 ns
+            o.num("dur", e.dur_ns.max(1) as f64 / 1000.0);
+        }
+        o.num("pid", 1.0);
+        o.num("tid", e.tid as f64);
+        o.set("args", JsonValue::Obj(event_args(e)));
+        arr.push(JsonValue::Obj(o));
+    }
+    let mut other = JsonObject::new();
+    other.num("trace_schema_version", TRACE_SCHEMA_VERSION as f64);
+    other.str("hostname", &hostname());
+    other.num("threads", parallel::current_threads() as f64);
+    let mut root = JsonObject::new();
+    root.set("traceEvents", JsonValue::Arr(arr));
+    root.str("displayTimeUnit", "ms");
+    root.set("otherData", JsonValue::Obj(other));
+    root.render()
+}
+
+/// Render events as JSONL: one flat JSON object per line, nanosecond
+/// timestamps — the machine-diffable stream appended to BENCH files.
+pub fn events_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let mut o = JsonObject::new();
+        o.str("name", e.name);
+        o.num("id", e.id as f64);
+        o.num("parent", e.parent as f64);
+        o.num("tid", e.tid as f64);
+        o.num("start_ns", e.start_ns as f64);
+        o.num("dur_ns", e.dur_ns as f64);
+        o.bool("instant", e.instant);
+        if let Some(d) = &e.detail {
+            o.str("detail", d);
+        }
+        out.push_str(&o.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a Chrome trace for `events` at `path`.
+pub fn write_chrome_trace(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace(events) + "\n")
+}
+
+/// Flush the collected trace to wherever the environment asked for it:
+/// `GSYEIG_TRACE=<path>` gets the Chrome trace, and when
+/// `GSYEIG_BENCH_JSON` is also set the same events are appended to
+/// `BENCH_trace.jsonl`.  A no-op when tracing never ran.  Call at process
+/// exit (mains, examples) — there is no `atexit` in std.
+pub fn flush_env() {
+    let Some(path) = span::env_trace_path() else { return };
+    let events = span::snapshot();
+    if let Err(e) = write_chrome_trace(Path::new(&path), &events) {
+        eprintln!("warning: could not write trace {path}: {e}");
+    }
+    crate::bench::json::maybe_append_jsonl("trace", &events_jsonl(&events));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                id: 1,
+                parent: 0,
+                name: "solve",
+                tid: 1,
+                start_ns: 1000,
+                dur_ns: 9000,
+                instant: false,
+                detail: Some("variant=TT n=8 s=2".to_string()),
+            },
+            TraceEvent {
+                id: 2,
+                parent: 1,
+                name: "GS1",
+                tid: 1,
+                start_ns: 1500,
+                dur_ns: 0,
+                instant: false,
+                detail: None,
+            },
+            TraceEvent {
+                id: 3,
+                parent: 2,
+                name: "fallback",
+                tid: 1,
+                start_ns: 1600,
+                dur_ns: 0,
+                instant: true,
+                detail: Some("B not SPD".to_string()),
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let t = chrome_trace(&sample());
+        assert!(t.starts_with("{\"traceEvents\":["));
+        assert!(t.contains(r#""name":"solve""#));
+        assert!(t.contains(r#""ph":"X""#));
+        assert!(t.contains(r#""ph":"i""#), "instants use ph=i");
+        assert!(t.contains(r#""s":"t""#));
+        assert!(t.contains(r#""ts":1"#), "ns → µs");
+        assert!(t.contains(r#""parent":1"#));
+        assert!(t.contains("trace_schema_version"));
+        // zero-duration span clamped to a visible sliver, not dropped
+        assert!(t.contains(r#""dur":0.001"#));
+    }
+
+    #[test]
+    fn jsonl_one_line_per_event() {
+        let l = events_jsonl(&sample());
+        assert_eq!(l.lines().count(), 3);
+        assert!(l.lines().nth(2).unwrap().contains(r#""instant":true"#));
+        assert!(l.lines().all(|ln| ln.starts_with('{') && ln.ends_with('}')));
+    }
+
+    #[test]
+    fn empty_events_still_render() {
+        let t = chrome_trace(&[]);
+        assert!(t.contains("\"traceEvents\":[]"));
+        assert_eq!(events_jsonl(&[]), "");
+    }
+}

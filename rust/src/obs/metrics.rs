@@ -1,0 +1,332 @@
+//! The one metrics registry: named counters, gauges and histograms with
+//! lock-free `AtomicU64` hot paths.
+//!
+//! Every runtime statistic the stack used to scatter across per-struct
+//! fields — `ExecStats` steals/idle waits, coordinator retry/timeout/
+//! fallback counts, fault-injection hits, queue depth — is mirrored here
+//! under stable names, so one [`Registry::render_text`] (or the JSON
+//! export) shows the whole machine.  Handles are `Arc`s: look a metric up
+//! once (`RwLock`-guarded map), then increment forever without locking.
+//!
+//! [`Registry::global`] is the process-wide instance production code
+//! mirrors into; tests that need exact-count isolation construct their own
+//! `Registry` (e.g. via `coordinator::Metrics::with_registry`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Monotonic counter (relaxed `AtomicU64`).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn incr(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time value (queue depth, lanes in use, …).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log2-spaced histogram buckets: bucket 0 holds zeros, bucket
+/// `i ≥ 1` holds values in `[2^(i-1), 2^i - 1]`, the last bucket is open.
+pub const HISTOGRAM_BUCKETS: usize = 64;
+
+/// Fixed-bucket latency histogram, p50/p99-capable, lock-free recording.
+///
+/// Buckets are powers of two, so recording is a `leading_zeros` plus one
+/// relaxed `fetch_add` — cheap enough for per-job latencies at any rate
+/// this stack can generate.  A percentile query returns the upper bound of
+/// the bucket containing that rank (exact to within the 2× bucket width).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HISTOGRAM_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the open last one).
+fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= HISTOGRAM_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Upper bound of the bucket holding the `p`-quantile (`0 < p ≤ 1`),
+    /// e.g. `percentile(0.5)` / `percentile(0.99)`.  0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((count as f64) * p.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for i in 0..HISTOGRAM_BUCKETS {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            if cum >= target {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(HISTOGRAM_BUCKETS - 1)
+    }
+}
+
+/// Named metric registry.  `counter`/`gauge`/`histogram` get-or-register;
+/// maps are `BTreeMap` so every dump is deterministically ordered.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    histograms: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn get_or_insert<T: Default>(
+    map: &RwLock<BTreeMap<String, Arc<T>>>,
+    name: &str,
+) -> Arc<T> {
+    if let Some(v) = map.read().unwrap().get(name) {
+        return Arc::clone(v);
+    }
+    let mut g = map.write().unwrap();
+    Arc::clone(g.entry(name.to_string()).or_default())
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide registry every production mirror writes into.
+    pub fn global() -> &'static Registry {
+        Registry::global_arc_inner()
+    }
+
+    /// The global registry as an `Arc`, for structs that hold a handle.
+    pub fn global_arc() -> Arc<Registry> {
+        Arc::clone(Registry::global_arc_inner())
+    }
+
+    fn global_arc_inner() -> &'static Arc<Registry> {
+        static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(Registry::new()))
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        get_or_insert(&self.counters, name)
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        get_or_insert(&self.gauges, name)
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        get_or_insert(&self.histograms, name)
+    }
+
+    /// Current value of a counter (0 when never registered).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters.read().unwrap().get(name).map(|c| c.get()).unwrap_or(0)
+    }
+
+    /// Current value of a gauge (0 when never registered).
+    pub fn gauge_value(&self, name: &str) -> i64 {
+        self.gauges.read().unwrap().get(name).map(|g| g.get()).unwrap_or(0)
+    }
+
+    /// Human-readable dump, one metric per line, deterministic order.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.read().unwrap().iter() {
+            let _ = writeln!(out, "  counter   {name:<40} {}", c.get());
+        }
+        for (name, g) in self.gauges.read().unwrap().iter() {
+            let _ = writeln!(out, "  gauge     {name:<40} {}", g.get());
+        }
+        for (name, h) in self.histograms.read().unwrap().iter() {
+            let _ = writeln!(
+                out,
+                "  histogram {name:<40} count={} mean={:.0} p50<={} p99<={}",
+                h.count(),
+                h.mean(),
+                h.percentile(0.5),
+                h.percentile(0.99),
+            );
+        }
+        out
+    }
+}
+
+/// Mirror a finished task-graph execution into the global registry
+/// (`taskpar.*` — the `ExecStats` counters the scheduler measured).
+pub fn mirror_exec_stats(tasks: u64, steals: u64, idle_waits: u64) {
+    let reg = Registry::global();
+    reg.counter("taskpar.graphs").incr();
+    reg.counter("taskpar.tasks").add(tasks);
+    reg.counter("taskpar.steals").add(steals);
+    reg.counter("taskpar.idle_waits").add(idle_waits);
+}
+
+/// Mirror a fault-injection hit into the global registry
+/// (`faults.injected.<site-name>`).
+pub fn record_fault_hit(site_name: &str) {
+    Registry::global().counter(&format!("faults.injected.{site_name}")).incr();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("x");
+        c.incr();
+        c.add(4);
+        assert_eq!(r.counter_value("x"), 5);
+        assert_eq!(r.counter_value("missing"), 0);
+        let g = r.gauge("depth");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(r.gauge_value("depth"), 5);
+    }
+
+    #[test]
+    fn same_name_same_handle() {
+        let r = Registry::new();
+        let a = r.counter("shared");
+        let b = r.counter("shared");
+        a.incr();
+        b.incr();
+        assert_eq!(r.counter_value("shared"), 2);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        // value v lands in the bucket whose range [2^(i-1), 2^i - 1]
+        // contains it; zeros get their own bucket
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), HISTOGRAM_BUCKETS - 1);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(10), 1023);
+        assert_eq!(bucket_upper(HISTOGRAM_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_percentiles_on_known_distribution() {
+        // 1..=1000: ranks 500 and 990 fall in buckets [256,511] and
+        // [512,1023] respectively — the quantile bounds are exact
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum(), 500_500);
+        assert_eq!(h.percentile(0.5), 511);
+        assert_eq!(h.percentile(0.99), 1023);
+        assert_eq!(h.percentile(1.0), 1023);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn render_text_is_deterministic() {
+        let r = Registry::new();
+        r.counter("b.second").add(2);
+        r.counter("a.first").add(1);
+        r.gauge("depth").set(3);
+        r.histogram("lat").record(100);
+        let t = r.render_text();
+        let a = t.find("a.first").unwrap();
+        let b = t.find("b.second").unwrap();
+        assert!(a < b, "counters sort by name:\n{t}");
+        assert!(t.contains("gauge"));
+        assert!(t.contains("count=1"));
+    }
+}

@@ -1,0 +1,28 @@
+//! Unified observability: span trees, one metrics registry, trace export.
+//!
+//! Three pieces, one clock:
+//!
+//! * [`clock`] — the process-wide monotonic epoch every timestamp is an
+//!   offset from (shared with `util::timer`, so stage rows and spans agree).
+//! * [`span`] — hierarchical RAII spans opened at every solver stage
+//!   boundary (GS1/GS2, TT1–TT4, TD1–TD3, KE/KI Lanczos stages, BT1, the
+//!   SBR sweeps) and around every coordinator job attempt; one solve yields
+//!   a Table-2-shaped tree.  Zero-duration [`instant`] events annotate it
+//!   with fallback-chain entries.
+//! * [`metrics`] — the global registry of named counters/gauges/histograms
+//!   that `ExecStats`, coordinator `Metrics`, fault-injection hits and
+//!   queue depth mirror into.
+//! * [`export`] — Chrome `trace_event` JSON (`about:tracing`/Perfetto),
+//!   JSONL for BENCH files, and the `GSYEIG_TRACE` flush.
+//!
+//! Everything is off by default and dead-cheap when off (one `Once` fast
+//! path + one relaxed load per span check, no allocation).
+
+pub mod clock;
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use export::flush_env;
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use span::{enabled, instant, span, span_detail, SpanGuard, TraceEvent};

@@ -1,0 +1,249 @@
+//! Hierarchical spans: the Table-2-shaped trace of a solve.
+//!
+//! A span is an RAII guard opened at a stage boundary (`obs::span("GS1")`)
+//! and closed on drop; nesting on a thread is tracked with a thread-local
+//! stack, so one solve yields a tree — solve → attempt → GS1/GS2/TT1/… —
+//! with parent links and start/stop timestamps on the shared
+//! [`super::clock`].  Zero-duration [`instant`] events annotate the tree
+//! with fallback-chain entries (boost retry, TT re-route) inline with the
+//! stage that re-ran.
+//!
+//! **Off by default, dead-cheap when off**: the enabled check is one
+//! `Once` fast path plus one relaxed atomic load; nothing allocates and
+//! the global collector is never even initialized.  Enable with
+//! `GSYEIG_TRACE=<path>` (checked once, lazily), `SolverConfig::trace`, or
+//! [`enable`] directly; export with [`super::export`].
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+use super::clock;
+
+/// One recorded event: a completed span or an instant annotation.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Unique event id (1-based; 0 is reserved for "no parent").
+    pub id: u64,
+    /// Id of the enclosing span on the same thread (0 = root).
+    pub parent: u64,
+    pub name: &'static str,
+    /// Small dense thread id assigned on first use (not the OS tid).
+    pub tid: u64,
+    /// Start offset on the shared clock ([`clock::now_ns`]).
+    pub start_ns: u64,
+    /// Duration; 0 for instants.
+    pub dur_ns: u64,
+    /// True for zero-duration annotation events.
+    pub instant: bool,
+    /// Free-form detail (variant, shift, fault description, …).
+    pub detail: Option<String>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+static EVENTS: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The `GSYEIG_TRACE` path, read once per process (empty / `0` = unset).
+pub fn env_trace_path() -> Option<String> {
+    static PATH: OnceLock<Option<String>> = OnceLock::new();
+    PATH.get_or_init(|| {
+        std::env::var("GSYEIG_TRACE").ok().filter(|v| !v.is_empty() && v != "0")
+    })
+    .clone()
+}
+
+/// Whether tracing is on.  First call checks `GSYEIG_TRACE` once; after
+/// that this is a single relaxed atomic load.
+pub fn enabled() -> bool {
+    ENV_INIT.call_once(|| {
+        if env_trace_path().is_some() {
+            enable();
+        }
+    });
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the collector on (idempotent).
+pub fn enable() {
+    EVENTS.get_or_init(|| Mutex::new(Vec::new()));
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn the collector off.  Already-open spans still record on drop;
+/// collected events are retained until [`drain`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+fn tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            v
+        } else {
+            let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            t.set(v);
+            v
+        }
+    })
+}
+
+fn record(ev: TraceEvent) {
+    if let Some(m) = EVENTS.get() {
+        m.lock().unwrap().push(ev);
+    }
+}
+
+/// Copy of everything collected so far (empty when tracing never ran).
+pub fn snapshot() -> Vec<TraceEvent> {
+    EVENTS.get().map(|m| m.lock().unwrap().clone()).unwrap_or_default()
+}
+
+/// Take and clear the collected events.
+pub fn drain() -> Vec<TraceEvent> {
+    EVENTS.get().map(|m| std::mem::take(&mut *m.lock().unwrap())).unwrap_or_default()
+}
+
+struct ActiveSpan {
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    tid: u64,
+    start_ns: u64,
+    detail: Option<String>,
+}
+
+/// RAII span guard: records a [`TraceEvent`] when dropped.  A no-op (no
+/// allocation, no lock) while tracing is disabled.
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(a) = self.active.take() else { return };
+        let end = clock::now_ns();
+        STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            // RAII guarantees LIFO per thread; the retain is defensive
+            if s.last() == Some(&a.id) {
+                s.pop();
+            } else {
+                s.retain(|&x| x != a.id);
+            }
+        });
+        record(TraceEvent {
+            id: a.id,
+            parent: a.parent,
+            name: a.name,
+            tid: a.tid,
+            start_ns: a.start_ns,
+            dur_ns: end.saturating_sub(a.start_ns),
+            instant: false,
+            detail: a.detail,
+        });
+    }
+}
+
+fn open(name: &'static str, detail: Option<String>) -> SpanGuard {
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let p = s.last().copied().unwrap_or(0);
+        s.push(id);
+        p
+    });
+    SpanGuard {
+        active: Some(ActiveSpan { id, parent, name, tid: tid(), start_ns: clock::now_ns(), detail }),
+    }
+}
+
+/// Open a span named after a stage boundary; closes (and records) on drop.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: None };
+    }
+    open(name, None)
+}
+
+/// [`span`] with a lazily built detail string (only evaluated when tracing
+/// is on, so hot paths pay nothing for the formatting).
+pub fn span_detail(name: &'static str, detail: impl FnOnce() -> String) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: None };
+    }
+    open(name, Some(detail()))
+}
+
+/// Record a zero-duration annotation event under the current span — the
+/// fallback-chain entries of `SolveReport` land in the trace through this.
+pub fn instant(name: &'static str, detail: impl FnOnce() -> String) {
+    if !enabled() {
+        return;
+    }
+    let parent = STACK.with(|s| s.borrow().last().copied().unwrap_or(0));
+    record(TraceEvent {
+        id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        parent,
+        name,
+        tid: tid(),
+        start_ns: clock::now_ns(),
+        dur_ns: 0,
+        instant: true,
+        detail: Some(detail()),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests share the process-global collector with the rest of the
+    // lib test binary, so every assertion filters by names unique to this
+    // module — concurrent tests can only *add* unrelated events.
+
+    #[test]
+    fn spans_nest_with_parent_links() {
+        enable();
+        {
+            let _outer = span("obs-unit-outer");
+            let _inner = span("obs-unit-inner");
+            instant("obs-unit-note", || "hello".to_string());
+        }
+        let evs = snapshot();
+        let outer = evs.iter().find(|e| e.name == "obs-unit-outer").expect("outer");
+        let inner = evs.iter().find(|e| e.name == "obs-unit-inner").expect("inner");
+        let note = evs.iter().find(|e| e.name == "obs-unit-note").expect("note");
+        assert_eq!(inner.parent, outer.id);
+        assert_eq!(note.parent, inner.id, "instant anchors to the innermost span");
+        assert!(note.instant && note.dur_ns == 0);
+        assert_eq!(note.detail.as_deref(), Some("hello"));
+        assert!(outer.dur_ns >= inner.dur_ns);
+        assert!(outer.start_ns <= inner.start_ns);
+        assert_eq!(outer.tid, inner.tid);
+    }
+
+    #[test]
+    fn sibling_threads_get_distinct_tids() {
+        enable();
+        let h = std::thread::spawn(|| {
+            let _s = span("obs-unit-thread-b");
+        });
+        let _s = span("obs-unit-thread-a");
+        drop(_s);
+        h.join().unwrap();
+        let evs = snapshot();
+        let a = evs.iter().find(|e| e.name == "obs-unit-thread-a").unwrap();
+        let b = evs.iter().find(|e| e.name == "obs-unit-thread-b").unwrap();
+        assert_ne!(a.tid, b.tid);
+        assert_eq!(b.parent, 0, "a span on a fresh thread is a root");
+    }
+}

@@ -347,6 +347,7 @@ pub fn sbrdt_ctx(
 ) -> (SymTridiag, usize) {
     let n = a.rows();
     assert_eq!(n, a.cols());
+    let _span = crate::obs::span_detail("sbrdt", || format!("n={n} w={w}"));
     let threads = ctx.threads();
     let mut nrot = 0usize;
 
@@ -355,12 +356,16 @@ pub fn sbrdt_ctx(
         let sweeps = n.saturating_sub(b);
         let wavefront =
             threads > 1 && n >= WAVEFRONT_MIN_N && sweeps >= WAVEFRONT_MIN_SWEEPS;
+        let _diag = crate::obs::span_detail("sbrdt.diagonal", || {
+            format!("b={b} wavefront={wavefront}")
+        });
         nrot += if wavefront {
             chase_wavefront(a, b, q.as_deref_mut(), threads)
         } else {
             chase_serial(a, b, q.as_deref_mut())
         };
     }
+    crate::obs::metrics::Registry::global().counter("sbr.sbrdt.rotations").add(nrot as u64);
 
     // extract the tridiagonal
     let mut t = SymTridiag::zeros(n);

@@ -39,15 +39,18 @@ pub fn syrdb_ctx(a: &mut Matrix, w: usize, q1: Option<&mut Matrix>, ctx: &ExecCt
 pub fn syrdb(a: &mut Matrix, w: usize, mut q1: Option<&mut Matrix>) {
     let n = a.rows();
     assert_eq!(n, a.cols());
+    let _span = crate::obs::span_detail("syrdb", || format!("n={n} w={w}"));
     // invariant: the TT pipeline clamps w into [1, n-2] before calling
     debug_assert!(w >= 1 && w < n.max(2));
     if let Some(q) = &q1 {
         assert_eq!((q.rows(), q.cols()), (n, n));
     }
     let lda = n;
+    let panels = crate::obs::metrics::Registry::global().counter("sbr.syrdb.panels");
 
     let mut j = 0usize;
     while j + w + 1 < n {
+        panels.incr();
         let m = n - j - w; // rows below the band in this panel
         let k = w.min(m); // reflectors in this panel
         // ---- QR of the sub-band block A[j+w .. n, j .. j+k]

@@ -1,5 +1,7 @@
 //! Top-level GSYEIG solver API.
 
+use std::path::PathBuf;
+
 use crate::lanczos::thick_restart::Want;
 use crate::matrix::Matrix;
 use crate::util::faults::{FaultPlan, FaultSite};
@@ -82,6 +84,10 @@ pub struct SolverConfig {
     /// default; the test harness arms specific sites to exercise the
     /// fallback chains.
     pub faults: FaultPlan,
+    /// Write a Chrome `trace_event` span tree of the solve to this path
+    /// (DESIGN.md §8).  `None` (default) leaves tracing off unless
+    /// `GSYEIG_TRACE` is set in the environment.
+    pub trace: Option<PathBuf>,
 }
 
 impl SolverConfig {
@@ -98,6 +104,7 @@ impl SolverConfig {
             seed: 0xEE6_1A9,
             exec: ExecCtx::global(),
             faults: FaultPlan::disarmed(),
+            trace: None,
         }
     }
 }
@@ -213,10 +220,26 @@ impl<K: Kernels> GsyeigSolver<K> {
             });
         }
         checkpoint(&self.config.exec, "GS1")?;
-        if n == 1 {
-            return self.solve_1x1(&problem);
+        if self.config.trace.is_some() {
+            crate::obs::span::enable();
         }
-        self.config.exec.install(|| self.solve_with_fallbacks(problem))
+        let result = {
+            let _root = crate::obs::span_detail("solve", || {
+                format!("variant={} n={n} s={s}", self.config.variant.name())
+            });
+            if n == 1 {
+                self.solve_1x1(&problem)
+            } else {
+                self.config.exec.install(|| self.solve_with_fallbacks(problem))
+            }
+        };
+        if let Some(path) = &self.config.trace {
+            let events = crate::obs::span::snapshot();
+            if let Err(e) = crate::obs::export::write_chrome_trace(path, &events) {
+                eprintln!("warning: could not write trace {}: {e}", path.display());
+            }
+        }
+        result
     }
 
     /// Degenerate n = 1 pencil: λ = a/b, x = 1/√b — no factorizations.
@@ -267,6 +290,9 @@ impl<K: Kernels> GsyeigSolver<K> {
             if report.route.last() != Some(&variant.name()) {
                 report.route.push(variant.name());
             }
+            let _attempt_span = crate::obs::span_detail("attempt", || {
+                format!("variant={} shift={shift:.3e}", variant.name())
+            });
             let mut attempt = problem.clone();
             if shift > 0.0 {
                 for i in 0..n {
@@ -277,8 +303,15 @@ impl<K: Kernels> GsyeigSolver<K> {
                 Ok(mut sol) => {
                     let krylov = matches!(variant, Variant::KE | Variant::KI);
                     if krylov && !sol.converged && !krylov_rerouted {
+                        let stage = if variant == Variant::KE { "KE2" } else { "KI4" };
+                        crate::obs::instant("fallback", || {
+                            format!(
+                                "{stage}: Lanczos not converged after {} matvecs -> re-solve via TT route",
+                                sol.matvecs
+                            )
+                        });
                         report.events.push(FallbackEvent {
-                            stage: if variant == Variant::KE { "KE2" } else { "KI4" },
+                            stage,
                             fault: format!(
                                 "Lanczos not converged after {} matvecs",
                                 sol.matvecs
@@ -301,6 +334,11 @@ impl<K: Kernels> GsyeigSolver<K> {
                 Err(SolverError::NotSpd { minor }) if next_boost < boosts.len() => {
                     shift = boosts[next_boost];
                     next_boost += 1;
+                    crate::obs::instant("fallback", || {
+                        format!(
+                            "GS1: B not positive definite (minor {minor}) -> retry Cholesky with diagonal boost {shift:.3e}"
+                        )
+                    });
                     report.events.push(FallbackEvent {
                         stage: "GS1",
                         fault: format!("B not positive definite (minor {minor})"),
@@ -310,8 +348,12 @@ impl<K: Kernels> GsyeigSolver<K> {
                 Err(
                     e @ (SolverError::NoConvergence { .. } | SolverError::Breakdown { .. }),
                 ) if matches!(variant, Variant::KE | Variant::KI) && !krylov_rerouted => {
+                    let stage = if variant == Variant::KE { "KE2" } else { "KI4" };
+                    crate::obs::instant("fallback", || {
+                        format!("{stage}: {e} -> re-solve via TT route")
+                    });
                     report.events.push(FallbackEvent {
-                        stage: if variant == Variant::KE { "KE2" } else { "KI4" },
+                        stage,
                         fault: e.to_string(),
                         action: "re-solve via TT route",
                     });

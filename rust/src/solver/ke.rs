@@ -18,6 +18,7 @@ pub fn solve<K: Kernels>(
     kernels: &K,
     problem: Problem,
 ) -> Result<Solution, SolverError> {
+    let _variant = crate::obs::span("KE");
     let mut timer = StageTimer::new();
     let Problem { a, b } = problem;
 
@@ -37,6 +38,9 @@ pub fn solve<K: Kernels>(
     lcfg.max_matvecs = cfg.max_matvecs;
     lcfg.seed = cfg.seed;
     lcfg.faults = cfg.faults.clone();
+    // Trace span names: operator = KE1, recurrence/restart = KE2,
+    // Ritz assembly = KE3 (Table 2 rows; KE1 nests inside KE2).
+    lcfg.span_stages = ["KE1", "KE2", "KE3"];
     let res = lanczos_solve(op.as_ref(), &lcfg)?;
     // stage bookkeeping: the operator time is KE1; the recurrence and
     // restarts are KE2 (ARPACK DSAUPD); the Ritz assembly is KE3 (DSEUPD).

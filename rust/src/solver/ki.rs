@@ -22,6 +22,7 @@ pub fn solve<K: Kernels>(
     kernels: &K,
     problem: Problem,
 ) -> Result<Solution, SolverError> {
+    let _variant = crate::obs::span("KI");
     let mut timer = StageTimer::new();
     let mut report = SolveReport::default();
     let Problem { a, b } = problem;
@@ -38,6 +39,12 @@ pub fn solve<K: Kernels>(
     let op: Box<dyn SymOp + '_> = match (refused, kernels.implicit_op(&a, &u)) {
         (false, Some(op)) => op,
         (true, _) | (false, None) => {
+            crate::obs::instant("fallback", || {
+                format!(
+                    "KI1: {} -> native implicit operator",
+                    if refused { "injected offload refusal" } else { "backend refused" }
+                )
+            });
             report.events.push(FallbackEvent {
                 stage: "KI1",
                 fault: if refused {
@@ -57,6 +64,9 @@ pub fn solve<K: Kernels>(
     lcfg.max_matvecs = cfg.max_matvecs;
     lcfg.seed = cfg.seed;
     lcfg.faults = cfg.faults.clone();
+    // Trace span names: one operator application covers KI1+KI2+KI3 (the
+    // exact split stays in the StageTimer); recurrence = KI4, assembly = KI5.
+    lcfg.span_stages = ["KI123", "KI4", "KI5"];
     // The iteration already runs under the job's ExecCtx — solve()
     // installed cfg.exec around the whole variant dispatch — so the
     // restart GEMMs split panels across its budget, and with the offload

@@ -25,6 +25,7 @@ pub fn solve<K: Kernels>(
     kernels: &K,
     problem: Problem,
 ) -> Result<Solution, SolverError> {
+    let _variant = crate::obs::span("TD");
     let n = problem.n();
     let s = cfg.s;
     let mut timer = StageTimer::new();

@@ -25,6 +25,7 @@ pub fn solve<K: Kernels>(
     kernels: &K,
     problem: Problem,
 ) -> Result<Solution, SolverError> {
+    let _variant = crate::obs::span("TT");
     let n = problem.n();
     let s = cfg.s;
     let w = cfg.bandwidth.clamp(1, n.saturating_sub(2).max(1));

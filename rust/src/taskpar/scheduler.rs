@@ -152,14 +152,16 @@ pub fn run_graph_ctx(graph: TaskGraph, workers: usize, ctx: &ExecCtx) -> ExecSta
             });
         }
     });
-    ExecStats {
+    let stats = ExecStats {
         workers,
         max_ready_depth: shared.max_depth.load(Ordering::SeqCst),
         wall_seconds: t0.elapsed().as_secs_f64(),
         busy_seconds: shared.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
         steals: shared.steals.load(Ordering::Relaxed),
         idle_waits: shared.idle_waits.load(Ordering::Relaxed),
-    }
+    };
+    crate::obs::metrics::mirror_exec_stats(total as u64, stats.steals, stats.idle_waits);
+    stats
 }
 
 fn worker_loop(

@@ -141,6 +141,7 @@ impl FaultPlan {
             .is_ok();
         if hit {
             inner.fired[site.index()].fetch_add(1, Ordering::SeqCst);
+            crate::obs::metrics::record_fault_hit(site.name());
         }
         hit
     }

@@ -1,8 +1,16 @@
 //! Stage timing: the per-stage wall-clock accounting behind every table in
 //! the paper (GS1, GS2, TD1–TD3, TT1–TT4, KE1–KE3, KI1–KI5, BT1).
+//!
+//! All measurements read the shared monotonic clock in [`crate::obs::clock`]
+//! (re-exported below), so stage rows and trace spans sit on one timeline
+//! and are directly comparable across threads.
 
 use std::collections::BTreeMap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+/// The span clock: every `StageTimer` measurement is an offset on this
+/// process-wide monotonic epoch, shared with `obs` spans.
+pub use crate::obs::clock::{epoch, now_ns, since};
 
 /// Accumulates named stage durations; stages may be entered repeatedly
 /// (e.g. KE1 once per Lanczos iteration) and their durations add up, exactly
@@ -18,11 +26,13 @@ impl StageTimer {
         Self::default()
     }
 
-    /// Time `f` under stage `name`.
+    /// Time `f` under stage `name`, opening an `obs` span of the same name
+    /// so the stage lands in the trace tree with identical bounds.
     pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
-        let t0 = Instant::now();
+        let _span = crate::obs::span(name);
+        let t0 = now_ns();
         let out = f();
-        self.add(name, t0.elapsed());
+        self.add(name, since(t0));
         out
     }
 

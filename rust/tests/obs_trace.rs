@@ -1,0 +1,226 @@
+//! Observability integration tests (DESIGN.md §8): the span tree of a
+//! traced solve has the Table-2 shape, the metrics registry mirrors are
+//! exact, and the concurrent primitives are deterministic.
+//!
+//! Everything here *enables* the process-global trace collector, so these
+//! tests live in their own binary (the zero-events-when-disabled assertion
+//! is `obs_disabled.rs`).  Tests inside this binary run concurrently and
+//! share the collector + global registry, so every assertion either uses a
+//! fresh local [`Registry`], a metric name no other test touches, or a
+//! span detail with a unique discriminator (n = 83, job id 7781).
+
+use std::sync::Arc;
+
+use gsyeig::coordinator::{Coordinator, CoordinatorConfig, Job, JobSpec, WorkloadSpec};
+use gsyeig::obs::{span, Histogram, Registry, TraceEvent};
+use gsyeig::solver::gsyeig::{GsyeigSolver, Problem, SolverConfig, Variant, Which};
+use gsyeig::taskpar::{run_graph, TaskGraph};
+use gsyeig::util::faults::{FaultPlan, FaultSite};
+use gsyeig::workloads::spectra::generate_problem;
+
+fn test_problem(n: usize, seed: u64) -> Problem {
+    let lams: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+    let (p, _) = generate_problem(n, &lams, 20.0, seed);
+    p
+}
+
+/// Walk parent links to decide whether `anc` encloses `ev` (spans from the
+/// variant layer — "TT", "KE" — may sit between a stage and its attempt).
+fn has_ancestor(events: &[TraceEvent], ev: &TraceEvent, anc: u64) -> bool {
+    let mut cur = ev.parent;
+    while cur != 0 {
+        if cur == anc {
+            return true;
+        }
+        match events.iter().find(|e| e.id == cur) {
+            Some(p) => cur = p.parent,
+            None => return false,
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent primitives: deterministic totals at 1/2/8 threads.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_counter_totals_are_exact() {
+    const PER_THREAD: u64 = 10_000;
+    for threads in [1usize, 2, 8] {
+        let reg = Registry::new(); // local: exact counts, no sharing
+        let c = reg.counter("test.hits");
+        let h = reg.histogram("test.lat");
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let c = Arc::clone(&c);
+                let h = Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        c.incr();
+                        h.record(t as u64 * PER_THREAD + i);
+                    }
+                });
+            }
+        });
+        let expect = threads as u64 * PER_THREAD;
+        assert_eq!(reg.counter_value("test.hits"), expect, "{threads} threads");
+        assert_eq!(h.count(), expect, "{threads} threads");
+    }
+}
+
+#[test]
+fn histogram_percentiles_on_known_distribution() {
+    // 1..=1000 uniformly: rank 500 lands in the [256, 511] bucket, rank
+    // 990 in [512, 1023] — the log2 quantile bounds are exactly known
+    let h = Histogram::new();
+    for v in 1..=1000u64 {
+        h.record(v);
+    }
+    assert_eq!(h.count(), 1000);
+    assert_eq!(h.sum(), 500_500);
+    assert_eq!(h.percentile(0.5), 511);
+    assert_eq!(h.percentile(0.99), 1023);
+    assert!((h.mean() - 500.5).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// Registry mirrors: fault hits and task-graph stats land under their names.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_injection_hits_are_mirrored_exactly() {
+    // no other test in this binary arms ProjectedNoConv, so the global
+    // counter delta must match the plan's own fired() count exactly
+    let reg = Registry::global();
+    let name = "faults.injected.projected-no-convergence";
+    let before = reg.counter_value(name);
+
+    let plan = FaultPlan::seeded(0x0B5).inject(FaultSite::ProjectedNoConv, 1);
+    let mut cfg = SolverConfig::new(Variant::KE, 3, Which::Smallest);
+    cfg.faults = plan.clone(); // Arc-backed: the clone sees the fires
+    let sol = GsyeigSolver::native(cfg).solve(test_problem(48, 0x0B5));
+    assert!(sol.converged, "injected fault must be recovered");
+
+    assert_eq!(plan.fired(FaultSite::ProjectedNoConv), 1);
+    assert_eq!(reg.counter_value(name) - before, 1, "registry mirrors the hit");
+}
+
+#[test]
+fn taskpar_stats_are_mirrored() {
+    // other tests in this binary also run graphs (SBR inside solves), so
+    // the global deltas are lower-bounded, not exact
+    let reg = Registry::global();
+    let graphs0 = reg.counter_value("taskpar.graphs");
+    let tasks0 = reg.counter_value("taskpar.tasks");
+
+    let mut g = TaskGraph::new();
+    for k in 0..12usize {
+        g.add(format!("t{k}"), &[], &[k], move || {});
+    }
+    run_graph(g, 2);
+
+    assert!(reg.counter_value("taskpar.graphs") - graphs0 >= 1);
+    assert!(reg.counter_value("taskpar.tasks") - tasks0 >= 12);
+}
+
+// ---------------------------------------------------------------------------
+// The tentpole: a traced solve yields the Table-2-shaped span tree.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traced_tt_solve_yields_table2_span_tree() {
+    let path = std::env::temp_dir().join(format!("gsyeig-obs-{}.json", std::process::id()));
+    let mut cfg = SolverConfig::new(Variant::TT, 4, Which::Smallest);
+    cfg.trace = Some(path.clone()); // enables the collector + writes the file
+    let sol = GsyeigSolver::native(cfg).solve(test_problem(83, 7));
+    assert!(sol.converged);
+
+    let events = span::snapshot();
+    // n = 83 is unique to this test: find *our* solve root among whatever
+    // the sibling tests traced
+    let root = events
+        .iter()
+        .find(|e| e.name == "solve" && e.detail.as_deref().is_some_and(|d| d.contains("n=83")))
+        .expect("root solve span");
+    let attempt = events
+        .iter()
+        .find(|e| e.name == "attempt" && e.parent == root.id)
+        .expect("attempt span under the solve root");
+    assert!(attempt.detail.as_deref().unwrap().contains("variant=TT"));
+
+    // every Table-2 stage of the TT route appears, enclosed by the attempt
+    for stage in ["GS1", "GS2", "TT1", "TT2", "TT3", "TT4", "BT1"] {
+        let ev = events
+            .iter()
+            .find(|e| e.name == stage && has_ancestor(&events, e, attempt.id))
+            .unwrap_or_else(|| panic!("stage {stage} missing from the span tree"));
+        assert!(!ev.instant);
+        assert!(ev.start_ns >= root.start_ns);
+    }
+    // the SBR sweeps trace too, under the same attempt
+    for sweep in ["syrdb", "sbrdt"] {
+        assert!(
+            events.iter().any(|e| e.name == sweep && has_ancestor(&events, e, attempt.id)),
+            "{sweep} span missing"
+        );
+    }
+
+    // the Chrome trace file written via SolverConfig::trace parses by shape
+    let json = std::fs::read_to_string(&path).expect("trace file written");
+    assert!(json.starts_with('{'));
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("\"name\":\"TT1\""));
+    assert!(json.contains("\"trace_schema_version\""));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fallback_events_appear_as_instants() {
+    span::enable();
+    let plan = FaultPlan::seeded(0xFA1).inject(FaultSite::Gs1NotSpd, 1);
+    let mut cfg = SolverConfig::new(Variant::TT, 2, Which::Smallest);
+    cfg.faults = plan;
+    let sol = GsyeigSolver::native(cfg).solve(test_problem(40, 0xFA1));
+    assert!(sol.converged);
+    assert!(!sol.report.events.is_empty(), "boost retry must be recorded");
+
+    let events = span::snapshot();
+    let fb = events
+        .iter()
+        .find(|e| {
+            e.name == "fallback"
+                && e.detail.as_deref().is_some_and(|d| d.contains("not positive definite"))
+        })
+        .expect("fallback instant for the NotSpd boost retry");
+    assert!(fb.instant);
+    assert_eq!(fb.dur_ns, 0);
+    assert_ne!(fb.parent, 0, "the instant anchors inside the solve tree");
+}
+
+#[test]
+fn coordinator_jobs_open_attempt_spans() {
+    span::enable();
+    let coord = Coordinator::new(CoordinatorConfig { workers: 2, ..Default::default() });
+    let p = test_problem(36, 0x7781);
+    let spec =
+        JobSpec::new(WorkloadSpec::Inline { a: p.a, b: p.b, which: Which::Smallest }, 2);
+    coord.submit(Job { id: 7781, spec }).ok().unwrap();
+    coord.close();
+    let out = coord.run_to_completion();
+    assert_eq!(out.len(), 1);
+
+    let events = span::snapshot();
+    let job = events
+        .iter()
+        .find(|e| {
+            e.name == "job.attempt" && e.detail.as_deref().is_some_and(|d| d.contains("job=7781"))
+        })
+        .expect("job.attempt span for job 7781");
+    assert!(!job.instant);
+    // the solve the worker ran nests under the job attempt
+    assert!(
+        events.iter().any(|e| e.name == "solve" && has_ancestor(&events, e, job.id)),
+        "worker solve must nest under job.attempt"
+    );
+}
