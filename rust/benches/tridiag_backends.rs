@@ -1,0 +1,14 @@
+//! Tridiagonal-kernel shoot-out (DESIGN.md §9): TD2 stage time and
+//! generalized-problem accuracy of the three backends (steqr, bisect,
+//! mrrr) on the MD and DFT workloads.  Set `GSYEIG_BENCH_JSON` to also
+//! emit `BENCH_tridiag_<backend>.json` (schema v2).
+use gsyeig::bench::{run_tridiag_backend_table, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    println!("{}", run_tridiag_backend_table(&scale));
+    println!(
+        "expected shape: steqr pays the full-spectrum QR cost regardless of s; bisect and mrrr \
+         scale with the subset; mrrr pulls ahead once the subset is large and well separated."
+    );
+}

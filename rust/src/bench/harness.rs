@@ -299,6 +299,68 @@ pub fn run_accuracy_table(stage: &StageTable, title: &str) -> String {
     t.render()
 }
 
+/// Tridiagonal-backend shoot-out (ISSUE 8 / DESIGN.md §9): the TD route on
+/// the MD and DFT workloads with each of the three TD2 kernels, reporting
+/// the TD2 stage time, the end-to-end time, and the generalized-problem
+/// accuracy.  Emits `BENCH_tridiag_<backend>.json` (schema v2) per kernel
+/// when `GSYEIG_BENCH_JSON` is set.
+pub fn run_tridiag_backend_table(scale: &ExperimentScale) -> String {
+    use super::json::{maybe_emit, JsonObject, JsonValue};
+    use crate::lapack::TridiagKernel;
+
+    let kinds = [ExperimentKind::Md, ExperimentKind::Dft];
+    let mut t = Table::new(
+        "Table 3 analog — tridiagonal kernels (TD route)",
+        &["Experiment", "kernel", "TD2 s", "total s", "residual", "orth", "fallbacks"],
+    );
+    let mut per_kernel: BTreeMap<&'static str, JsonObject> = BTreeMap::new();
+    for kernel in TridiagKernel::ALL {
+        let mut obj = JsonObject::new();
+        obj.str("tridiag_kernel", kernel.name());
+        for kind in kinds {
+            let (problem, which, s) = scale.problem(kind);
+            let a0 = problem.a.clone();
+            let b0 = problem.b.clone();
+            let mut cfg = SolverConfig::new(Variant::TD, s, which);
+            cfg.tridiag = kernel;
+            let sol = GsyeigSolver::native(cfg).solve(problem);
+            let td2 = sol.stages.get("TD2").map_or(0.0, |d| d.as_secs_f64());
+            let acc = Accuracy::measure(&a0, &b0, &sol.eigenvalues, &sol.x);
+            t.row(vec![
+                kind.label().to_string(),
+                kernel.name().to_string(),
+                format!("{td2:.4}"),
+                format!("{:.3}", sol.total_seconds()),
+                Table::sci(acc.residual),
+                Table::sci(acc.orthogonality),
+                sol.report.tridiag_fallbacks.to_string(),
+            ]);
+            let kname = match kind {
+                ExperimentKind::Md => "md",
+                ExperimentKind::Dft => "dft",
+            };
+            let mut row = JsonObject::new();
+            row.num("td2_seconds", td2);
+            row.num("total_seconds", sol.total_seconds());
+            row.num("residual", acc.residual);
+            row.num("orthogonality", acc.orthogonality);
+            row.num("tridiag_fallbacks", sol.report.tridiag_fallbacks as f64);
+            obj.set(kname, JsonValue::Obj(row));
+        }
+        per_kernel.insert(kernel.name(), obj);
+    }
+    for (name, obj) in &per_kernel {
+        maybe_emit(&format!("tridiag_{name}"), obj);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "  TD2 = tridiagonal subset stage only; kernels: steqr (QR, full spectrum), bisect \
+         (stebz+stein, the seed path), mrrr (MR3 task tree).\n  fallbacks > 0 = the kernel \
+         abandoned the stage and bisect+invit re-solved it (DESIGN.md §9).\n",
+    );
+    out
+}
+
 /// Table 4: GS1/GS2 with the sequential kernels vs the tiled task-parallel
 /// runtime, plus the DAG statistics that quantify available parallelism.
 pub fn run_table4(kind: ExperimentKind, scale: &ExperimentScale, workers: usize, nb: usize) -> String {
@@ -478,6 +540,16 @@ mod tests {
         let t = run_stage_table(ExperimentKind::Dft, &scale, &k, &[Variant::TD, Variant::KE]);
         let acc = run_accuracy_table(&t, "Table 3 analog");
         assert!(acc.contains("E-"), "scientific notation expected: {acc}");
+    }
+
+    #[test]
+    fn tridiag_backend_table_covers_all_kernels() {
+        let scale = ExperimentScale::quick();
+        let out = run_tridiag_backend_table(&scale);
+        for name in ["steqr", "bisect", "mrrr"] {
+            assert!(out.contains(name), "missing kernel row {name}: {out}");
+        }
+        assert!(out.contains("Experiment 1 (MD)") && out.contains("Experiment 2 (DFT)"));
     }
 
     #[test]

@@ -6,5 +6,5 @@ pub mod json;
 
 pub use harness::{
     fig_sweep, run_accuracy_table, run_stage_table, run_table4, run_table4_thread_sweep,
-    ExperimentKind, ExperimentScale, StageTable,
+    run_tridiag_backend_table, ExperimentKind, ExperimentScale, StageTable,
 };

@@ -74,6 +74,9 @@ pub struct JobSpec {
     pub s: usize,
     /// Force a variant; `None` lets the router decide (paper §6 policy).
     pub variant: Option<Variant>,
+    /// Force the TD2/TT3 tridiagonal kernel; `None` keeps the
+    /// `SolverConfig` default (`GSYEIG_TRIDIAG`, else bisect+invit).
+    pub tridiag: Option<crate::lapack::TridiagKernel>,
     /// Key for the Cholesky-factor cache: jobs sharing a B matrix (e.g.
     /// all k-points of one SCF cycle) should share a key.
     pub b_cache_key: Option<u64>,
@@ -98,6 +101,7 @@ impl JobSpec {
             workload,
             s,
             variant: None,
+            tridiag: None,
             b_cache_key: None,
             exec_threads: None,
             deadline: None,

@@ -261,6 +261,9 @@ fn run_attempt(
     let mut cfg = SolverConfig::new(variant, job.spec.s, which);
     cfg.exec = ctx.clone();
     cfg.faults = job.spec.faults.clone();
+    if let Some(kernel) = job.spec.tridiag {
+        cfg.tridiag = kernel;
+    }
     let solver = GsyeigSolver::with_kernels(cfg, kernels);
     let sol = solver.try_solve(problem)?;
     let accuracy = Accuracy::measure(&a0, &b0, &sol.eigenvalues, &sol.x);

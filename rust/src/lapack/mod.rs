@@ -5,12 +5,13 @@
 //! | DPOTRF (GS1)  | [`potrf::dpotrf_upper`] |
 //! | DSYGST/DTRSM (GS2) | [`sygst::sygst_trsm`], [`sygst::dsygst_blocked`] |
 //! | DSYTRD (TD1)  | [`sytrd::dsytrd_lower`] |
-//! | DSTEMR (TD2/TT3, MR³) | [`stebz::dstebz`] + [`stein::dstein`] (subset bisection + inverse iteration — see DESIGN.md substitution #4) |
-//! | DSTEQR/DSTERF | [`steqr::dsteqr`], [`steqr::dsterf`] (full-spectrum QL, used by the Lanczos projected problem and tests) |
+//! | DSTEMR (TD2/TT3, MR³) | [`mrrr::dstemr`] (multiple relatively robust representations, task-tree parallel) or [`stebz::dstebz`] + [`stein::dstein`] (subset bisection + inverse iteration) — selected per solve through [`tridiag::TridiagKernel`]; see DESIGN.md §9 |
+//! | DSTEQR/DSTERF | [`steqr::dsteqr`], [`steqr::dsterf`] (full-spectrum QL, used by the Lanczos projected problem, the `steqr` kernel choice, and tests) |
 //! | DORMTR (TD3/TT4) | [`ormtr::dormtr_lower`] |
 //! | DLARFG/DLARF/DLARFT/DLARFB | [`householder`] (shared by DSYTRD, SBR, QR panels) |
 
 pub mod householder;
+pub mod mrrr;
 pub mod ormtr;
 pub mod potrf;
 pub mod stebz;
@@ -19,14 +20,17 @@ pub mod steqr;
 pub mod sygst;
 pub mod syev;
 pub mod sytrd;
+pub mod tridiag;
 
 pub use householder::{dgeqr2, dlarf_left, dlarfg, dlarft_forward_columnwise};
+pub use mrrr::{dstemr, dstemr_ctx};
 pub use syev::dsyev;
 pub use ormtr::{dorgtr_lower, dormtr_lower};
 pub use potrf::{dpotf2_upper, dpotrf_upper};
 pub use stebz::{dstebz, dstebz_ctx};
 pub use stein::{dstein, dstein_ctx};
 pub use steqr::{dsteqr, dsterf};
+pub use tridiag::{tridiag_eigen_subset, TridiagKernel, TridiagOutcome};
 pub use sygst::{dsygst_blocked, sygst_trsm};
 pub use sytrd::{dsytd2_lower, dsytrd_lower};
 

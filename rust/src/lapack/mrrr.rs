@@ -1,0 +1,1045 @@
+//! MRRR (MR³, "algorithm of multiple relatively robust representations")
+//! tridiagonal eigensolver — the DSTEMR slot of the paper's Table 1 and
+//! ROADMAP direction 1 (EleMRRR, arXiv 1205.2107; mr3smp task model).
+//!
+//! Pipeline (obs spans in parentheses):
+//!
+//! 1. **Root** (`mrrr.root`): split `T` at negligible off-diagonals into
+//!    unreduced blocks; per block, bracket every eigenvalue by Sturm-count
+//!    bisection and build the *root representation* `L D Lᵀ = T − τI` with
+//!    `τ` just below the block's spectrum, so the factorization is positive
+//!    definite — a relatively robust representation (RRR) for all its
+//!    eigenvalues, with no element growth.
+//! 2. **Refine** (`mrrr.refine`): refine every eigenvalue of the root
+//!    representation to full *relative* accuracy by bisection on the
+//!    differential stationary qds (dstqds) negcount — per-index independent
+//!    work, statically split over the [`ExecCtx`] budget, bitwise
+//!    deterministic at any thread count.
+//! 3. **Tree** (`mrrr.tree`): classify eigenvalues by relative gaps.
+//!    Singletons (relative gap ≥ `MINRGP` on both sides) get eigenvectors
+//!    immediately; clusters get a *child representation*
+//!    `L̂ D̂ L̂ᵀ = L D Lᵀ − σI` with `σ` just outside the cluster, which
+//!    multiplies the cluster's internal relative gaps by ~`spdiam/width`,
+//!    and recurse.  Nodes of one tree level are independent, so each level
+//!    runs as tasks on the `taskpar` work-stealing DAG scheduler — the
+//!    mr3smp parallelization — with results collected in node order so the
+//!    output is independent of the execution interleaving.
+//! 4. **Vectors** (`mrrr.vectors`): each singleton eigenvector comes from
+//!    the *twisted factorization* `N_k D_k N_kᵀ = L D Lᵀ − λI` at the twist
+//!    index `k` minimizing `|γ_k|`, solved by `N_k z = γ_k e_k` (two
+//!    triangular sweeps, no inverse iteration, no re-orthogonalization),
+//!    polished by up to [`RQ_ITERS`] Rayleigh-quotient corrections
+//!    `λ ← λ + γ_k/‖z‖²`.
+//!
+//! **Robustness** (DESIGN.md §9): a cluster that refuses to split
+//! (bit-identical eigenvalues), exceeds [`MAX_DEPTH`], or whose child
+//! factorization shows unacceptable element growth falls back *locally* to
+//! bisection + inverse iteration with in-cluster Gram–Schmidt
+//! ([`super::stein`]) on the block — counted in
+//! [`MrrrOutput::cluster_fallbacks`] and the `mrrr.cluster_fallbacks`
+//! metric.  Whole-solve failures (non-finite representations, injected
+//! [`FaultSite::MrrrTree`] faults) surface as
+//! [`LapackError::NoConvergence`]; the solver layer then re-routes the
+//! stage through stebz+stein and records the fallback in `SolveReport`.
+
+use std::sync::{Arc, Mutex};
+
+use crate::matrix::{Matrix, SymTridiag};
+use crate::taskpar::{run_graph_ctx, TaskGraph};
+use crate::util::faults::{FaultPlan, FaultSite};
+use crate::util::parallel::ExecCtx;
+
+use super::stein::dstein_ctx;
+use super::LapackError;
+
+/// Minimum relative gap for an eigenvalue to count as a singleton (LAPACK
+/// DSTEMR's MINRGP class; slightly above the classic 1e-3 to buy
+/// orthogonality margin for the conformance suite's clustered cases).
+const MINRGP: f64 = 3e-3;
+/// Representation-tree depth cap; deeper clusters (bit-identical
+/// eigenvalues never separate under shifts) take the invit fallback.
+const MAX_DEPTH: usize = 40;
+/// A node whose values fail to split at all this many times in a row is
+/// declared degenerate and takes the invit fallback early.
+const MAX_STUCK: u8 = 2;
+/// Element-growth budget for a child representation, relative to the
+/// block's spectral diameter.
+const GROWTH_MAX: f64 = 64.0;
+/// Rayleigh-quotient polishing iterations per twisted vector.
+const RQ_ITERS: usize = 3;
+/// Minimum `n²` before the root bracketing/refinement forks threads
+/// (mirrors `stebz::PAR_MIN_WORK`).
+const PAR_MIN_WORK: usize = 2048;
+/// Minimum tree-level node count before a level is run through the DAG
+/// scheduler instead of inline.
+const PAR_MIN_NODES: usize = 2;
+
+/// Result of a full MRRR run, with the tree statistics the obs metrics and
+/// the bench harness report.
+pub struct MrrrOutput {
+    /// Wanted eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Matching eigenvectors (n × m, orthonormal columns).
+    pub z: Matrix,
+    /// Eigenpairs that went through the per-cluster bisection+invit
+    /// fallback instead of twisted factorization.
+    pub cluster_fallbacks: usize,
+    /// Representation-tree nodes processed.
+    pub nodes: usize,
+    /// Deepest tree level reached.
+    pub max_depth: usize,
+}
+
+/// Eigenvalues `il..=iu` (0-based, ascending) and eigenvectors of `t` via
+/// MRRR under the ambient [`ExecCtx`].
+pub fn dstemr(t: &SymTridiag, il: usize, iu: usize) -> Result<(Vec<f64>, Matrix), LapackError> {
+    dstemr_ctx(t, il, iu, &ExecCtx::current())
+}
+
+/// [`dstemr`] with an explicit execution context.
+pub fn dstemr_ctx(
+    t: &SymTridiag,
+    il: usize,
+    iu: usize,
+    ctx: &ExecCtx,
+) -> Result<(Vec<f64>, Matrix), LapackError> {
+    dstemr_faults(t, il, iu, ctx, &FaultPlan::disarmed()).map(|o| (o.values, o.z))
+}
+
+/// The full engine: explicit context, fault-injection plan, and tree
+/// statistics in the output.
+pub fn dstemr_faults(
+    t: &SymTridiag,
+    il: usize,
+    iu: usize,
+    ctx: &ExecCtx,
+    faults: &FaultPlan,
+) -> Result<MrrrOutput, LapackError> {
+    let n = t.n();
+    if n == 0 {
+        return Err(LapackError::BadArgument("mrrr: empty tridiagonal"));
+    }
+    if il > iu {
+        return Err(LapackError::BadArgument("mrrr: empty index range (il > iu)"));
+    }
+    if iu >= n {
+        return Err(LapackError::BadArgument("mrrr: index range exceeds dimension"));
+    }
+    let m = iu - il + 1;
+
+    // ---- 1. root: split + bracket + root representations ---------------
+    let (blocks, brackets) = {
+        let _sp = crate::obs::span_detail("mrrr.root", || format!("n={n} m={m}"));
+        let blocks = split_blocks(t);
+        let brackets = bracket_all(&blocks, ctx);
+        (blocks, brackets)
+    };
+
+    // Global index selection: sort the bracket midpoints (stable tie-break
+    // on the flat index, so equal values pick deterministically) and map
+    // each wanted flat index to its output column.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let (va, vb) = (mid(brackets[a]), mid(brackets[b]));
+        va.partial_cmp(&vb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut col_of_flat: Vec<Option<usize>> = vec![None; n];
+    for (c, &flat) in order[il..=iu].iter().enumerate() {
+        col_of_flat[flat] = Some(c);
+    }
+
+    // ---- 2. refine: root reps + full-relative-accuracy eigenvalues -----
+    let roots = {
+        let _sp = crate::obs::span("mrrr.refine");
+        build_roots(&blocks, &brackets, &col_of_flat, ctx)?
+    };
+
+    // ---- 3./4. the representation tree --------------------------------
+    let _sp = crate::obs::span("mrrr.tree");
+    if faults.fire(FaultSite::MrrrTree) {
+        return Err(LapackError::NoConvergence(0));
+    }
+    let blocks = Arc::new(blocks);
+    let mut level = roots;
+    let mut pairs: Vec<(usize, f64, usize, Vec<f64>)> = Vec::with_capacity(m);
+    let mut cluster_fallbacks = 0usize;
+    let mut nodes = 0usize;
+    let mut max_depth = 0usize;
+    while !level.is_empty() {
+        nodes += level.len();
+        for nd in &level {
+            max_depth = max_depth.max(nd.depth);
+        }
+        let outcomes = run_level(level, &blocks, ctx);
+        let mut next = Vec::new();
+        for oc in outcomes {
+            let mut oc = oc?;
+            pairs.append(&mut oc.pairs);
+            next.append(&mut oc.children);
+            cluster_fallbacks += oc.cluster_fallbacks;
+        }
+        level = next;
+    }
+
+    // ---- assembly: ascending by value, columns into global coordinates -
+    if pairs.len() != m {
+        return Err(LapackError::NoConvergence(pairs.len()));
+    }
+    pairs.sort_by(|a, b| {
+        a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+    });
+    let mut values = Vec::with_capacity(m);
+    let mut z = Matrix::zeros(n, m);
+    for (j, (_, lam, blk, vec)) in pairs.into_iter().enumerate() {
+        if !lam.is_finite() || vec.iter().any(|v| !v.is_finite()) {
+            return Err(LapackError::NoConvergence(j + 1));
+        }
+        values.push(lam);
+        let off = blocks[blk].offset;
+        z.col_mut(j)[off..off + vec.len()].copy_from_slice(&vec);
+    }
+
+    let reg = crate::obs::metrics::Registry::global();
+    reg.counter("mrrr.nodes").add(nodes as u64);
+    reg.counter("mrrr.vectors").add(m as u64);
+    reg.counter("mrrr.cluster_fallbacks").add(cluster_fallbacks as u64);
+
+    Ok(MrrrOutput { values, z, cluster_fallbacks, nodes, max_depth })
+}
+
+// ---------------------------------------------------------------------
+// blocks + initial bracketing
+// ---------------------------------------------------------------------
+
+struct Block {
+    offset: usize,
+    t: SymTridiag,
+    spdiam: f64,
+    pivmin: f64,
+}
+
+/// Split at off-diagonals negligible relative to their diagonal neighbours
+/// (the DSTEQR deflation criterion): setting such an `e` to zero perturbs
+/// the spectrum by at most the splitting threshold.
+fn split_blocks(t: &SymTridiag) -> Vec<Block> {
+    let n = t.n();
+    let mut blocks = Vec::new();
+    let mut start = 0usize;
+    for i in 0..n.saturating_sub(1) {
+        if t.e[i].abs() <= f64::EPSILON * (t.d[i].abs() + t.d[i + 1].abs()) {
+            blocks.push(make_block(t, start, i + 1));
+            start = i + 1;
+        }
+    }
+    blocks.push(make_block(t, start, n));
+    blocks
+}
+
+fn make_block(t: &SymTridiag, start: usize, end: usize) -> Block {
+    let d = t.d[start..end].to_vec();
+    let e = if end - start > 1 { t.e[start..end - 1].to_vec() } else { Vec::new() };
+    let bt = SymTridiag::new(d, e);
+    let (glo, ghi) = bt.gershgorin();
+    let spdiam = (ghi - glo).max(f64::MIN_POSITIVE);
+    // qds pivot clamp, well below any meaningful pivot at this scale
+    let pivmin = (f64::EPSILON * f64::EPSILON * spdiam).max(f64::MIN_POSITIVE);
+    Block { offset: start, t: bt, spdiam, pivmin }
+}
+
+fn mid(b: (f64, f64)) -> f64 {
+    0.5 * (b.0 + b.1)
+}
+
+/// Sturm-bisection brackets for every eigenvalue of every block, to
+/// moderate (absolute ~`spdiam`·1e-10) accuracy — enough for the global
+/// index selection and the gap structure; the representation-relative
+/// refinement to full precision happens against the root RRR.
+fn bracket_all(blocks: &[Block], ctx: &ExecCtx) -> Vec<(f64, f64)> {
+    let n: usize = blocks.iter().map(|b| b.t.n()).sum();
+    let mut flat_to_block = Vec::with_capacity(n);
+    for (bi, b) in blocks.iter().enumerate() {
+        for j in 0..b.t.n() {
+            flat_to_block.push((bi, j));
+        }
+    }
+    let locate = |flat: usize| -> (f64, f64) {
+        let (bi, j) = flat_to_block[flat];
+        let b = &blocks[bi];
+        let (glo, ghi) = b.t.gershgorin();
+        let pad = f64::EPSILON * (glo.abs().max(ghi.abs()) + b.spdiam).max(1.0);
+        // invariant: sturm_count(lo) <= j < sturm_count(hi)
+        let mut lo = glo - pad;
+        let mut hi = ghi + pad;
+        for _ in 0..60 {
+            let w = 0.5 * (lo + hi);
+            if hi - lo <= 1e-10 * b.spdiam + 2.0 * pad {
+                break;
+            }
+            if b.t.sturm_count(w) > j {
+                hi = w;
+            } else {
+                lo = w;
+            }
+        }
+        (lo, hi)
+    };
+    // same closure either way: bitwise identical at every thread count
+    if n * n < PAR_MIN_WORK {
+        (0..n).map(locate).collect()
+    } else {
+        ctx.parallel_map(n, locate)
+    }
+}
+
+// ---------------------------------------------------------------------
+// representations: factorization, negcount, refinement
+// ---------------------------------------------------------------------
+
+/// Factor `T − τI = L D Lᵀ` directly from the tridiagonal.  Returns the
+/// diagonal `d`, multipliers `l`, and the element growth `max|dᵢ|`.
+fn root_ldl(t: &SymTridiag, tau: f64) -> Option<(Vec<f64>, Vec<f64>, f64)> {
+    let n = t.n();
+    let mut d = vec![0.0; n];
+    let mut l = vec![0.0; n.saturating_sub(1)];
+    d[0] = t.d[0] - tau;
+    let mut growth = d[0].abs();
+    for i in 0..n - 1 {
+        if d[i] == 0.0 || !d[i].is_finite() {
+            return None;
+        }
+        l[i] = t.e[i] / d[i];
+        d[i + 1] = (t.d[i + 1] - tau) - l[i] * t.e[i];
+        growth = growth.max(d[i + 1].abs());
+    }
+    if !d[n - 1].is_finite() || !growth.is_finite() {
+        return None;
+    }
+    Some((d, l, growth))
+}
+
+/// Differential stationary qds with shift: `L D Lᵀ − σI = L̂ D̂ L̂ᵀ`.
+/// Returns `None` on a zero/non-finite pivot (caller tries another shift).
+fn shifted_ldl(d: &[f64], l: &[f64], sigma: f64) -> Option<(Vec<f64>, Vec<f64>, f64)> {
+    let n = d.len();
+    let mut dh = vec![0.0; n];
+    let mut lh = vec![0.0; n.saturating_sub(1)];
+    let mut s = -sigma;
+    let mut growth = 0.0f64;
+    for i in 0..n - 1 {
+        let dp = d[i] + s;
+        if dp == 0.0 || !dp.is_finite() {
+            return None;
+        }
+        dh[i] = dp;
+        lh[i] = d[i] * l[i] / dp;
+        s = lh[i] * l[i] * s - sigma;
+        if !s.is_finite() {
+            return None;
+        }
+        growth = growth.max(dp.abs());
+    }
+    dh[n - 1] = d[n - 1] + s;
+    if !dh[n - 1].is_finite() {
+        return None;
+    }
+    growth = growth.max(dh[n - 1].abs());
+    Some((dh, lh, growth))
+}
+
+/// Number of eigenvalues of `L D Lᵀ` strictly less than `x`: negative
+/// pivots of the dstqds transform (Sylvester's law on `L D Lᵀ − xI`).
+fn ldl_negcount(d: &[f64], l: &[f64], x: f64, pivmin: f64) -> usize {
+    let n = d.len();
+    let mut neg = 0usize;
+    let mut t = -x;
+    for i in 0..n - 1 {
+        let mut dp = d[i] + t;
+        if dp.abs() < pivmin {
+            // exact/near-zero pivot: count it negative (conservative at an
+            // exact eigenvalue hit) and continue with a clamped value
+            dp = -pivmin;
+        }
+        if dp < 0.0 {
+            neg += 1;
+        }
+        t = t * (d[i] / dp) * (l[i] * l[i]) - x;
+        if !t.is_finite() {
+            // overflow recovery (LAPACK dlaneg's safe path): restart the
+            // recurrence; the count stays a valid bisection oracle because
+            // brackets are only narrowed on certified counts
+            t = -x;
+        }
+    }
+    let dp = d[n - 1] + t;
+    if dp < 0.0 {
+        neg += 1;
+    }
+    neg
+}
+
+/// Bisect eigenvalue `j` (block-local) of the representation to full
+/// relative accuracy, starting from a certified bracket.
+fn refine_ldl(
+    d: &[f64],
+    l: &[f64],
+    j: usize,
+    mut lo: f64,
+    mut hi: f64,
+    pivmin: f64,
+) -> (f64, f64) {
+    // re-certify the bracket against *this* representation (it was
+    // established on a different one, up to the shift): expand as needed
+    let mut width = (hi - lo).abs().max(4.0 * pivmin);
+    for _ in 0..60 {
+        if ldl_negcount(d, l, lo, pivmin) <= j {
+            break;
+        }
+        lo -= width;
+        width *= 2.0;
+    }
+    width = (hi - lo).abs().max(4.0 * pivmin);
+    for _ in 0..60 {
+        if ldl_negcount(d, l, hi, pivmin) > j {
+            break;
+        }
+        hi += width;
+        width *= 2.0;
+    }
+    for _ in 0..140 {
+        let w = 0.5 * (lo + hi);
+        if hi - lo <= 2.0 * f64::EPSILON * lo.abs().max(hi.abs()) + 2.0 * pivmin {
+            break;
+        }
+        if ldl_negcount(d, l, w, pivmin) > j {
+            hi = w;
+        } else {
+            lo = w;
+        }
+    }
+    (lo, hi)
+}
+
+// ---------------------------------------------------------------------
+// the representation tree
+// ---------------------------------------------------------------------
+
+/// One node: a representation plus the contiguous index range it is
+/// responsible for.  `w`/`lo`/`hi` are relative to this node's
+/// representation; `tau` accumulates the shifts back to `T`.
+struct Node {
+    block: usize,
+    d: Vec<f64>,
+    l: Vec<f64>,
+    tau: f64,
+    /// Block-local index of `w[0]`.
+    first: usize,
+    w: Vec<f64>,
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    /// Absolute gaps to the nearest eigenvalue outside the node
+    /// (shift-invariant; `INFINITY` at block edges).
+    gap_left: f64,
+    gap_right: f64,
+    depth: usize,
+    /// Consecutive ancestors that failed to split at all (degenerate
+    /// cluster detection).
+    stuck: u8,
+    refined: bool,
+    /// Output column per index (`None` = gap companion, no vector wanted).
+    cols: Vec<Option<usize>>,
+}
+
+struct NodeOutcome {
+    /// (output column, absolute eigenvalue, block id, block-local vector)
+    pairs: Vec<(usize, f64, usize, Vec<f64>)>,
+    children: Vec<Node>,
+    cluster_fallbacks: usize,
+}
+
+/// Root representations + full-relative-accuracy eigenvalues for every
+/// block that carries at least one wanted index.
+fn build_roots(
+    blocks: &[Block],
+    brackets: &[(f64, f64)],
+    col_of_flat: &[Option<usize>],
+    ctx: &ExecCtx,
+) -> Result<Vec<Node>, LapackError> {
+    let mut roots = Vec::new();
+    let mut flat = 0usize;
+    for (bi, b) in blocks.iter().enumerate() {
+        let nb = b.t.n();
+        let cols: Vec<Option<usize>> = col_of_flat[flat..flat + nb].to_vec();
+        let brs = &brackets[flat..flat + nb];
+        flat += nb;
+        if cols.iter().all(|c| c.is_none()) {
+            continue; // no wanted eigenpairs in this block
+        }
+        // root shift: just below the certified lower bound of the block's
+        // spectrum, so T − τI is positive definite (an RRR for everything);
+        // escalate the margin if the factorization misbehaves numerically
+        let lb = brs[0].0;
+        let margin = (f64::EPSILON * b.spdiam * nb as f64).max(2.0 * f64::MIN_POSITIVE);
+        let mut rep = None;
+        for mfac in [1.0, 8.0, 64.0, 512.0] {
+            let tau = lb - margin * mfac;
+            if let Some((d, l, growth)) = root_ldl(&b.t, tau) {
+                let ok = growth <= GROWTH_MAX * (b.spdiam + tau.abs());
+                if ok || rep.is_none() {
+                    let better = match &rep {
+                        Some((_, _, _, g)) => growth < *g,
+                        None => true,
+                    };
+                    if better {
+                        rep = Some((d, l, tau, growth));
+                    }
+                }
+                if ok {
+                    break;
+                }
+            }
+        }
+        let Some((d, l, tau, _)) = rep else {
+            return Err(LapackError::NoConvergence(b.offset + 1));
+        };
+        // refine all block eigenvalues relative to the root representation
+        // (companions included: the gap structure needs them)
+        let refine = |j: usize| -> (f64, f64) {
+            refine_ldl(&d, &l, j, brs[j].0 - tau, brs[j].1 - tau, b.pivmin)
+        };
+        let refined: Vec<(f64, f64)> = if nb * nb < PAR_MIN_WORK {
+            (0..nb).map(refine).collect()
+        } else {
+            ctx.parallel_map(nb, refine)
+        };
+        let (mut w, mut lo, mut hi) = (Vec::new(), Vec::new(), Vec::new());
+        for &(a, z) in &refined {
+            w.push(mid((a, z)));
+            lo.push(a);
+            hi.push(z);
+        }
+        roots.push(Node {
+            block: bi,
+            d,
+            l,
+            tau,
+            first: 0,
+            w,
+            lo,
+            hi,
+            gap_left: f64::INFINITY,
+            gap_right: f64::INFINITY,
+            depth: 0,
+            stuck: 0,
+            refined: true,
+            cols,
+        });
+    }
+    Ok(roots)
+}
+
+/// Run one tree level: inline when small, otherwise one DAG task per node
+/// (disjoint write sets, so the graph is embarrassingly parallel and the
+/// scheduler's stealing soaks up ragged node costs).  Outcomes are
+/// collected in node order — never completion order — so the result is
+/// identical at every worker count.
+fn run_level(
+    level: Vec<Node>,
+    blocks: &Arc<Vec<Block>>,
+    ctx: &ExecCtx,
+) -> Vec<Result<NodeOutcome, LapackError>> {
+    let k = level.len();
+    if k < PAR_MIN_NODES || ctx.threads() <= 1 {
+        return level.into_iter().map(|n| process_node(n, blocks)).collect();
+    }
+    let slots: Vec<Arc<Mutex<Option<Result<NodeOutcome, LapackError>>>>> =
+        (0..k).map(|_| Arc::new(Mutex::new(None))).collect();
+    let mut g = TaskGraph::new();
+    for (i, node) in level.into_iter().enumerate() {
+        let slot = Arc::clone(&slots[i]);
+        let blocks = Arc::clone(blocks);
+        g.add(format!("mrrr.node.{i}"), &[], &[i], move || {
+            let r = process_node(node, &blocks);
+            *slot.lock().unwrap() = Some(r);
+        });
+    }
+    let workers = ctx.threads().min(k);
+    run_graph_ctx(g, workers, ctx);
+    slots
+        .into_iter()
+        .map(|s| {
+            s.lock()
+                .unwrap()
+                .take()
+                .unwrap_or(Err(LapackError::NoConvergence(0)))
+        })
+        .collect()
+}
+
+fn process_node(mut node: Node, blocks: &[Block]) -> Result<NodeOutcome, LapackError> {
+    let blk = &blocks[node.block];
+    let pivmin = blk.pivmin;
+    let k = node.w.len();
+    if !node.refined {
+        for i in 0..k {
+            let j = node.first + i;
+            let (lo, hi) = refine_ldl(&node.d, &node.l, j, node.lo[i], node.hi[i], pivmin);
+            node.w[i] = mid((lo, hi));
+            node.lo[i] = lo;
+            node.hi[i] = hi;
+            if !node.w[i].is_finite() {
+                return Err(LapackError::NoConvergence(blk.offset + j + 1));
+            }
+        }
+        node.refined = true;
+    }
+
+    // group consecutive indices whose relative gap is below MINRGP
+    let mut groups: Vec<(usize, usize)> = Vec::new(); // [start, end)
+    let mut start = 0usize;
+    for i in 0..k.saturating_sub(1) {
+        let gap = node.w[i + 1] - node.w[i];
+        let scale = node.w[i].abs().max(node.w[i + 1].abs()).max(pivmin);
+        if gap / scale >= MINRGP {
+            groups.push((start, i + 1));
+            start = i + 1;
+        }
+    }
+    groups.push((start, k));
+    let fully_stuck = groups.len() == 1 && k > 1;
+
+    let mut out = NodeOutcome { pairs: Vec::new(), children: Vec::new(), cluster_fallbacks: 0 };
+    let singles: Vec<(usize, usize)> =
+        groups.iter().copied().filter(|&(a, b)| b - a == 1).collect();
+    let clusters: Vec<(usize, usize)> =
+        groups.iter().copied().filter(|&(a, b)| b - a > 1).collect();
+
+    let wanted_singles: Vec<usize> = singles
+        .iter()
+        .map(|&(a, _)| a)
+        .filter(|&a| node.cols[a].is_some())
+        .collect();
+    if !wanted_singles.is_empty() {
+        let _sp = crate::obs::span_detail("mrrr.vectors", || {
+            format!("block={} depth={} singletons={}", node.block, node.depth, singles.len())
+        });
+        let mut extracted: Vec<(usize, f64, Vec<f64>)> = Vec::new();
+        let mut certified = true;
+        for &a in &wanted_singles {
+            let gl = if a == 0 { node.gap_left } else { node.w[a] - node.w[a - 1] };
+            let gr = if a + 1 == k { node.gap_right } else { node.w[a + 1] - node.w[a] };
+            match extract_vector(&node, a, blk, gl, gr) {
+                Some((lam_rep, z)) => extracted.push((a, lam_rep + node.tau, z)),
+                None => {
+                    certified = false;
+                    break;
+                }
+            }
+        }
+        if certified {
+            for (a, lam, z) in extracted {
+                out.pairs.push((node.cols[a].unwrap(), lam, node.block, z));
+            }
+        } else {
+            // one uncertified twisted vector: redo every singleton of this
+            // node by inverse iteration with the node's full index set as
+            // the Gram–Schmidt companion pool, so eigenvalues that are
+            // tight in *absolute* terms (graded spectra) stay orthogonal —
+            // stein's clustering only sees lambdas within a single call
+            let lams: Vec<f64> = (0..k).map(|i| node.w[i] + node.tau).collect();
+            let z = dstein_ctx(&blk.t, &lams, &ExecCtx::with_threads(1));
+            for &a in &wanted_singles {
+                let col = node.cols[a].unwrap();
+                out.pairs.push((col, lams[a], node.block, z.col(a).to_vec()));
+                out.cluster_fallbacks += 1;
+            }
+        }
+    }
+
+    for &(a, b) in &clusters {
+        if node.cols[a..b].iter().all(|c| c.is_none()) {
+            continue; // companion-only cluster: gaps already served their purpose
+        }
+        crate::obs::metrics::Registry::global().counter("mrrr.clusters").incr();
+        let next_depth = node.depth + 1;
+        let stuck = if fully_stuck { node.stuck + 1 } else { 0 };
+        if next_depth > MAX_DEPTH || stuck >= MAX_STUCK {
+            out.cluster_fallbacks += invit_group(&node, a, b, blk, &mut out.pairs);
+            continue;
+        }
+        match make_child(&node, a, b, blk) {
+            Some(child) => {
+                let mut child = child;
+                child.depth = next_depth;
+                child.stuck = stuck;
+                out.children.push(child);
+            }
+            None => {
+                out.cluster_fallbacks += invit_group(&node, a, b, blk, &mut out.pairs);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Child representation for cluster `[a, b)` of `node`: shift to just
+/// outside the cluster on the side with more room, escalating the distance
+/// until the element growth is acceptable.
+fn make_child(node: &Node, a: usize, b: usize, blk: &Block) -> Option<Node> {
+    let (wa, wb) = (node.w[a], node.w[b - 1]);
+    let width = (wb - wa).max(0.0);
+    let k = node.w.len();
+    let gl = if a == 0 { node.gap_left } else { wa - node.w[a - 1] };
+    let gr = if b == k { node.gap_right } else { node.w[b] - wb };
+    let scale = wa.abs().max(wb.abs()).max(blk.pivmin);
+    let minsep = (4.0 * f64::EPSILON * scale).max(blk.pivmin);
+    let base = width.max(minsep);
+    let left = gl >= gr;
+    let mut best: Option<(Vec<f64>, Vec<f64>, f64, f64)> = None;
+    for fac in [0.25, 1.0, 4.0, 16.0] {
+        let dist = base * fac;
+        let sigma = if left { wa - dist } else { wb + dist };
+        if let Some((d, l, growth)) = shifted_ldl(&node.d, &node.l, sigma) {
+            let ok = growth <= GROWTH_MAX * (blk.spdiam + node.tau.abs() + sigma.abs());
+            let better = match &best {
+                Some((_, _, _, g)) => growth < *g,
+                None => true,
+            };
+            if better {
+                best = Some((d, l, sigma, growth));
+            }
+            if ok {
+                break;
+            }
+        }
+    }
+    let (d, l, sigma, _) = best?;
+    let slack = |i: usize| 2.0 * f64::EPSILON * (node.w[i].abs() + sigma.abs()) + 2.0 * blk.pivmin;
+    Some(Node {
+        block: node.block,
+        d,
+        l,
+        tau: node.tau + sigma,
+        first: node.first + a,
+        w: node.w[a..b].iter().map(|w| w - sigma).collect(),
+        lo: (a..b).map(|i| node.lo[i] - sigma - slack(i)).collect(),
+        hi: (a..b).map(|i| node.hi[i] - sigma + slack(i)).collect(),
+        gap_left: gl,
+        gap_right: gr,
+        depth: node.depth, // set by the caller
+        stuck: node.stuck,
+        refined: false,
+        cols: node.cols[a..b].to_vec(),
+    })
+}
+
+/// Bisection + inverse iteration fallback for group `[a, b)` on the block
+/// tridiagonal (companions included so the in-cluster Gram–Schmidt panel
+/// spans the whole cluster).  Returns how many *wanted* vectors it filled.
+fn invit_group(
+    node: &Node,
+    a: usize,
+    b: usize,
+    blk: &Block,
+    pairs: &mut Vec<(usize, f64, usize, Vec<f64>)>,
+) -> usize {
+    let lams: Vec<f64> = (a..b).map(|i| node.w[i] + node.tau).collect();
+    // serial child context: the node itself is the unit of parallelism, and
+    // stein's per-vector PRNGs keep this deterministic anyway
+    let z = dstein_ctx(&blk.t, &lams, &ExecCtx::with_threads(1));
+    let mut filled = 0usize;
+    for (li, i) in (a..b).enumerate() {
+        if let Some(col) = node.cols[i] {
+            pairs.push((col, lams[li], node.block, z.col(li).to_vec()));
+            filled += 1;
+        }
+    }
+    filled
+}
+
+// ---------------------------------------------------------------------
+// twisted factorization
+// ---------------------------------------------------------------------
+
+/// Twisted factorization `N_k D_k N_kᵀ = L D Lᵀ − λI` at the twist index
+/// minimizing `|γ_k|`; the eigenvector solves `N_k z = γ_k e_k` (z_k = 1).
+/// Returns the unnormalized vector and the *signed* γ (whose sign drives
+/// the Rayleigh-quotient correction `λ ← λ + γ/‖z‖²`).
+fn twisted_vector(d: &[f64], l: &[f64], lam: f64, pivmin: f64) -> Option<(Vec<f64>, f64)> {
+    let n = d.len();
+    if n == 1 {
+        return Some((vec![1.0], d[0] - lam));
+    }
+    // forward dstqds: D⁺, L⁺ with auxiliary s
+    let mut lplus = vec![0.0; n - 1];
+    let mut s = vec![0.0; n];
+    s[0] = -lam;
+    for i in 0..n - 1 {
+        let mut dp = d[i] + s[i];
+        if dp == 0.0 {
+            dp = -pivmin;
+        }
+        lplus[i] = d[i] * l[i] / dp;
+        s[i + 1] = lplus[i] * l[i] * s[i] - lam;
+    }
+    // backward dqds: D⁻, U⁻ with auxiliary p
+    let mut dminus = vec![0.0; n]; // dminus[i+1] = pivot δ⁻ at row i+1
+    let mut p = vec![0.0; n];
+    p[n - 1] = d[n - 1] - lam;
+    for i in (0..n - 1).rev() {
+        let mut dm = d[i] * l[i] * l[i] + p[i + 1];
+        if dm == 0.0 {
+            dm = -pivmin;
+        }
+        dminus[i + 1] = dm;
+        p[i] = p[i + 1] * d[i] / dm - lam;
+    }
+    // γ_k = s_k + p_k + λ (the twist pivot); pick the minimizer
+    let mut kt = usize::MAX;
+    let mut gamma = 0.0f64;
+    for i in 0..n {
+        let g = s[i] + p[i] + lam;
+        if g.is_finite() && (kt == usize::MAX || g.abs() < gamma.abs()) {
+            kt = i;
+            gamma = g;
+        }
+    }
+    if kt == usize::MAX {
+        return None;
+    }
+    // solve N_k z = γ e_k: up-sweep with L⁺, down-sweep with U⁻
+    let mut z = vec![0.0; n];
+    z[kt] = 1.0;
+    for i in (0..kt).rev() {
+        let v = -lplus[i] * z[i + 1];
+        z[i] = if v.is_finite() { v } else { 0.0 };
+    }
+    for i in kt..n - 1 {
+        let v = -(d[i] * l[i] / dminus[i + 1]) * z[i];
+        z[i + 1] = if v.is_finite() { v } else { 0.0 };
+    }
+    Some((z, gamma))
+}
+
+/// Extract the eigenvector for singleton `i` of `node` (node-local index):
+/// twisted factorization plus Rayleigh-quotient polishing, keeping the
+/// best candidate.  `None` = could not certify the residual; caller falls
+/// back to inverse iteration.
+fn extract_vector(
+    node: &Node,
+    i: usize,
+    blk: &Block,
+    gap_left: f64,
+    gap_right: f64,
+) -> Option<(f64, Vec<f64>)> {
+    let (d, l) = (&node.d, &node.l);
+    let nb = d.len();
+    let mut lam = node.w[i];
+    let (blo, bhi) = (node.lo[i], node.hi[i]);
+    let bw = (bhi - blo).abs();
+    let mut best: Option<(Vec<f64>, f64, f64)> = None; // (z, resid, lam)
+    for _ in 0..RQ_ITERS {
+        let (z, gamma) = twisted_vector(d, l, lam, blk.pivmin)?;
+        let nrm2: f64 = z.iter().map(|v| v * v).sum();
+        if !nrm2.is_finite() || nrm2 == 0.0 {
+            break;
+        }
+        let resid = gamma.abs() / nrm2.sqrt();
+        let better = best.as_ref().map_or(true, |(_, br, _)| resid < *br);
+        if better {
+            best = Some((z, resid, lam));
+        }
+        let corr = gamma / nrm2;
+        let next = lam + corr;
+        // stay inside (a small extension of) the certified bracket and
+        // stop once the correction is below the eigenvalue's own ulp
+        if !next.is_finite()
+            || next < blo - bw
+            || next > bhi + bw
+            || corr.abs() <= f64::EPSILON * lam.abs()
+            || next == lam
+        {
+            break;
+        }
+        lam = next;
+    }
+    let (mut z, resid, lam) = best?;
+    // certification: an RRR twisted vector has residual O(ε·|λ|); the gap
+    // term keeps genuinely easy cases (huge separations) from tripping the
+    // fallback when |λ| is tiny
+    let gap = gap_left.min(gap_right).max(blk.pivmin);
+    let tol = 32.0 * f64::EPSILON * (nb as f64).max(8.0) * lam.abs().max(blk.pivmin);
+    if !(resid <= tol || resid <= 1e-3 * f64::EPSILON.sqrt() * gap) {
+        return None;
+    }
+    let nrm: f64 = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let inv = 1.0 / nrm;
+    for v in z.iter_mut() {
+        *v *= inv;
+    }
+    Some((lam, z))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::ddot;
+    use crate::lapack::steqr::{dsteqr, dsterf};
+
+    fn laplacian(n: usize) -> SymTridiag {
+        SymTridiag::new(vec![2.0; n], vec![-1.0; n - 1])
+    }
+
+    fn wilkinson(n: usize) -> SymTridiag {
+        // W_n^+: d = (m, m-1, …, 1, 0, 1, …, m), e = 1  (n = 2m+1)
+        let m = n / 2;
+        let d = (0..n).map(|i| (i as i64 - m as i64).unsigned_abs() as f64).collect();
+        SymTridiag::new(d, vec![1.0; n - 1])
+    }
+
+    fn check_pairs(t: &SymTridiag, vals: &[f64], z: &Matrix, tol: f64) {
+        let n = t.n();
+        let norm = t.norm1().max(1.0);
+        for j in 0..vals.len() {
+            let zj: Vec<f64> = z.col(j).to_vec();
+            let tz = t.matvec(&zj);
+            let mut r = 0.0f64;
+            for i in 0..n {
+                r = r.max((tz[i] - vals[j] * zj[i]).abs());
+            }
+            assert!(r <= tol * norm, "vector {j}: residual {r:.3e} (‖T‖={norm:.3e})");
+            for k in 0..j {
+                let dot = ddot(z.col(j), z.col(k)).abs();
+                assert!(dot <= tol, "<z{j},z{k}> = {dot:.3e}");
+            }
+            let nrm = ddot(z.col(j), z.col(j));
+            assert!((nrm - 1.0).abs() <= tol, "‖z{j}‖² = {nrm}");
+        }
+    }
+
+    #[test]
+    fn laplacian_subset_matches_sterf() {
+        let n = 40;
+        let t = laplacian(n);
+        let mut tf = t.clone();
+        dsterf(&mut tf).unwrap();
+        let (vals, z) = dstemr(&t, 3, 12).unwrap();
+        for (j, k) in (3..=12).enumerate() {
+            assert!(
+                (vals[j] - tf.d[k]).abs() < 1e-10,
+                "eig {k}: {} vs {}",
+                vals[j],
+                tf.d[k]
+            );
+        }
+        check_pairs(&t, &vals, &z, 1e-10);
+    }
+
+    #[test]
+    fn full_spectrum_orthonormal() {
+        let n = 30;
+        let t = SymTridiag::new(
+            (0..n).map(|i| (i as f64 * 0.9).sin() * 2.0).collect(),
+            (0..n - 1).map(|i| 1.0 + 0.1 * (i as f64).cos()).collect(),
+        );
+        let (vals, z) = dstemr(&t, 0, n - 1).unwrap();
+        for i in 1..n {
+            assert!(vals[i] >= vals[i - 1] - 1e-12, "ascending order violated at {i}");
+        }
+        check_pairs(&t, &vals, &z, 1e-9);
+    }
+
+    #[test]
+    fn wilkinson_close_pairs() {
+        // the classic MRRR stress test: eigenvalues agglomerate in very
+        // close pairs at the top of the spectrum
+        let n = 21;
+        let t = wilkinson(n);
+        let mut tf = t.clone();
+        let mut q = Matrix::identity(n);
+        dsteqr(&mut tf, Some(&mut q)).unwrap();
+        let (vals, z) = dstemr(&t, 0, n - 1).unwrap();
+        for j in 0..n {
+            assert!(
+                (vals[j] - tf.d[j]).abs() < 1e-9 * t.norm1(),
+                "eig {j}: {} vs {}",
+                vals[j],
+                tf.d[j]
+            );
+        }
+        check_pairs(&t, &vals, &z, 1e-8);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        // n = 1
+        let t = SymTridiag::new(vec![3.5], vec![]);
+        let (vals, z) = dstemr(&t, 0, 0).unwrap();
+        assert_eq!(vals, vec![3.5]);
+        assert_eq!(z.col(0), &[1.0]);
+        // n = 2
+        let t = SymTridiag::new(vec![1.0, 2.0], vec![0.5]);
+        let (vals, z) = dstemr(&t, 0, 1).unwrap();
+        check_pairs(&t, &vals, &z, 1e-12);
+        // n = 3, triple eigenvalue (diagonal blocks)
+        let t = SymTridiag::new(vec![1.0, 1.0, 1.0], vec![0.0, 0.0]);
+        let (vals, z) = dstemr(&t, 0, 2).unwrap();
+        for v in &vals {
+            assert!((v - 1.0).abs() < 1e-14);
+        }
+        check_pairs(&t, &vals, &z, 1e-12);
+    }
+
+    #[test]
+    fn subrange_edges_validate() {
+        let t = laplacian(8);
+        assert!(matches!(dstemr(&t, 3, 2), Err(LapackError::BadArgument(_))));
+        assert!(matches!(dstemr(&t, 0, 8), Err(LapackError::BadArgument(_))));
+        let (vals, _) = dstemr(&t, 7, 7).unwrap();
+        assert_eq!(vals.len(), 1);
+        let (vals, _) = dstemr(&t, 0, 7).unwrap();
+        assert_eq!(vals.len(), 8);
+    }
+
+    #[test]
+    fn repeated_runs_bitwise_identical() {
+        let n = 25;
+        let t = SymTridiag::new(
+            (0..n).map(|i| ((i * 13) % 7) as f64 * 0.3).collect(),
+            (0..n - 1).map(|i| 0.6 + 0.2 * ((i * 5) % 3) as f64).collect(),
+        );
+        let (v1, z1) = dstemr(&t, 0, 9).unwrap();
+        let (v2, z2) = dstemr(&t, 0, 9).unwrap();
+        for j in 0..10 {
+            assert_eq!(v1[j].to_bits(), v2[j].to_bits(), "value {j} drifted");
+            for i in 0..n {
+                assert_eq!(
+                    z1.col(j)[i].to_bits(),
+                    z2.col(j)[i].to_bits(),
+                    "Z[{i},{j}] drifted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn injected_tree_fault_surfaces_as_error() {
+        let t = laplacian(16);
+        let plan = FaultPlan::seeded(3).inject(FaultSite::MrrrTree, 1);
+        let r = dstemr_faults(&t, 0, 3, &ExecCtx::with_threads(1), &plan);
+        assert!(matches!(r, Err(LapackError::NoConvergence(_))));
+        assert_eq!(plan.fired(FaultSite::MrrrTree), 1);
+        // the next call on the same plan is clean (count consumed)
+        let r2 = dstemr_faults(&t, 0, 3, &ExecCtx::with_threads(1), &plan);
+        assert!(r2.is_ok());
+    }
+
+    #[test]
+    fn glued_blocks_stay_orthogonal() {
+        // two copies of the same 2x2 block joined by a tiny coupling: the
+        // eigenvalues pair up at relative gap ~1e-14 — cluster territory
+        let t = SymTridiag::new(vec![1.0, 2.0, 1.0, 2.0], vec![0.5, 1e-14, 0.5]);
+        let (vals, z) = dstemr(&t, 0, 3).unwrap();
+        assert!((vals[0] - vals[1]).abs() < 1e-10);
+        check_pairs(&t, &vals, &z, 1e-8);
+    }
+}

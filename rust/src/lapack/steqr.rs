@@ -22,7 +22,11 @@ const MAX_ITER: usize = 50;
 pub fn dsteqr(t: &mut SymTridiag, mut z: Option<&mut Matrix>) -> Result<(), LapackError> {
     let n = t.n();
     if let Some(zm) = &z {
-        assert_eq!(zm.cols(), n, "z must have n columns");
+        // reachable through caller-supplied accumulators (PR-3 sweep rule:
+        // reachable misuse is an error, not a panic)
+        if zm.cols() != n {
+            return Err(LapackError::BadArgument("dsteqr: z must have n columns"));
+        }
     }
     if n <= 1 {
         return Ok(());

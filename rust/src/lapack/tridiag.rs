@@ -1,0 +1,246 @@
+//! Tridiagonal-kernel facade: one entry point over the three subset
+//! eigensolvers (QR, bisection + inverse iteration, MRRR) with the
+//! selection, validation, and intra-stage fallback policy in one place.
+//!
+//! The solver stages TD2 and TT3 call [`tridiag_eigen_subset`] instead of a
+//! specific kernel; the kernel comes from [`SolverConfig::tridiag`]
+//! (default: `GSYEIG_TRIDIAG` env, else bisection + inverse iteration — the
+//! seed behaviour).  DESIGN.md §9 has the selection guidance; the
+//! cross-backend contract (residual, orthogonality, eigenvalue agreement)
+//! is pinned by `tests/backend_conformance.rs`.
+//!
+//! Fallback policy (PR-3 rules): steqr and mrrr can fail — QR by exceeding
+//! its iteration cap, MRRR by an uncertifiable representation (or an
+//! injected [`FaultSite::MrrrTree`](crate::util::faults::FaultSite) fault).
+//! Either failure re-routes the stage through bisection + inverse
+//! iteration, which is the terminal member of the chain, and the event is
+//! reported in [`TridiagOutcome::fallback`] so the solver can append it to
+//! `SolveReport`.
+//!
+//! [`SolverConfig::tridiag`]: crate::solver::gsyeig::SolverConfig
+
+use crate::matrix::{Matrix, SymTridiag};
+use crate::util::faults::FaultPlan;
+use crate::util::parallel::ExecCtx;
+
+use super::mrrr::dstemr_faults;
+use super::stebz::dstebz_ctx;
+use super::stein::dstein_ctx;
+use super::steqr::dsteqr;
+use super::LapackError;
+
+/// Which kernel computes the tridiagonal eigenpair subset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TridiagKernel {
+    /// Implicit-shift QL/QR (`dsteqr`): full spectrum, then slice the
+    /// wanted columns.  O(n³) in vectors, unconditionally robust.
+    Steqr,
+    /// Sturm bisection + inverse iteration (`dstebz` + `dstein`): the
+    /// seed's subset path, O(n·k) values + O(n·k) vectors with in-cluster
+    /// Gram–Schmidt.  Terminal member of the fallback chain.
+    BisectInvit,
+    /// Multiple relatively robust representations (`dstemr`): O(n·k) with
+    /// no reorthogonalization, task-parallel representation tree.
+    Mrrr,
+}
+
+impl TridiagKernel {
+    pub const ALL: [TridiagKernel; 3] =
+        [TridiagKernel::Steqr, TridiagKernel::BisectInvit, TridiagKernel::Mrrr];
+
+    /// Stable name — used in bench JSON filenames, CI legs, and fallback
+    /// messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            TridiagKernel::Steqr => "steqr",
+            TridiagKernel::BisectInvit => "bisect",
+            TridiagKernel::Mrrr => "mrrr",
+        }
+    }
+
+    /// Parse a kernel name (the `GSYEIG_TRIDIAG` values).
+    pub fn parse(s: &str) -> Option<TridiagKernel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "steqr" | "qr" => Some(TridiagKernel::Steqr),
+            "bisect" | "stebz" | "bisect-invit" | "stebz+stein" => {
+                Some(TridiagKernel::BisectInvit)
+            }
+            "mrrr" | "mr3" | "stemr" => Some(TridiagKernel::Mrrr),
+            _ => None,
+        }
+    }
+
+    /// Kernel selected by `GSYEIG_TRIDIAG`, defaulting to the seed's
+    /// bisection + inverse iteration path.
+    pub fn from_env() -> TridiagKernel {
+        std::env::var("GSYEIG_TRIDIAG")
+            .ok()
+            .and_then(|v| TridiagKernel::parse(&v))
+            .unwrap_or(TridiagKernel::BisectInvit)
+    }
+}
+
+/// Result of a facade call: eigenpairs plus the fallback record, if the
+/// requested kernel had to be abandoned mid-stage.
+pub struct TridiagOutcome {
+    /// Wanted eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Matching eigenvectors (n × m).
+    pub z: Matrix,
+    /// Kernel that actually produced the result.
+    pub kernel_used: TridiagKernel,
+    /// `Some((requested, why))` when the requested kernel failed and
+    /// bisection + inverse iteration finished the stage.
+    pub fallback: Option<(TridiagKernel, LapackError)>,
+}
+
+/// Eigenvalues `il..=iu` (0-based, ascending) and eigenvectors of `t`
+/// through the selected kernel, falling back to bisection + inverse
+/// iteration when the selected kernel fails.
+pub fn tridiag_eigen_subset(
+    kernel: TridiagKernel,
+    t: &SymTridiag,
+    il: usize,
+    iu: usize,
+    ctx: &ExecCtx,
+    faults: &FaultPlan,
+) -> Result<TridiagOutcome, LapackError> {
+    let n = t.n();
+    if n == 0 {
+        return Err(LapackError::BadArgument("tridiag: empty matrix"));
+    }
+    if il > iu {
+        return Err(LapackError::BadArgument("tridiag: empty index range (il > iu)"));
+    }
+    if iu >= n {
+        return Err(LapackError::BadArgument("tridiag: index range exceeds dimension"));
+    }
+
+    let primary: Result<(Vec<f64>, Matrix), LapackError> = match kernel {
+        TridiagKernel::BisectInvit => {
+            let (vals, z) = bisect_invit(t, il, iu, ctx);
+            return Ok(TridiagOutcome {
+                values: vals,
+                z,
+                kernel_used: TridiagKernel::BisectInvit,
+                fallback: None,
+            });
+        }
+        TridiagKernel::Steqr => steqr_subset(t, il, iu),
+        TridiagKernel::Mrrr => {
+            dstemr_faults(t, il, iu, ctx, faults).map(|o| (o.values, o.z))
+        }
+    };
+
+    match primary {
+        Ok((values, z)) => Ok(TridiagOutcome { values, z, kernel_used: kernel, fallback: None }),
+        Err(err) => {
+            let (values, z) = bisect_invit(t, il, iu, ctx);
+            Ok(TridiagOutcome {
+                values,
+                z,
+                kernel_used: TridiagKernel::BisectInvit,
+                fallback: Some((kernel, err)),
+            })
+        }
+    }
+}
+
+fn bisect_invit(t: &SymTridiag, il: usize, iu: usize, ctx: &ExecCtx) -> (Vec<f64>, Matrix) {
+    let lams = dstebz_ctx(t, il, iu, ctx);
+    let z = dstein_ctx(t, &lams, ctx);
+    (lams, z)
+}
+
+/// Full-spectrum QR, then slice columns `il..=iu` (dsteqr leaves pairs
+/// sorted ascending).
+fn steqr_subset(
+    t: &SymTridiag,
+    il: usize,
+    iu: usize,
+) -> Result<(Vec<f64>, Matrix), LapackError> {
+    let n = t.n();
+    let mut work = t.clone();
+    let mut q = Matrix::identity(n);
+    dsteqr(&mut work, Some(&mut q))?;
+    let m = iu - il + 1;
+    let mut z = Matrix::zeros(n, m);
+    for (c, k) in (il..=iu).enumerate() {
+        z.col_mut(c).copy_from_slice(q.col(k));
+    }
+    Ok((work.d[il..=iu].to_vec(), z))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::faults::FaultSite;
+
+    fn t5() -> SymTridiag {
+        SymTridiag::new(vec![2.0, 3.0, 1.0, 4.0, 2.5], vec![0.7, 0.4, 0.9, 0.2])
+    }
+
+    #[test]
+    fn kernels_agree_on_a_small_subset() {
+        let t = t5();
+        let plan = FaultPlan::disarmed();
+        let ctx = ExecCtx::with_threads(1);
+        let mut results = Vec::new();
+        for k in TridiagKernel::ALL {
+            let out = tridiag_eigen_subset(k, &t, 1, 3, &ctx, &plan).unwrap();
+            assert!(out.fallback.is_none(), "{} fell back unexpectedly", k.name());
+            assert_eq!(out.values.len(), 3);
+            results.push(out.values);
+        }
+        for r in &results[1..] {
+            for (a, b) in results[0].iter().zip(r) {
+                assert!((a - b).abs() < 1e-10 * t.norm1(), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn validation_is_uniform_across_kernels() {
+        let t = t5();
+        let plan = FaultPlan::disarmed();
+        let ctx = ExecCtx::with_threads(1);
+        for k in TridiagKernel::ALL {
+            assert!(matches!(
+                tridiag_eigen_subset(k, &t, 3, 1, &ctx, &plan),
+                Err(LapackError::BadArgument(_))
+            ));
+            assert!(matches!(
+                tridiag_eigen_subset(k, &t, 0, 5, &ctx, &plan),
+                Err(LapackError::BadArgument(_))
+            ));
+        }
+        let empty = SymTridiag::new(vec![], vec![]);
+        assert!(matches!(
+            tridiag_eigen_subset(TridiagKernel::Mrrr, &empty, 0, 0, &ctx, &plan),
+            Err(LapackError::BadArgument(_))
+        ));
+    }
+
+    #[test]
+    fn mrrr_fault_falls_back_to_bisect() {
+        let t = t5();
+        let plan = FaultPlan::seeded(7).inject(FaultSite::MrrrTree, 1);
+        let ctx = ExecCtx::with_threads(1);
+        let out = tridiag_eigen_subset(TridiagKernel::Mrrr, &t, 0, 4, &ctx, &plan).unwrap();
+        assert_eq!(out.kernel_used, TridiagKernel::BisectInvit);
+        let (req, _) = out.fallback.expect("fallback must be recorded");
+        assert_eq!(req, TridiagKernel::Mrrr);
+        assert_eq!(out.values.len(), 5);
+        assert_eq!(plan.fired(FaultSite::MrrrTree), 1);
+    }
+
+    #[test]
+    fn parse_and_names_round_trip() {
+        for k in TridiagKernel::ALL {
+            assert_eq!(TridiagKernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(TridiagKernel::parse("MR3"), Some(TridiagKernel::Mrrr));
+        assert_eq!(TridiagKernel::parse("stebz+stein"), Some(TridiagKernel::BisectInvit));
+        assert_eq!(TridiagKernel::parse("nonsense"), None);
+    }
+}

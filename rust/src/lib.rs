@@ -37,6 +37,7 @@ pub mod testing;
 pub mod util;
 pub mod workloads;
 
+pub use lapack::TridiagKernel;
 pub use matrix::dense::Matrix;
 pub use solver::gsyeig::{GsyeigSolver, Problem, Solution, SolverConfig, Variant, Which};
 pub use solver::{FallbackEvent, SolveReport, SolverError};

@@ -19,7 +19,7 @@ use std::sync::Arc;
 use gsyeig::bench::json::{maybe_emit, JsonObject};
 use gsyeig::bench::{
     fig_sweep, run_accuracy_table, run_stage_table, run_table4, run_table4_thread_sweep,
-    ExperimentKind, ExperimentScale,
+    run_tridiag_backend_table, ExperimentKind, ExperimentScale,
 };
 use gsyeig::cli::Args;
 use gsyeig::coordinator::{Coordinator, CoordinatorConfig, Job, JobSpec, WorkloadSpec};
@@ -180,6 +180,7 @@ fn cmd_experiment(args: &Args) {
         "table2" | "table3" => {
             run_t2_t3(ExperimentKind::Md);
             run_t2_t3(ExperimentKind::Dft);
+            println!("{}", run_tridiag_backend_table(&scale));
         }
         "table4" => run_t4(),
         "table6" | "table7" => run_offload_tables(&scale),
@@ -196,6 +197,7 @@ fn cmd_experiment(args: &Args) {
         "all" => {
             run_t2_t3(ExperimentKind::Md);
             run_t2_t3(ExperimentKind::Dft);
+            println!("{}", run_tridiag_backend_table(&scale));
             run_t4();
             run_offload_tables(&scale);
             let svals = fig_svals(&scale);

@@ -3,6 +3,7 @@
 use std::path::PathBuf;
 
 use crate::lanczos::thick_restart::Want;
+use crate::lapack::tridiag::TridiagKernel;
 use crate::matrix::Matrix;
 use crate::util::faults::{FaultPlan, FaultSite};
 use crate::util::parallel::ExecCtx;
@@ -74,6 +75,11 @@ pub struct SolverConfig {
     pub max_matvecs: usize,
     /// Use the blocked DSYGST for GS2 instead of the two-TRSM construction.
     pub gs2_sygst: bool,
+    /// Tridiagonal subset kernel for TD2/TT3: QR, bisection + inverse
+    /// iteration, or MRRR (DESIGN.md §9).  Defaults from `GSYEIG_TRIDIAG`;
+    /// a steqr/mrrr failure re-solves via bisect+invit and is recorded in
+    /// [`SolveReport::tridiag_fallbacks`].
+    pub tridiag: TridiagKernel,
     pub seed: u64,
     /// Execution context for the solve: thread budget + pool + placement.
     /// Defaults to [`ExecCtx::global`] (inherit the ambient budget at
@@ -101,6 +107,7 @@ impl SolverConfig {
             krylov_tol: 0.0,
             max_matvecs: 500_000,
             gs2_sygst: false,
+            tridiag: TridiagKernel::from_env(),
             seed: 0xEE6_1A9,
             exec: ExecCtx::global(),
             faults: FaultPlan::disarmed(),

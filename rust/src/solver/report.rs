@@ -27,6 +27,9 @@ pub struct SolveReport {
     /// How many projected eigensolves took the dstebz+dstein path after a
     /// dsteqr convergence failure.
     pub steqr_fallbacks: usize,
+    /// How many TD2/TT3 tridiagonal stages abandoned the configured kernel
+    /// (steqr or mrrr) and re-solved via bisection + inverse iteration.
+    pub tridiag_fallbacks: usize,
 }
 
 impl SolveReport {
@@ -36,6 +39,7 @@ impl SolveReport {
             && self.events.is_empty()
             && self.cholesky_shift == 0.0
             && self.steqr_fallbacks == 0
+            && self.tridiag_fallbacks == 0
     }
 }
 

@@ -9,16 +9,15 @@
 
 use crate::blas::Trans;
 use crate::lapack::ormtr::dormtr_lower;
-use crate::lapack::stebz::dstebz_ctx;
-use crate::lapack::stein::dstein_ctx;
 use crate::lapack::sytrd::dsytrd_lower;
+use crate::lapack::tridiag::tridiag_eigen_subset;
 use crate::matrix::{Matrix, SymTridiag};
 use crate::util::timer::StageTimer;
 
 use super::backend::Kernels;
 use super::error::{checkpoint, SolverError};
 use super::gsyeig::{stage_gs1, wanted_indices, Problem, Solution, SolverConfig};
-use super::report::SolveReport;
+use super::report::{FallbackEvent, SolveReport};
 
 pub fn solve<K: Kernels>(
     cfg: &SolverConfig,
@@ -46,19 +45,16 @@ pub fn solve<K: Kernels>(
         dsytrd_lower(n, c.as_mut_slice(), n, &mut d, &mut e, &mut tau);
     });
 
-    // TD2: subset eigenpairs of T (bisection + inverse iteration — the MR³
-    // slot; O(ns)-class, negligible vs the reductions, as Table 2 shows).
-    // Explicitly ctx-threaded: bisection splits statically, the ragged
-    // cluster list steals (DESIGN.md §3).
+    // TD2: subset eigenpairs of T through the configured tridiagonal
+    // kernel (steqr / bisect+invit / mrrr — the MR³ slot; O(ns)-class,
+    // negligible vs the reductions, as Table 2 shows).  A kernel failure
+    // re-solves via bisect+invit and is recorded in the report.
     let t = SymTridiag::new(d, e);
     let (il, iu, reversed) = wanted_indices(n, s, cfg.which);
     let ctx = &cfg.exec;
     checkpoint(ctx, "TD2")?;
-    let (lams, z) = timer.time("TD2", || {
-        let lams = dstebz_ctx(&t, il, iu, ctx);
-        let z = dstein_ctx(&t, &lams, ctx);
-        (lams, z)
-    });
+    let mut report = SolveReport::default();
+    let (lams, z) = timer.time("TD2", || run_tridiag_stage("TD2", cfg, &t, il, iu, &mut report))?;
 
     // TD3: Y := QZ
     checkpoint(ctx, "TD3")?;
@@ -82,8 +78,38 @@ pub fn solve<K: Kernels>(
         restarts: 0,
         converged: true,
         backend: kernels.name(),
-        report: SolveReport::default(),
+        report,
     })
+}
+
+/// Run the TD2/TT3 tridiagonal stage through the configured kernel facade,
+/// recording any intra-stage fallback (kernel failed → bisect+invit
+/// re-solve) in the report.  Shared by the TD and TT variants.
+pub(crate) fn run_tridiag_stage(
+    stage: &'static str,
+    cfg: &SolverConfig,
+    t: &SymTridiag,
+    il: usize,
+    iu: usize,
+    report: &mut SolveReport,
+) -> Result<(Vec<f64>, Matrix), SolverError> {
+    let out = tridiag_eigen_subset(cfg.tridiag, t, il, iu, &cfg.exec, &cfg.faults)
+        .map_err(|e| SolverError::from_lapack(stage, e))?;
+    if let Some((requested, err)) = out.fallback {
+        crate::obs::instant("fallback", || {
+            format!(
+                "{stage}: {} kernel failed ({err}); re-solved via bisection + inverse iteration",
+                requested.name()
+            )
+        });
+        report.events.push(FallbackEvent {
+            stage,
+            fault: format!("{} kernel failed: {err}", requested.name()),
+            action: "re-solve tridiagonal stage via bisection + inverse iteration",
+        });
+        report.tridiag_fallbacks += 1;
+    }
+    Ok((out.values, out.z))
 }
 
 /// Reverse (eigenvalues, columns) when the wanted end is the top.

@@ -8,8 +8,6 @@
 //! (Y := (Q₁Q₂)Z, 2n²s) → BT1.
 
 use crate::blas::{dgemm, Trans};
-use crate::lapack::stebz::dstebz_ctx;
-use crate::lapack::stein::dstein_ctx;
 use crate::matrix::Matrix;
 use crate::sbr::{sbrdt_ctx, syrdb_ctx};
 use crate::util::timer::StageTimer;
@@ -18,7 +16,7 @@ use super::backend::Kernels;
 use super::error::{checkpoint, SolverError};
 use super::gsyeig::{stage_gs1, wanted_indices, Problem, Solution, SolverConfig};
 use super::report::SolveReport;
-use super::td::order_from_wanted_end;
+use super::td::{order_from_wanted_end, run_tridiag_stage};
 
 pub fn solve<K: Kernels>(
     cfg: &SolverConfig,
@@ -51,14 +49,12 @@ pub fn solve<K: Kernels>(
     checkpoint(ctx, "TT2")?;
     let (t, _nrot) = timer.time("TT2", || sbrdt_ctx(&mut c, w, Some(&mut q1), ctx));
 
-    // TT3: subset eigenpairs of T
+    // TT3: subset eigenpairs of T through the configured tridiagonal
+    // kernel (fallbacks recorded in the report)
     checkpoint(ctx, "TT3")?;
     let (il, iu, reversed) = wanted_indices(n, s, cfg.which);
-    let (lams, z) = timer.time("TT3", || {
-        let lams = dstebz_ctx(&t, il, iu, ctx);
-        let z = dstein_ctx(&t, &lams, ctx);
-        (lams, z)
-    });
+    let mut report = SolveReport::default();
+    let (lams, z) = timer.time("TT3", || run_tridiag_stage("TT3", cfg, &t, il, iu, &mut report))?;
 
     // TT4: Y := (Q₁Q₂) Z  (Q₁ already holds the product)
     checkpoint(ctx, "TT4")?;
@@ -94,7 +90,7 @@ pub fn solve<K: Kernels>(
         restarts: 0,
         converged: true,
         backend: kernels.name(),
-        report: SolveReport::default(),
+        report,
     })
 }
 

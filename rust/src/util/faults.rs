@@ -40,15 +40,19 @@ pub enum FaultSite {
     WorkerPanic,
     /// The KI offload operator refuses, forcing the native fallback.
     OffloadRefusal,
+    /// The MRRR representation tree reports an uncertifiable
+    /// representation, forcing the TD2/TT3 bisect+invit re-solve.
+    MrrrTree,
 }
 
 impl FaultSite {
-    pub const ALL: [FaultSite; 5] = [
+    pub const ALL: [FaultSite; 6] = [
         FaultSite::Gs1NotSpd,
         FaultSite::LanczosStall,
         FaultSite::ProjectedNoConv,
         FaultSite::WorkerPanic,
         FaultSite::OffloadRefusal,
+        FaultSite::MrrrTree,
     ];
 
     fn index(self) -> usize {
@@ -58,6 +62,7 @@ impl FaultSite {
             FaultSite::ProjectedNoConv => 2,
             FaultSite::WorkerPanic => 3,
             FaultSite::OffloadRefusal => 4,
+            FaultSite::MrrrTree => 5,
         }
     }
 
@@ -68,6 +73,7 @@ impl FaultSite {
             FaultSite::ProjectedNoConv => "projected-no-convergence",
             FaultSite::WorkerPanic => "worker-panic",
             FaultSite::OffloadRefusal => "offload-refusal",
+            FaultSite::MrrrTree => "mrrr-tree",
         }
     }
 }

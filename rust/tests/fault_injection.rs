@@ -66,6 +66,11 @@ fn mixed_fault_queue_drains_completely() {
                     spec.variant = Some(Variant::KE)
                 }
                 FaultSite::OffloadRefusal => spec.variant = Some(Variant::KI),
+                // the MRRR tree site needs the mrrr kernel on a direct route
+                FaultSite::MrrrTree => {
+                    spec.variant = Some(Variant::TD);
+                    spec.tridiag = Some(gsyeig::TridiagKernel::Mrrr);
+                }
                 FaultSite::Gs1NotSpd => {}
             }
         }
@@ -216,6 +221,61 @@ fn steqr_fallback_still_matches_direct_route() {
             td.eigenvalues[i]
         );
     }
+}
+
+#[test]
+fn mrrr_tree_fault_falls_back_to_bisect_invit_bitwise() {
+    let p = test_problem(60, 41);
+    for threads in [1usize, 2, 8] {
+        let mut cfg = SolverConfig::new(Variant::TD, 3, Which::Smallest);
+        cfg.tridiag = gsyeig::TridiagKernel::Mrrr;
+        cfg.exec = ExecCtx::with_threads(threads);
+        cfg.faults = FaultPlan::seeded(11).inject(FaultSite::MrrrTree, 1);
+        let solver = GsyeigSolver::native(cfg);
+        let sol = solver.try_solve(p.clone()).unwrap();
+        assert!(sol.converged, "fallback solve must converge (threads={threads})");
+        assert_eq!(sol.report.tridiag_fallbacks, 1, "fallback must be counted");
+        assert!(
+            sol.report.events.iter().any(|e| e.stage == "TD2"
+                && e.action == "re-solve tridiagonal stage via bisection + inverse iteration"),
+            "TD2 fallback must be recorded: {:?}",
+            sol.report.events
+        );
+        assert!(!sol.report.clean());
+        assert_eq!(solver.config.faults.fired(FaultSite::MrrrTree), 1);
+
+        // the fallback result is bitwise the direct bisect+invit route's
+        let mut direct_cfg = SolverConfig::new(Variant::TD, 3, Which::Smallest);
+        direct_cfg.tridiag = gsyeig::TridiagKernel::BisectInvit;
+        direct_cfg.exec = ExecCtx::with_threads(threads);
+        let direct = GsyeigSolver::native(direct_cfg).try_solve(p.clone()).unwrap();
+        assert!(direct.report.clean(), "unfaulted bisect route must report clean");
+        assert_eq!(sol.eigenvalues, direct.eigenvalues, "threads={threads}");
+        assert_eq!(sol.x.as_slice(), direct.x.as_slice(), "threads={threads}");
+    }
+}
+
+#[test]
+fn mrrr_fault_through_coordinator_drains_cleanly() {
+    let coord = Coordinator::new(CoordinatorConfig { workers: 2, ..Default::default() });
+    for id in 0..6u64 {
+        let mut spec = inline_spec(44, 2, id);
+        spec.variant = Some(Variant::TD);
+        spec.tridiag = Some(gsyeig::TridiagKernel::Mrrr);
+        if id % 2 == 0 {
+            spec.faults = FaultPlan::seeded(id).inject(FaultSite::MrrrTree, 1);
+        }
+        coord.submit(Job { id, spec }).ok().unwrap();
+    }
+    coord.close();
+    let out = coord.run_to_completion();
+    assert_eq!(out.len(), 6);
+    for o in &out {
+        assert!(o.error.is_none(), "job {} failed: {:?}", o.id, o.error);
+        assert!(o.converged);
+        assert!(o.accuracy.residual < 1e-6, "job {}: residual {}", o.id, o.accuracy.residual);
+    }
+    assert_eq!(coord.metrics().failures, 0, "every MRRR fault must be absorbed in-stage");
 }
 
 #[test]
