@@ -1,16 +1,31 @@
-//! Kernel microbenchmarks: GFLOP/s of the hot-path BLAS/LAPACK routines and
-//! the PJRT round-trip latency — the baseline and tracking numbers for the
+//! Kernel microbenchmarks: GFLOP/s of the hot-path BLAS/LAPACK routines,
+//! the packed-vs-legacy GEMM sweep (→ `BENCH_gemm.json`), and the PJRT
+//! round-trip latency — the baseline and tracking numbers for the
 //! EXPERIMENTS.md §Perf iteration log.
+//!
+//!   cargo bench --bench kernels_micro             # full sweep (n ≤ 4096)
+//!   GSYEIG_SCALE=quick cargo bench --bench kernels_micro
 
 use std::time::Instant;
 
-use gsyeig::blas::{dgemm, dsymv, dtrsm, Diag, Side, Trans, Uplo};
+use gsyeig::bench::json::{maybe_emit, JsonObject};
+use gsyeig::blas::microkernel;
+use gsyeig::blas::pack;
+use gsyeig::blas::{
+    dgemm, dgemm_legacy_nn, dgemm_with_kernel, dsymv, dtrsm, Diag, Side, Trans, Uplo,
+};
 use gsyeig::lapack::potrf::dpotrf_upper;
 use gsyeig::lapack::sytrd::dsytrd_lower;
 use gsyeig::matrix::Matrix;
+use gsyeig::util::parallel::with_threads;
 use gsyeig::util::rng::Rng;
 
 fn time_gflops(name: &str, flops: f64, reps: usize, mut f: impl FnMut()) {
+    time_gflops_ret(name, flops, reps, &mut f);
+}
+
+/// Time `f`, print the row, and return the achieved GFLOP/s.
+fn time_gflops_ret(name: &str, flops: f64, reps: usize, f: &mut dyn FnMut()) -> f64 {
     // warmup
     f();
     let t0 = Instant::now();
@@ -18,12 +33,89 @@ fn time_gflops(name: &str, flops: f64, reps: usize, mut f: impl FnMut()) {
         f();
     }
     let dt = t0.elapsed().as_secs_f64() / reps as f64;
-    println!("{name:<28} {:>9.2} ms   {:>7.2} GFLOP/s", dt * 1e3, flops / dt / 1e9);
+    let gflops = flops / dt / 1e9;
+    println!("{name:<28} {:>9.2} ms   {gflops:>7.2} GFLOP/s", dt * 1e3);
+    gflops
+}
+
+/// ISSUE-9 acceptance sweep: the legacy blocked-axpy GEMM vs the packed
+/// GEBP path (portable and runtime-selected kernels), single-thread plus
+/// one ambient-threads leg, emitted as `BENCH_gemm.json` (schema v2).
+fn gemm_packed_vs_legacy_sweep(rng: &mut Rng) {
+    let quick = std::env::var("GSYEIG_SCALE").as_deref() == Ok("quick");
+    let sizes: &[usize] = if quick { &[256, 512] } else { &[256, 1024, 4096] };
+    let blocks = pack::blocks();
+    let kernel = microkernel::selected();
+    println!(
+        "--- packed vs legacy dgemm (kernel={} mc={} kc={} nc={}) ---",
+        kernel.name(),
+        blocks.mc,
+        blocks.kc,
+        blocks.nc
+    );
+    let mut obj = JsonObject::new();
+    obj.str("kernel", kernel.name());
+    obj.num("mc", blocks.mc as f64);
+    obj.num("kc", blocks.kc as f64);
+    obj.num("nc", blocks.nc as f64);
+    obj.bool("quick", quick);
+    for &n in sizes {
+        let a = Matrix::randn(n, n, rng);
+        let b = Matrix::randn(n, n, rng);
+        let mut c = Matrix::zeros(n, n);
+        let flops = 2.0 * (n as f64).powi(3);
+        let reps = if n >= 2048 { 1 } else { 3 };
+        let (a, b) = (a.as_slice(), b.as_slice());
+
+        let legacy = with_threads(1, || {
+            time_gflops_ret(&format!("gemm legacy 1t {n}"), flops, reps, &mut || {
+                dgemm_legacy_nn(n, n, n, 1.0, a, n, b, n, 0.0, c.as_mut_slice(), n);
+            })
+        });
+        let portable = with_threads(1, || {
+            time_gflops_ret(&format!("gemm packed/portable 1t {n}"), flops, reps, &mut || {
+                dgemm_with_kernel(
+                    microkernel::KernelKind::Portable,
+                    Trans::N,
+                    Trans::N,
+                    n,
+                    n,
+                    n,
+                    1.0,
+                    a,
+                    n,
+                    b,
+                    n,
+                    0.0,
+                    c.as_mut_slice(),
+                    n,
+                );
+            })
+        });
+        let native = with_threads(1, || {
+            time_gflops_ret(&format!("gemm packed/{} 1t {n}", kernel.name()), flops, reps, &mut || {
+                dgemm(Trans::N, Trans::N, n, n, n, 1.0, a, n, b, n, 0.0, c.as_mut_slice(), n);
+            })
+        });
+        let ambient =
+            time_gflops_ret(&format!("gemm packed ambient {n}"), flops, reps, &mut || {
+                dgemm(Trans::N, Trans::N, n, n, n, 1.0, a, n, b, n, 0.0, c.as_mut_slice(), n);
+            });
+        println!("    packed/native vs legacy @ n={n} (1t): {:.2}x", native / legacy.max(1e-12));
+        obj.num(&format!("n{n}_legacy_1t_gflops"), legacy);
+        obj.num(&format!("n{n}_packed_portable_1t_gflops"), portable);
+        obj.num(&format!("n{n}_packed_native_1t_gflops"), native);
+        obj.num(&format!("n{n}_packed_ambient_gflops"), ambient);
+        obj.num(&format!("n{n}_speedup_packed_vs_legacy_1t"), native / legacy.max(1e-12));
+    }
+    maybe_emit("gemm", &obj);
 }
 
 fn main() {
     let mut rng = Rng::new(7);
-    for n in [512usize, 1024] {
+    let quick = std::env::var("GSYEIG_SCALE").as_deref() == Ok("quick");
+    let ns: &[usize] = if quick { &[256] } else { &[512, 1024] };
+    for &n in ns {
         println!("--- n = {n} ---");
         let a = Matrix::randn(n, n, &mut rng);
         let b = Matrix::randn(n, n, &mut rng);
@@ -62,6 +154,7 @@ fn main() {
         });
     }
 
+    gemm_packed_vs_legacy_sweep(&mut rng);
     pjrt_roundtrip_microbench(&mut rng);
 }
 

@@ -1,30 +1,49 @@
-//! BLAS level 3: blocked matrix-matrix operations.
+//! BLAS level 3: Goto-style packed matrix-matrix operations.
 //!
-//! `dgemm` is the workhorse (GEBP-style i/p blocking with a 4-column axpy
-//! microkernel over contiguous columns); `dtrsm` is blocked on the
-//! triangular dimension with `dgemm` updates — these two carry GS2, BT1 and
-//! the Q-accumulations, i.e. every Level-3 row of the paper's Table 1.
+//! `dgemm` is the workhorse and runs the full GotoBLAS/GEBP layout
+//! (DESIGN.md §6 "Packed GEMM"): operands are packed into contiguous
+//! cache-blocked panels ([`crate::blas::pack`] — MR-row strips of `op(A)`,
+//! NR-column strips of `op(B)`, so packing absorbs both `Trans` flags) and
+//! driven by the 8×4 register-blocked microkernel
+//! ([`crate::blas::microkernel`] — AVX2/FMA, NEON, or the portable scalar
+//! reference, runtime-detected).  `dtrsm` is blocked on the triangular
+//! dimension and `dsyrk` on column blocks, both pushing their trailing
+//! updates through `dgemm` — these carry GS2, BT1 and the Q-accumulations,
+//! i.e. every Level-3 row of the paper's Table 1.
 //!
-//! Large `dgemm` calls split their C column panels across the ambient
-//! [`crate::util::parallel::ExecCtx`] — the multi-threaded-BLAS role of
-//! the paper's platform.  The ctx reaches here ambiently: solvers install
-//! their job ctx, so the same `dgemm` call site serves a 1-thread small
-//! job and an 8-thread DFT solve without a signature change.
-//! `dtrsm`/`dsyrk` inherit the parallelism through their trailing `dgemm`
-//! updates, so every blocked consumer (Cholesky, DSYGST, SBR,
-//! back-transform) scales without further changes.  Panel assignment is
-//! **static** (stealing is for ragged work; GEMM panels are uniform): each
-//! column of C is produced by exactly one worker with the same arithmetic
-//! as the serial loop, so results are bitwise independent of the thread
-//! count.
+//! The loop nest is `jc` (NC columns of C) → `pc` (KC depth, pack B panel)
+//! → `ic` (MC rows, pack A panel) → macro-kernel.  Inside the macro-kernel
+//! the **jr loop over packed-B strips** is what splits across the ambient
+//! [`crate::util::parallel::ExecCtx`]: all workers read the *same* packed
+//! A panel (the L2-resident operand) and write disjoint NR-column stripes
+//! of C.  The ctx reaches here ambiently — solvers install their job ctx,
+//! so one call site serves a 1-thread small job and an 8-thread DFT solve.
+//! Every `(transa, transb)` combination takes the same packed path, so all
+//! four parallelize identically (the legacy code left `(N,T)`/`(T,T)` on
+//! serial naive loops).
+//!
+//! **Determinism:** a C tile's value is produced by one microkernel
+//! invocation on packed strips whose contents depend only on the operands
+//! and the block sizes — never on the thread count or which worker ran the
+//! strip.  Results are therefore bitwise independent of the thread budget
+//! (pinned by `tests/gemm_conformance.rs` and `tests/prop_threading.rs`).
+//! Pack buffers lease from the thread-local scratch arena
+//! ([`parallel::scratch_f64`]); per-call FLOP rate and packed bytes are
+//! mirrored to the metrics registry (`gemm.mflops`, `gemm.pack_bytes`).
 
-use crate::util::parallel::{self, ExecCtx};
+use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::obs;
+use crate::util::parallel::{self, scratch_f64, ExecCtx};
+
+use super::microkernel::{self, KernelKind, MR, NR};
+use super::pack;
 use super::{Diag, Side, Trans, Uplo};
 
-/// Row-block (i) and depth-block (p) sizes for the GEBP gemm.  Tuned for a
-/// ~1 MiB L2: the A panel is MB*KB*8 = 512 KiB and the C column stripe
-/// MB*8 = 2 KiB per column.
+/// Row-block (i) and depth-block (p) sizes of the *legacy* axpy GEMM
+/// kernel, kept as the perf baseline (`dgemm_legacy_nn`) for the
+/// `kernels_micro` packed-vs-legacy sweep and as a second conformance
+/// reference.
 const MB: usize = 256;
 const KB: usize = 256;
 /// Triangular-block size for blocked `dtrsm`.
@@ -33,6 +52,24 @@ const TRSM_NB: usize = 64;
 /// (~2 MFLOP: roughly a millisecond of microkernel work — well above the
 /// scoped-thread spawn cost).
 const PAR_MIN_WORK: usize = 1 << 20;
+/// Below this many products a gemm skips packing entirely and runs the
+/// small direct loops: the per-tile hot path (taskpar tiles, narrow WY
+/// panels) must not pay two operand copies plus the ctx lookup for a few
+/// thousand flops.
+const PACK_MIN_WORK: usize = 1 << 13;
+
+/// Lifetime counters for the packed path: calls that packed, and parallel
+/// jr-regions forked.  Monotonic and process-wide — tests assert deltas.
+static STAT_PACKED_CALLS: AtomicU64 = AtomicU64::new(0);
+static STAT_PAR_REGIONS: AtomicU64 = AtomicU64::new(0);
+
+/// `(packed_calls, parallel_regions)` since process start.  Diagnostics /
+/// regression-test hook: `tests/gemm_conformance.rs` asserts all four
+/// `Trans` combinations bump both.
+#[doc(hidden)]
+pub fn gemm_stats() -> (u64, u64) {
+    (STAT_PACKED_CALLS.load(Ordering::Relaxed), STAT_PAR_REGIONS.load(Ordering::Relaxed))
+}
 
 /// C := alpha op(A) op(B) + beta C, C is m x n, op(A) m x k, op(B) k x n.
 #[allow(clippy::too_many_arguments)]
@@ -51,45 +88,108 @@ pub fn dgemm(
     c: &mut [f64],
     ldc: usize,
 ) {
-    // beta-scale C
-    if beta != 1.0 {
-        for j in 0..n {
-            let col = &mut c[j * ldc..j * ldc + m];
-            if beta == 0.0 {
-                col.fill(0.0);
-            } else {
-                for v in col.iter_mut() {
-                    *v *= beta;
-                }
-            }
-        }
-    }
+    scale_beta(beta, m, n, c, ldc);
     if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
         return;
     }
+    if m * n * k < PACK_MIN_WORK {
+        gemm_small(transa, transb, m, n, k, alpha, a, lda, b, ldb, c, ldc);
+        return;
+    }
+    dgemm_packed(microkernel::selected(), transa, transb, m, n, k, alpha, a, lda, b, ldb, c, ldc);
+}
+
+/// Full `dgemm` semantics with an explicit microkernel choice and the
+/// packed path forced (no small-gemm shortcut).  Conformance-test hook:
+/// lets `tests/gemm_conformance.rs` pit the portable reference against the
+/// runtime-selected SIMD kernel on identical packing.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_with_kernel(
+    kind: KernelKind,
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    scale_beta(beta, m, n, c, ldc);
+    if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    dgemm_packed(kind, transa, transb, m, n, k, alpha, a, lda, b, ldb, c, ldc);
+}
+
+/// The pre-packing blocked axpy GEMM (`(N,N)` only), kept verbatim as the
+/// perf baseline for `benches/kernels_micro.rs` packed-vs-legacy sweeps.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_legacy_nn(
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    scale_beta(beta, m, n, c, ldc);
+    if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    gemm_nn(m, n, k, alpha, a, lda, b, ldb, c, ldc);
+}
+
+/// C *= beta on the m x n window (beta == 0 writes zeros, clearing NaNs —
+/// BLAS semantics).
+fn scale_beta(beta: f64, m: usize, n: usize, c: &mut [f64], ldc: usize) {
+    if beta == 1.0 {
+        return;
+    }
+    for j in 0..n {
+        let col = &mut c[j * ldc..j * ldc + m];
+        if beta == 0.0 {
+            col.fill(0.0);
+        } else {
+            for v in col.iter_mut() {
+                *v *= beta;
+            }
+        }
+    }
+}
+
+/// Direct loops for tiny products (below [`PACK_MIN_WORK`]): no packing,
+/// no ctx lookup.  Assumes C is already beta-scaled and alpha != 0.
+#[allow(clippy::too_many_arguments)]
+fn gemm_small(
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
     match (transa, transb) {
-        (Trans::N, Trans::N) => {
-            // size short-circuit first: small GEMMs (the per-tile hot
-            // path) must not pay the thread-local ctx lookup
-            if m * n * k >= PAR_MIN_WORK && n >= 2 && parallel::current_threads() > 1 {
-                let ctx = ExecCtx::current();
-                par_columns(&ctx, m, n, c, ldc, |j0, ncols, panel| {
-                    gemm_nn(m, ncols, k, alpha, a, lda, &b[j0 * ldb..], ldb, panel, ldc);
-                });
-            } else {
-                gemm_nn(m, n, k, alpha, a, lda, b, ldb, c, ldc);
-            }
-        }
-        (Trans::T, Trans::N) => {
-            if m * n * k >= PAR_MIN_WORK && n >= 2 && parallel::current_threads() > 1 {
-                let ctx = ExecCtx::current();
-                par_columns(&ctx, m, n, c, ldc, |j0, ncols, panel| {
-                    gemm_tn(m, ncols, k, alpha, a, lda, &b[j0 * ldb..], ldb, panel, ldc);
-                });
-            } else {
-                gemm_tn(m, n, k, alpha, a, lda, b, ldb, c, ldc);
-            }
-        }
+        (Trans::N, Trans::N) => gemm_nn(m, n, k, alpha, a, lda, b, ldb, c, ldc),
+        (Trans::T, Trans::N) => gemm_tn(m, n, k, alpha, a, lda, b, ldb, c, ldc),
         (Trans::N, Trans::T) => {
             // op(B)[p,j] = B[j,p]: for fixed p, contiguous in j.
             for p in 0..k {
@@ -119,23 +219,137 @@ pub fn dgemm(
     }
 }
 
-/// Split the columns of C into contiguous panels (chunks that are whole
-/// multiples of `ldc`, so each panel is a disjoint `&mut` region) and run
-/// `f(first_col, ncols, panel)` on the pieces across `ctx`'s budget.
-fn par_columns<F>(ctx: &ExecCtx, m: usize, n: usize, c: &mut [f64], ldc: usize, f: F)
-where
-    F: Fn(usize, usize, &mut [f64]) + Sync,
-{
-    let t = ctx.threads().min(n);
-    let cols_per = n.div_ceil(t);
-    // trim to the exact extent gemm panels index so the last chunk has the
-    // expected (ncols-1)*ldc + m length
-    let used = &mut c[..(n - 1) * ldc + m];
-    ctx.parallel_chunks(used, cols_per * ldc, |ci, panel| {
-        let j0 = ci * cols_per;
-        let ncols = cols_per.min(n - j0);
-        f(j0, ncols, panel);
-    });
+/// The Goto/GEBP loop nest: jc over NC column panels (pack op(B)), pc over
+/// KC depth panels, ic over MC row panels (pack op(A)), then the
+/// macro-kernel [`gebp_strips`] over MRxNR tiles.  Packing absorbs both
+/// `Trans` flags, so all four combinations share this one nest.
+///
+/// Parallelism: when the call is big enough the jr loop (packed-B strips)
+/// of each (jc,pc,ic) region splits across the ambient [`ExecCtx`] — all
+/// workers stream the same packed A panel and own disjoint NR-column
+/// stripes of C.  The fork-or-not decision is made **once per call** on
+/// total m*n*k (not per region, whose size shrinks with autotuned MC and
+/// would flap).
+#[allow(clippy::too_many_arguments)]
+fn dgemm_packed(
+    kind: KernelKind,
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    let t0 = obs::clock::now_ns();
+    let pack::GemmBlocks { mc, kc, nc } = pack::blocks();
+    STAT_PACKED_CALLS.fetch_add(1, Ordering::Relaxed);
+
+    let go_parallel = m * n * k >= PAR_MIN_WORK && parallel::current_threads() > 1;
+    let ctx = if go_parallel { Some(ExecCtx::current()) } else { None };
+
+    // Pack buffers lease from the thread-local arena: steady-state reuse,
+    // no per-call allocation.  Strip counts round up so the last partial
+    // strip is zero-padded to full MR/NR width.
+    let mut bbuf = scratch_f64(kc * nc.min(n.next_multiple_of(NR)));
+    let mut abuf = scratch_f64(kc * mc.min(m.next_multiple_of(MR)));
+    let mut pack_bytes = 0u64;
+
+    for jc in (0..n).step_by(nc) {
+        let ncb = (jc + nc).min(n) - jc;
+        for pc in (0..k).step_by(kc) {
+            let kcb = (pc + kc).min(k) - pc;
+            let bp = &mut bbuf[..kcb * ncb.next_multiple_of(NR)];
+            pack::pack_b(transb, b, ldb, pc, kcb, jc, ncb, bp);
+            pack_bytes += (bp.len() * 8) as u64;
+            for ic in (0..m).step_by(mc) {
+                let mcb = (ic + mc).min(m) - ic;
+                let ap = &mut abuf[..kcb * mcb.next_multiple_of(MR)];
+                pack::pack_a(transa, a, lda, ic, mcb, pc, kcb, ap);
+                pack_bytes += (ap.len() * 8) as u64;
+
+                let njr = ncb.div_ceil(NR);
+                match &ctx {
+                    Some(ctx) if ncb > NR => {
+                        STAT_PAR_REGIONS.fetch_add(1, Ordering::Relaxed);
+                        // Whole NR strips per chunk: round the per-worker
+                        // column count up to a multiple of NR so no strip
+                        // straddles a chunk boundary.
+                        let tn = ctx.threads().min(njr).max(1);
+                        let cols_per = njr.div_ceil(tn) * NR;
+                        let used = &mut c[jc * ldc..(jc + ncb - 1) * ldc + ic + mcb];
+                        let (ap, bp) = (&ap[..], &bp[..]);
+                        ctx.parallel_chunks(used, cols_per * ldc, |ci, sub| {
+                            let j0 = ci * cols_per;
+                            let jn = cols_per.min(ncb - j0);
+                            gebp_strips(kind, alpha, ap, bp, mcb, kcb, ic, j0, jn, sub, ldc);
+                        });
+                    }
+                    _ => {
+                        let sub = &mut c[jc * ldc..(jc + ncb - 1) * ldc + ic + mcb];
+                        gebp_strips(kind, alpha, ap, bp, mcb, kcb, ic, 0, ncb, sub, ldc);
+                    }
+                }
+            }
+        }
+    }
+
+    let dur_ns = (obs::clock::since(t0).as_nanos() as u64).max(1);
+    let flops = 2 * (m as u64) * (n as u64) * (k as u64);
+    // MFLOP/s == flops / (ns / 1e9) / 1e6 == flops * 1e3 / ns.
+    let mflops = ((flops as u128 * 1000) / dur_ns as u128) as u64;
+    obs::metrics::record_gemm(mflops, pack_bytes);
+}
+
+/// Macro-kernel: run the microkernel over the jr strips `[j0, j0+jn)`
+/// (strip indices in columns, relative to the packed B panel) against all
+/// ir strips of the packed A panel, accumulating `alpha * tile` into the C
+/// window `sub`.  `sub` starts at column `j0`'s panel-local column 0 row
+/// offset; `ic` is the row offset of the A panel inside `sub`'s columns.
+#[allow(clippy::too_many_arguments)]
+fn gebp_strips(
+    kind: KernelKind,
+    alpha: f64,
+    ap: &[f64],
+    bp: &[f64],
+    mcb: usize,
+    kcb: usize,
+    ic: usize,
+    j0: usize,
+    jn: usize,
+    sub: &mut [f64],
+    ldc: usize,
+) {
+    debug_assert_eq!(j0 % NR, 0, "strip start must be NR-aligned");
+    let nir = mcb.div_ceil(MR);
+    let mut jr = 0;
+    while jr < jn {
+        let nr_eff = NR.min(jn - jr);
+        let s = (j0 + jr) / NR;
+        let bstrip = &bp[s * NR * kcb..(s + 1) * NR * kcb];
+        for ir in 0..nir {
+            let mr_eff = MR.min(mcb - ir * MR);
+            let astrip = &ap[ir * MR * kcb..(ir + 1) * MR * kcb];
+            let mut acc = [0.0f64; MR * NR];
+            microkernel::run(kind, kcb, astrip, bstrip, &mut acc);
+            // Write back only the valid mr_eff x nr_eff corner: the
+            // zero-padded lanes never touch C.
+            for j in 0..nr_eff {
+                let off = (jr + j) * ldc + ic + ir * MR;
+                let col = &mut sub[off..off + mr_eff];
+                let av = &acc[j * MR..j * MR + mr_eff];
+                for i in 0..mr_eff {
+                    col[i] += alpha * av[i];
+                }
+            }
+        }
+        jr += NR;
+    }
 }
 
 /// C += alpha op(A) B with A transposed: C[i,j] += alpha * dot(A[:,i],
@@ -300,7 +514,7 @@ pub fn dtrsm(
                 // panel (it lives in the same buffer as B), then one dgemm —
                 // the blocked-microkernel path carries the whole update.
                 if ks > 0 {
-                    let mut xk = vec![0.0; kw * n];
+                    let mut xk = scratch_f64(kw * n);
                     for j in 0..n {
                         xk[j * kw..j * kw + kw]
                             .copy_from_slice(&b[ks + j * ldb..ks + j * ldb + kw]);
@@ -321,24 +535,32 @@ pub fn dtrsm(
                     solve_small_upper_t(diag, kw, &a[ks + ks * lda..], lda, &mut b[ks + j * ldb..ks + j * ldb + kw]);
                 }
                 // B[ke.., :] -= U[ks..ke, ke..]ᵀ X_k: copy X_k to a scratch
-                // panel, transpose the U block once, and run the update
-                // through the dgemm microkernel (the GS2 hot path).
+                // panel and run the update as dgemm(T, N) — GEMM packing
+                // absorbs the transpose, so the explicit Uᵀ buffer the
+                // pre-packing code built here is gone (the GS2 hot path).
                 if ke < m {
                     let rest = m - ke;
-                    let mut xk = vec![0.0; kw * n];
+                    let mut xk = scratch_f64(kw * n);
                     for j in 0..n {
                         xk[j * kw..j * kw + kw]
                             .copy_from_slice(&b[ks + j * ldb..ks + j * ldb + kw]);
                     }
-                    // Uᵀ block: (rest x kw) from U[ks..ke, ke..m]
-                    let mut ut = vec![0.0; rest * kw];
-                    for c in 0..rest {
-                        for r in 0..kw {
-                            ut[c + r * rest] = a[ks + r + (ke + c) * lda];
-                        }
-                    }
                     let (_, brest) = b.split_at_mut(ke);
-                    dgemm(Trans::N, Trans::N, rest, n, kw, -1.0, &ut, rest, &xk, kw, 1.0, brest, ldb);
+                    dgemm(
+                        Trans::T,
+                        Trans::N,
+                        rest,
+                        n,
+                        kw,
+                        -1.0,
+                        &a[ks + ke * lda..],
+                        lda,
+                        &xk,
+                        kw,
+                        1.0,
+                        brest,
+                        ldb,
+                    );
                 }
             }
         }
@@ -531,20 +753,15 @@ pub fn dsyrk(
     match trans {
         Trans::T => {
             if n >= 32 && k >= 32 {
-                // Fast path (the blocked-Cholesky trailing update): form Aᵀ
-                // once and push the work through the dgemm NN microkernel in
-                // 64-wide column blocks, accumulating only the triangle.
-                // The sliver of extra flops (half a diagonal block per
-                // column block) is noise next to the ~4x kernel speedup.
-                let mut at = vec![0.0; n * k];
-                for j in 0..n {
-                    let col = &a[j * lda..j * lda + k];
-                    for (p, &v) in col.iter().enumerate() {
-                        at[j + p * n] = v;
-                    }
-                }
+                // Fast path (the blocked-Cholesky trailing update): push the
+                // work through dgemm(T, N) in 64-wide column blocks,
+                // accumulating only the triangle.  GEMM packing absorbs the
+                // transpose, so the explicit n x k Aᵀ buffer the pre-packing
+                // code formed here is gone.  The sliver of extra flops (half
+                // a diagonal block per column block) is noise next to the
+                // packed-kernel speedup.
                 const JB: usize = 64;
-                let mut scratch = vec![0.0; n * JB];
+                let mut scratch = scratch_f64(n * JB);
                 for jb in (0..n).step_by(JB) {
                     let je = (jb + JB).min(n);
                     let (row0, rows) = match uplo {
@@ -553,14 +770,14 @@ pub fn dsyrk(
                     };
                     let sc = &mut scratch[..rows * (je - jb)];
                     dgemm(
-                        Trans::N,
+                        Trans::T,
                         Trans::N,
                         rows,
                         je - jb,
                         k,
                         alpha,
-                        &at[row0..],
-                        n,
+                        &a[row0 * lda..],
+                        lda,
                         &a[jb * lda..],
                         lda,
                         0.0,

@@ -1,0 +1,357 @@
+//! The register-blocked GEMM microkernel: an 8×4 tile of C computed from
+//! packed A/B panels (DESIGN.md §6 "Packed GEMM").
+//!
+//! This is the innermost loop of every Level-3 path — the role GotoBLAS's
+//! hand-written assembly kernel plays under the paper's stage breakdown.
+//! Three implementations share one contract:
+//!
+//! * **portable** — unrolled scalar code over fixed-size slices, written so
+//!   LLVM can auto-vectorize.  This is the *conformance reference*: the
+//!   SIMD kernels must agree with it to a `c·k·ε` normwise bound
+//!   (`tests/gemm_conformance.rs`), differing only through FMA rounding.
+//! * **avx2** — `std::arch` AVX2+FMA on x86_64: 8 `ymm` accumulators
+//!   (2 per C column), one broadcast per B element, two fused
+//!   multiply-adds per column per k-step.
+//! * **neon** — `std::arch` NEON on aarch64: 16 `float64x2_t`
+//!   accumulators (4 per C column).
+//!
+//! ## Contract
+//!
+//! `run(kind, kc, ap, bp, acc)` computes the raw tile product
+//! `acc[j*MR + i] = Σ_p ap[p*MR + i] · bp[p*NR + j]` for the full 8×4 tile.
+//! `acc` must be zeroed on entry; `alpha` scaling and the `+= C` write-back
+//! stay in the caller, so every kernel performs the *same* per-tile
+//! arithmetic in the same `p` order — the bitwise thread-count-independence
+//! contract of `blas::level3` does not depend on which kernel is selected.
+//! Edge tiles are handled by zero-padding in the packing layer
+//! ([`crate::blas::pack`]), never here: the kernel always runs full-width,
+//! and the caller writes back only the `mr_eff × nr_eff` valid entries.
+//!
+//! ## Selection
+//!
+//! [`selected`] picks the widest ISA the running CPU reports, once per
+//! process.  `GSYEIG_GEMM_KERNEL=portable` forces the scalar reference
+//! (CI keeps the fallback honest this way); `=native` (or unset) uses
+//! detection.  The detection path can never hand out an ISA the host lacks:
+//! [`detect`] only returns a SIMD kind after the corresponding
+//! `is_*_feature_detected!` check succeeds, pinned by the `#[cfg]`-gated
+//! tests below.
+
+use std::sync::OnceLock;
+
+/// Microkernel tile height (rows of C per register block).
+pub const MR: usize = 8;
+/// Microkernel tile width (columns of C per register block).
+pub const NR: usize = 4;
+
+/// One microkernel accumulator tile, column-major: `acc[j * MR + i]`.
+pub type Acc = [f64; MR * NR];
+
+/// Which microkernel implementation drives the packed GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Unrolled scalar reference (always available, conformance oracle).
+    Portable,
+    /// AVX2 + FMA, x86_64 only.
+    Avx2,
+    /// NEON, aarch64 only.
+    Neon,
+}
+
+impl KernelKind {
+    /// Stable lower-case name for logs, benches and BENCH json.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Portable => "portable",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+}
+
+/// The widest microkernel the running CPU supports.  A SIMD kind is only
+/// ever returned behind a successful runtime feature check, so dispatching
+/// on the result cannot execute an unavailable ISA.
+pub fn detect() -> KernelKind {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            return KernelKind::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return KernelKind::Neon;
+        }
+    }
+    KernelKind::Portable
+}
+
+/// Resolve the `GSYEIG_GEMM_KERNEL` policy against a detection result.
+/// Pure so the env contract is unit-testable without process-global state:
+/// `portable` forces the scalar kernel, `native` (or unset) trusts
+/// detection, anything else warns and falls back to detection.
+pub fn select(env: Option<&str>, detected: KernelKind) -> KernelKind {
+    match env {
+        Some("portable") => KernelKind::Portable,
+        Some("native") | None => detected,
+        Some(other) => {
+            eprintln!(
+                "warning: GSYEIG_GEMM_KERNEL={other} not recognized \
+                 (expected portable|native); using native detection"
+            );
+            detected
+        }
+    }
+}
+
+/// The process-wide kernel choice: `GSYEIG_GEMM_KERNEL` policy applied to
+/// [`detect`], decided once on first use.
+pub fn selected() -> KernelKind {
+    static SELECTED: OnceLock<KernelKind> = OnceLock::new();
+    *SELECTED.get_or_init(|| {
+        select(std::env::var("GSYEIG_GEMM_KERNEL").ok().as_deref(), detect())
+    })
+}
+
+/// Run the `kind` microkernel: `acc[j*MR+i] += Σ_p ap[p*MR+i]·bp[p*NR+j]`
+/// over the full 8×4 tile (`acc` zeroed by the caller).
+#[inline]
+pub fn run(kind: KernelKind, kc: usize, ap: &[f64], bp: &[f64], acc: &mut Acc) {
+    debug_assert!(ap.len() >= kc * MR, "packed A strip too short: {} < {}", ap.len(), kc * MR);
+    debug_assert!(bp.len() >= kc * NR, "packed B strip too short: {} < {}", bp.len(), kc * NR);
+    match kind {
+        KernelKind::Portable => kernel_portable(kc, ap, bp, acc),
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => {
+            // SAFETY: `Avx2` is only constructed by `detect()` after the
+            // avx2+fma runtime checks passed (or by tests that perform the
+            // same check); panel lengths are debug_asserted above and
+            // guaranteed by the packing layer.
+            unsafe { x86::kernel_avx2(kc, ap, bp, acc) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => {
+            // SAFETY: `Neon` is only constructed by `detect()` after the
+            // neon runtime check passed; panel bounds as above.
+            unsafe { arm::kernel_neon(kc, ap, bp, acc) }
+        }
+        // A SIMD kind can leak across architectures only through explicit
+        // test construction; degrade to the reference instead of UB.
+        #[allow(unreachable_patterns)]
+        _ => kernel_portable(kc, ap, bp, acc),
+    }
+}
+
+/// Scalar reference kernel: plain mul+add (no FMA contraction), fixed-width
+/// inner loops over the packed strips so LLVM can keep the 32-element
+/// accumulator in registers and auto-vectorize.
+fn kernel_portable(kc: usize, ap: &[f64], bp: &[f64], acc: &mut Acc) {
+    for p in 0..kc {
+        let a = &ap[p * MR..p * MR + MR];
+        let b = &bp[p * NR..p * NR + NR];
+        for (j, &bj) in b.iter().enumerate() {
+            let col = &mut acc[j * MR..(j + 1) * MR];
+            for (cv, &av) in col.iter_mut().zip(a) {
+                *cv += av * bj;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{Acc, MR, NR};
+    use std::arch::x86_64::*;
+
+    /// AVX2+FMA 8×4 kernel: accumulators `cRJ` hold rows `4R..4R+4` of
+    /// C column `J`.
+    ///
+    /// # Safety
+    ///
+    /// Caller must guarantee the CPU supports AVX2 and FMA, and that
+    /// `ap`/`bp` hold at least `kc*MR` / `kc*NR` elements.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn kernel_avx2(kc: usize, ap: &[f64], bp: &[f64], acc: &mut Acc) {
+        debug_assert!(ap.len() >= kc * MR);
+        debug_assert!(bp.len() >= kc * NR);
+        let mut c00 = _mm256_setzero_pd();
+        let mut c10 = _mm256_setzero_pd();
+        let mut c01 = _mm256_setzero_pd();
+        let mut c11 = _mm256_setzero_pd();
+        let mut c02 = _mm256_setzero_pd();
+        let mut c12 = _mm256_setzero_pd();
+        let mut c03 = _mm256_setzero_pd();
+        let mut c13 = _mm256_setzero_pd();
+        let a = ap.as_ptr();
+        let b = bp.as_ptr();
+        for p in 0..kc {
+            let a0 = _mm256_loadu_pd(a.add(p * MR));
+            let a1 = _mm256_loadu_pd(a.add(p * MR + 4));
+            let b0 = _mm256_set1_pd(*b.add(p * NR));
+            c00 = _mm256_fmadd_pd(a0, b0, c00);
+            c10 = _mm256_fmadd_pd(a1, b0, c10);
+            let b1 = _mm256_set1_pd(*b.add(p * NR + 1));
+            c01 = _mm256_fmadd_pd(a0, b1, c01);
+            c11 = _mm256_fmadd_pd(a1, b1, c11);
+            let b2 = _mm256_set1_pd(*b.add(p * NR + 2));
+            c02 = _mm256_fmadd_pd(a0, b2, c02);
+            c12 = _mm256_fmadd_pd(a1, b2, c12);
+            let b3 = _mm256_set1_pd(*b.add(p * NR + 3));
+            c03 = _mm256_fmadd_pd(a0, b3, c03);
+            c13 = _mm256_fmadd_pd(a1, b3, c13);
+        }
+        let out = acc.as_mut_ptr();
+        _mm256_storeu_pd(out, c00);
+        _mm256_storeu_pd(out.add(4), c10);
+        _mm256_storeu_pd(out.add(MR), c01);
+        _mm256_storeu_pd(out.add(MR + 4), c11);
+        _mm256_storeu_pd(out.add(2 * MR), c02);
+        _mm256_storeu_pd(out.add(2 * MR + 4), c12);
+        _mm256_storeu_pd(out.add(3 * MR), c03);
+        _mm256_storeu_pd(out.add(3 * MR + 4), c13);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{Acc, MR, NR};
+    use std::arch::aarch64::*;
+
+    /// NEON 8×4 kernel: 16 `float64x2_t` accumulators (4 row-pairs per
+    /// C column) — fits comfortably in the 32 SIMD registers.
+    ///
+    /// # Safety
+    ///
+    /// Caller must guarantee NEON support and that `ap`/`bp` hold at least
+    /// `kc*MR` / `kc*NR` elements.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn kernel_neon(kc: usize, ap: &[f64], bp: &[f64], acc: &mut Acc) {
+        debug_assert!(ap.len() >= kc * MR);
+        debug_assert!(bp.len() >= kc * NR);
+        let mut c: [[float64x2_t; MR / 2]; NR] = [[vdupq_n_f64(0.0); MR / 2]; NR];
+        let a = ap.as_ptr();
+        let b = bp.as_ptr();
+        for p in 0..kc {
+            let a0 = vld1q_f64(a.add(p * MR));
+            let a1 = vld1q_f64(a.add(p * MR + 2));
+            let a2 = vld1q_f64(a.add(p * MR + 4));
+            let a3 = vld1q_f64(a.add(p * MR + 6));
+            for (j, cj) in c.iter_mut().enumerate() {
+                let bj = vdupq_n_f64(*b.add(p * NR + j));
+                cj[0] = vfmaq_f64(cj[0], a0, bj);
+                cj[1] = vfmaq_f64(cj[1], a1, bj);
+                cj[2] = vfmaq_f64(cj[2], a2, bj);
+                cj[3] = vfmaq_f64(cj[3], a3, bj);
+            }
+        }
+        let out = acc.as_mut_ptr();
+        for (j, cj) in c.iter().enumerate() {
+            for (r, &v) in cj.iter().enumerate() {
+                vst1q_f64(out.add(j * MR + r * 2), v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar oracle for one tile, independent of the kernel loop shapes.
+    fn tile_ref(kc: usize, ap: &[f64], bp: &[f64]) -> Acc {
+        let mut acc = [0.0; MR * NR];
+        for p in 0..kc {
+            for j in 0..NR {
+                for i in 0..MR {
+                    acc[j * MR + i] += ap[p * MR + i] * bp[p * NR + j];
+                }
+            }
+        }
+        acc
+    }
+
+    fn panels(kc: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut ap = vec![0.0; kc * MR];
+        let mut bp = vec![0.0; kc * NR];
+        rng.fill_normal(&mut ap);
+        rng.fill_normal(&mut bp);
+        (ap, bp)
+    }
+
+    #[test]
+    fn portable_matches_tile_oracle_exactly() {
+        for kc in [0, 1, 2, 7, 64, 257] {
+            let (ap, bp) = panels(kc, 11 + kc as u64);
+            let mut acc = [0.0; MR * NR];
+            run(KernelKind::Portable, kc, &ap, &bp, &mut acc);
+            let want = tile_ref(kc, &ap, &bp);
+            // same operations in the same order: bitwise
+            assert_eq!(acc, want, "kc={kc}");
+        }
+    }
+
+    #[test]
+    fn selected_kernel_agrees_with_portable() {
+        // FMA contracts mul+add, so agreement is normwise, not bitwise
+        for kc in [1, 3, 33, 256] {
+            let (ap, bp) = panels(kc, 29 + kc as u64);
+            let mut port = [0.0; MR * NR];
+            run(KernelKind::Portable, kc, &ap, &bp, &mut port);
+            let mut nat = [0.0; MR * NR];
+            run(detect(), kc, &ap, &bp, &mut nat);
+            let tol = 16.0 * kc.max(1) as f64 * f64::EPSILON * 16.0;
+            for (i, (&p, &n)) in port.iter().zip(nat.iter()).enumerate() {
+                assert!((p - n).abs() <= tol, "kc={kc} slot {i}: {p} vs {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn select_env_policy() {
+        assert_eq!(select(Some("portable"), KernelKind::Avx2), KernelKind::Portable);
+        assert_eq!(select(Some("portable"), KernelKind::Neon), KernelKind::Portable);
+        assert_eq!(select(Some("native"), detect()), detect());
+        assert_eq!(select(None, detect()), detect());
+        // unknown value falls back to detection rather than panicking
+        assert_eq!(select(Some("turbo"), KernelKind::Portable), KernelKind::Portable);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn detection_never_selects_unavailable_isa_x86() {
+        match detect() {
+            KernelKind::Avx2 => {
+                assert!(std::is_x86_feature_detected!("avx2"));
+                assert!(std::is_x86_feature_detected!("fma"));
+            }
+            KernelKind::Portable => {
+                // at least one of the required features is genuinely absent
+                assert!(
+                    !std::is_x86_feature_detected!("avx2")
+                        || !std::is_x86_feature_detected!("fma")
+                );
+            }
+            KernelKind::Neon => panic!("NEON must never be detected on x86_64"),
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn detection_never_selects_unavailable_isa_aarch64() {
+        match detect() {
+            KernelKind::Neon => assert!(std::arch::is_aarch64_feature_detected!("neon")),
+            KernelKind::Portable => {}
+            KernelKind::Avx2 => panic!("AVX2 must never be detected on aarch64"),
+        }
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(KernelKind::Portable.name(), "portable");
+        assert_eq!(KernelKind::Avx2.name(), "avx2");
+        assert_eq!(KernelKind::Neon.name(), "neon");
+    }
+}

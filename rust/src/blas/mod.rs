@@ -11,6 +11,8 @@
 pub mod level1;
 pub mod level2;
 pub mod level3;
+pub mod microkernel;
+pub mod pack;
 
 pub use level1::*;
 pub use level2::*;

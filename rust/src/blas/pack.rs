@@ -1,0 +1,382 @@
+//! Cache-blocked panel packing for the Goto/GEBP GEMM (DESIGN.md §6).
+//!
+//! The packed layout is what lets the microkernel stream both operands at
+//! unit stride regardless of the caller's `Trans` flags and leading
+//! dimensions — packing *absorbs the transpose*, so `(N,T)` and `(T,T)`
+//! run the same macro-kernel as `(N,N)`:
+//!
+//! ```text
+//!   A block (mc × kc)  →  ⌈mc/MR⌉ row strips, each kc×MR contiguous:
+//!     ap[strip ir][p*MR + i] = op(A)[ic + ir*MR + i, pc + p]   (zero-padded
+//!                                                               rows past mc)
+//!   B block (kc × nc)  →  ⌈nc/NR⌉ column strips, each kc×NR contiguous:
+//!     bp[strip jr][p*NR + j] = op(B)[pc + p, jc + jr*NR + j]   (zero-padded
+//!                                                               cols past nc)
+//! ```
+//!
+//! Zero padding keeps the microkernel full-width on edge tiles; the padded
+//! lanes are never written back to C, and because they only ever contribute
+//! `x·0` terms to lanes that *are* written back — they never do, the
+//! accumulator slots are disjoint — edge handling cannot perturb the valid
+//! entries.
+//!
+//! ## Block sizes
+//!
+//! `(MC, KC, NC)` follow the classic GEBP targets: the packed A panel
+//! (`MC·KC` doubles) should fill about half of the innermost private cache
+//! so it survives the whole jr sweep; `KC·NR` of B streams from the next
+//! level; `NC` bounds the packed-B buffer.  [`blocks`] resolves them once
+//! per process: the `GSYEIG_GEMM_BLOCKS=mc,kc,nc` override if set, else a
+//! short cache-probe sweep ([`autotune`]) that times a strided reduction
+//! over growing working sets and sizes `MC` to the last set that still ran
+//! at near-L1/L2 speed.  Block sizes change partial-sum grouping (each KC
+//! block's contribution is accumulated into C separately), so they are
+//! fixed for the life of the process — results stay bitwise reproducible
+//! within a run at any thread count, though they may differ across hosts
+//! with different detected cache sizes (same contract as any tuned BLAS).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::microkernel::{MR, NR};
+use super::Trans;
+
+/// GEBP blocking parameters, normalized (`mc % MR == 0`, `nc % NR == 0`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmBlocks {
+    /// Rows of A packed per panel (L2-resident working set).
+    pub mc: usize,
+    /// Depth of one packed panel pair (k-extent per accumulation pass).
+    pub kc: usize,
+    /// Columns of B packed per panel (bounds the packed-B buffer).
+    pub nc: usize,
+}
+
+/// Fallback blocking when probing is unavailable or implausible: A panel
+/// 256×256 doubles = 512 KiB, the tuning the legacy kernel shipped with.
+const DEFAULT_BLOCKS: GemmBlocks = GemmBlocks { mc: 256, kc: 256, nc: 2048 };
+
+fn normalize(mc: usize, kc: usize, nc: usize) -> GemmBlocks {
+    GemmBlocks {
+        mc: (mc.clamp(MR, 1024) / MR) * MR,
+        kc: kc.clamp(8, 1024),
+        nc: (nc.clamp(NR, 1 << 14) / NR) * NR,
+    }
+}
+
+/// Parse a `GSYEIG_GEMM_BLOCKS=mc,kc,nc` override (normalized to the MR/NR
+/// grid); `None` when the string is not three positive integers.
+pub fn parse_blocks(s: &str) -> Option<GemmBlocks> {
+    let mut it = s.split(',').map(|t| t.trim().parse::<usize>().ok());
+    let mc = it.next().flatten()?;
+    let kc = it.next().flatten()?;
+    let nc = it.next().flatten()?;
+    if it.next().is_some() || mc == 0 || kc == 0 || nc == 0 {
+        return None;
+    }
+    Some(normalize(mc, kc, nc))
+}
+
+/// The process-wide GEBP block sizes: env override, else cache-probe
+/// autotune, decided once on first use.
+pub fn blocks() -> GemmBlocks {
+    static BLOCKS: OnceLock<GemmBlocks> = OnceLock::new();
+    *BLOCKS.get_or_init(|| {
+        if let Ok(s) = std::env::var("GSYEIG_GEMM_BLOCKS") {
+            if let Some(b) = parse_blocks(&s) {
+                return b;
+            }
+            eprintln!(
+                "warning: GSYEIG_GEMM_BLOCKS={s:?} not parseable as mc,kc,nc; autotuning"
+            );
+        }
+        autotune()
+    })
+}
+
+/// Size `MC` from a cache probe: the packed A panel (`mc·kc` doubles)
+/// targets half of the detected fast-cache capacity, so it survives being
+/// re-read by every jr strip of the B panel.
+fn autotune() -> GemmBlocks {
+    let cache = probe_cache_bytes();
+    let kc = DEFAULT_BLOCKS.kc;
+    let mc = cache / 2 / (kc * std::mem::size_of::<f64>());
+    normalize(mc.max(MR), kc, DEFAULT_BLOCKS.nc)
+}
+
+/// Probe the fast-cache capacity with a strided-read sweep: time a
+/// line-strided reduction over working sets from 128 KiB to 2 MiB and
+/// report the largest set whose per-access cost stays within 45% of the
+/// smallest set's.  One-shot and cheap (a few ms); deliberately coarse —
+/// it only has to land `MC` within a factor of two of ideal, and any
+/// misreading affects speed, never results.
+fn probe_cache_bytes() -> usize {
+    const SIZES: [usize; 5] = [128 << 10, 256 << 10, 512 << 10, 1 << 20, 2 << 20];
+    const LINE_ELEMS: usize = 8; // one 64-byte cache line per access
+    let buf: Vec<f64> = vec![1.0; SIZES[SIZES.len() - 1] / std::mem::size_of::<f64>()];
+    let mut best = SIZES[0];
+    let mut base_ns = 0.0f64;
+    let mut sink = 0.0f64;
+    for (idx, &bytes) in SIZES.iter().enumerate() {
+        let n = bytes / std::mem::size_of::<f64>();
+        let slice = &buf[..n];
+        // warm pass: fault pages and populate the cache
+        sink += strided_sum(slice, LINE_ELEMS);
+        // enough passes for ~8 MiB of traffic per size point
+        let reps = ((8 << 20) / bytes).max(3);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            sink += strided_sum(slice, LINE_ELEMS);
+        }
+        let accesses = (reps * (n / LINE_ELEMS)).max(1);
+        let ns = t0.elapsed().as_nanos() as f64 / accesses as f64;
+        if idx == 0 {
+            base_ns = ns.max(0.01);
+            best = bytes;
+        } else if ns <= 1.45 * base_ns {
+            best = bytes;
+        } else {
+            break;
+        }
+    }
+    std::hint::black_box(sink);
+    best
+}
+
+#[inline(never)]
+fn strided_sum(slice: &[f64], stride: usize) -> f64 {
+    let mut acc = 0.0;
+    let mut i = 0;
+    while i < slice.len() {
+        acc += slice[i];
+        i += stride;
+    }
+    std::hint::black_box(acc)
+}
+
+/// Pack the `mcb × kcb` block of `op(A)` at (`ic`, `pc`) into MR-row
+/// strips: `buf[ir*MR*kcb + p*MR + i] = op(A)[ic + ir*MR + i, pc + p]`,
+/// rows past `mcb` zero-padded.  `buf` needs `⌈mcb/MR⌉·MR·kcb` elements
+/// and is fully overwritten.
+pub fn pack_a(
+    trans: Trans,
+    a: &[f64],
+    lda: usize,
+    ic: usize,
+    mcb: usize,
+    pc: usize,
+    kcb: usize,
+    buf: &mut [f64],
+) {
+    let nir = mcb.div_ceil(MR);
+    debug_assert!(buf.len() >= nir * MR * kcb, "pack_a buffer too small");
+    for ir in 0..nir {
+        let i0 = ir * MR;
+        let rows = MR.min(mcb - i0);
+        let dst_base = ir * MR * kcb;
+        match trans {
+            Trans::N => {
+                // op(A)[ic+i, pc+p] = a[(ic+i) + (pc+p)*lda]: rows of one
+                // strip are contiguous in the source column
+                for p in 0..kcb {
+                    let src = &a[ic + i0 + (pc + p) * lda..ic + i0 + (pc + p) * lda + rows];
+                    let dst = &mut buf[dst_base + p * MR..dst_base + p * MR + MR];
+                    dst[..rows].copy_from_slice(src);
+                    dst[rows..].fill(0.0);
+                }
+            }
+            Trans::T => {
+                // op(A)[ic+i, pc+p] = a[(pc+p) + (ic+i)*lda]: the k-extent
+                // is contiguous in the source column — the transpose is
+                // absorbed by scattering it across the strip
+                for i in 0..rows {
+                    let col = ic + i0 + i;
+                    let src = &a[pc + col * lda..pc + col * lda + kcb];
+                    for (p, &v) in src.iter().enumerate() {
+                        buf[dst_base + p * MR + i] = v;
+                    }
+                }
+                for i in rows..MR {
+                    for p in 0..kcb {
+                        buf[dst_base + p * MR + i] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `kcb × ncb` block of `op(B)` at (`pc`, `jc`) into NR-column
+/// strips: `buf[jr*NR*kcb + p*NR + j] = op(B)[pc + p, jc + jr*NR + j]`,
+/// columns past `ncb` zero-padded.  `buf` needs `⌈ncb/NR⌉·NR·kcb`
+/// elements and is fully overwritten.
+pub fn pack_b(
+    trans: Trans,
+    b: &[f64],
+    ldb: usize,
+    pc: usize,
+    kcb: usize,
+    jc: usize,
+    ncb: usize,
+    buf: &mut [f64],
+) {
+    let njr = ncb.div_ceil(NR);
+    debug_assert!(buf.len() >= njr * NR * kcb, "pack_b buffer too small");
+    for jr in 0..njr {
+        let j0 = jr * NR;
+        let cols = NR.min(ncb - j0);
+        let dst_base = jr * NR * kcb;
+        match trans {
+            Trans::N => {
+                // op(B)[pc+p, jc+j] = b[(pc+p) + (jc+j)*ldb]: k-extent
+                // contiguous in the source column, scattered across the strip
+                for j in 0..cols {
+                    let col = jc + j0 + j;
+                    let src = &b[pc + col * ldb..pc + col * ldb + kcb];
+                    for (p, &v) in src.iter().enumerate() {
+                        buf[dst_base + p * NR + j] = v;
+                    }
+                }
+                for j in cols..NR {
+                    for p in 0..kcb {
+                        buf[dst_base + p * NR + j] = 0.0;
+                    }
+                }
+            }
+            Trans::T => {
+                // op(B)[pc+p, jc+j] = b[(jc+j) + (pc+p)*ldb]: one strip row
+                // is contiguous in the source column (transpose absorbed)
+                for p in 0..kcb {
+                    let src = &b[jc + j0 + (pc + p) * ldb..jc + j0 + (pc + p) * ldb + cols];
+                    let dst = &mut buf[dst_base + p * NR..dst_base + p * NR + NR];
+                    dst[..cols].copy_from_slice(src);
+                    dst[cols..].fill(0.0);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// op(A)[r, c] oracle straight from the Trans definition.
+    fn op_at(trans: Trans, a: &[f64], ld: usize, r: usize, c: usize) -> f64 {
+        match trans {
+            Trans::N => a[r + c * ld],
+            Trans::T => a[c + r * ld],
+        }
+    }
+
+    #[test]
+    fn pack_a_layout_matches_definition() {
+        let mut rng = Rng::new(3);
+        // op(A) is 13×9 (m×k); storage depends on trans, ld padded by 2
+        let (m, k) = (13usize, 9usize);
+        for trans in [Trans::N, Trans::T] {
+            let (rows, cols) = match trans {
+                Trans::N => (m, k),
+                Trans::T => (k, m),
+            };
+            let ld = rows + 2;
+            let mut a = vec![f64::NAN; ld * cols];
+            for c in 0..cols {
+                for r in 0..rows {
+                    a[r + c * ld] = rng.normal();
+                }
+            }
+            // a sub-block with non-zero origin and ragged MR edge
+            let (ic, mcb, pc, kcb) = (2usize, 11usize, 1usize, 7usize);
+            let nir = mcb.div_ceil(MR);
+            let mut buf = vec![f64::NAN; nir * MR * kcb];
+            pack_a(trans, &a, ld, ic, mcb, pc, kcb, &mut buf);
+            for ir in 0..nir {
+                for p in 0..kcb {
+                    for i in 0..MR {
+                        let got = buf[ir * MR * kcb + p * MR + i];
+                        let want = if ir * MR + i < mcb {
+                            op_at(trans, &a, ld, ic + ir * MR + i, pc + p)
+                        } else {
+                            0.0
+                        };
+                        assert_eq!(got, want, "{trans:?} ir={ir} p={p} i={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_layout_matches_definition() {
+        let mut rng = Rng::new(4);
+        // op(B) is 9×10 (k×n)
+        let (k, n) = (9usize, 10usize);
+        for trans in [Trans::N, Trans::T] {
+            let (rows, cols) = match trans {
+                Trans::N => (k, n),
+                Trans::T => (n, k),
+            };
+            let ld = rows + 3;
+            let mut b = vec![f64::NAN; ld * cols];
+            for c in 0..cols {
+                for r in 0..rows {
+                    b[r + c * ld] = rng.normal();
+                }
+            }
+            let (pc, kcb, jc, ncb) = (1usize, 7usize, 3usize, 6usize);
+            let njr = ncb.div_ceil(NR);
+            let mut buf = vec![f64::NAN; njr * NR * kcb];
+            pack_b(trans, &b, ld, pc, kcb, jc, ncb, &mut buf);
+            for jr in 0..njr {
+                for p in 0..kcb {
+                    for j in 0..NR {
+                        let got = buf[jr * NR * kcb + p * NR + j];
+                        let want = if jr * NR + j < ncb {
+                            op_at(trans, &b, ld, pc + p, jc + jr * NR + j)
+                        } else {
+                            0.0
+                        };
+                        assert_eq!(got, want, "{trans:?} jr={jr} p={p} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_blocks_contract() {
+        assert_eq!(
+            parse_blocks("256,256,2048"),
+            Some(GemmBlocks { mc: 256, kc: 256, nc: 2048 })
+        );
+        // normalization: mc to MR grid, nc to NR grid, kc clamped
+        let b = parse_blocks("100, 4, 1030").unwrap();
+        assert_eq!(b.mc % MR, 0);
+        assert!(b.mc >= MR && b.kc >= 8 && b.nc % NR == 0);
+        assert_eq!(parse_blocks(""), None);
+        assert_eq!(parse_blocks("1,2"), None);
+        assert_eq!(parse_blocks("1,2,3,4"), None);
+        assert_eq!(parse_blocks("a,b,c"), None);
+        assert_eq!(parse_blocks("0,256,2048"), None);
+    }
+
+    #[test]
+    fn blocks_are_normalized_and_plausible() {
+        let b = blocks();
+        assert_eq!(b.mc % MR, 0);
+        assert_eq!(b.nc % NR, 0);
+        assert!(b.mc >= MR && b.mc <= 1024);
+        assert!(b.kc >= 8 && b.kc <= 1024);
+        assert!(b.nc >= NR);
+        // decided once: a second call must agree
+        assert_eq!(blocks(), b);
+    }
+
+    #[test]
+    fn probe_reports_a_sweep_size() {
+        let c = probe_cache_bytes();
+        assert!(c >= 128 << 10 && c <= 2 << 20);
+    }
+}

@@ -247,6 +247,20 @@ pub fn record_fault_hit(site_name: &str) {
     Registry::global().counter(&format!("faults.injected.{site_name}")).incr();
 }
 
+/// Mirror one packed-GEMM call into the global registry: achieved MFLOP/s
+/// into the `gemm.mflops` histogram and panel-copy traffic onto the
+/// `gemm.pack_bytes` counter.  The handles are cached (`OnceLock`) so the
+/// GEMM hot path never touches the registry's `RwLock` after first use.
+pub fn record_gemm(mflops: u64, pack_bytes: u64) {
+    static HANDLES: OnceLock<(Arc<Histogram>, Arc<Counter>)> = OnceLock::new();
+    let (hist, ctr) = HANDLES.get_or_init(|| {
+        let reg = Registry::global();
+        (reg.histogram("gemm.mflops"), reg.counter("gemm.pack_bytes"))
+    });
+    hist.record(mflops);
+    ctr.add(pack_bytes);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -154,6 +154,72 @@ pub fn active_offload_stages() -> usize {
 }
 
 // ---------------------------------------------------------------------------
+// Thread-local scratch arena
+// ---------------------------------------------------------------------------
+
+/// Cap on pooled buffers per thread: GEMM holds at most two leases at once
+/// (packed A + packed B); a few extra slots cover TRSM panel copies nested
+/// inside, and anything beyond that is better returned to the allocator.
+const SCRATCH_POOL_MAX: usize = 8;
+
+thread_local! {
+    /// LIFO pool of reusable `f64` buffers (GEMM pack panels, TRSM panel
+    /// copies).  Per-thread, so coordinator workers and solver threads
+    /// never contend; LIFO because leases nest like a stack, which keeps
+    /// the hottest (largest, cache-warm) buffer on top.
+    static SCRATCH_POOL: RefCell<Vec<Vec<f64>>> = RefCell::new(Vec::new());
+}
+
+/// RAII lease of a thread-local scratch buffer.  Derefs to `[f64]` of
+/// exactly the requested length; the allocation returns to this thread's
+/// pool on drop, so steady-state hot loops (every GEMM of an SCF cycle
+/// packing into the same arena) allocate only on high-water growth.
+///
+/// Contents are **unspecified** on lease — callers must fully overwrite
+/// every element they later read (the packing routines do: real data plus
+/// explicit zero padding).
+pub struct ScratchGuard {
+    buf: Vec<f64>,
+}
+
+impl std::ops::Deref for ScratchGuard {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for ScratchGuard {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        &mut self.buf
+    }
+}
+
+impl Drop for ScratchGuard {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        // during thread teardown the TLS slot may already be destroyed:
+        // let the buffer drop instead of panicking
+        let _ = SCRATCH_POOL.try_with(|p| {
+            let mut pool = p.borrow_mut();
+            if pool.len() < SCRATCH_POOL_MAX {
+                pool.push(buf);
+            }
+        });
+    }
+}
+
+/// Lease a `len`-element `f64` buffer from the calling thread's scratch
+/// pool (see [`ScratchGuard`] for the reuse and contents contract).
+pub fn scratch_f64(len: usize) -> ScratchGuard {
+    let mut buf = SCRATCH_POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    // resize, not clear+resize: shrinking is O(1) and growing only
+    // zero-fills the gap — the lease contract leaves contents unspecified
+    buf.resize(len, 0.0);
+    ScratchGuard { buf }
+}
+
+// ---------------------------------------------------------------------------
 // Execution contexts
 // ---------------------------------------------------------------------------
 
@@ -790,6 +856,47 @@ mod tests {
             ctx.steal_stats().steals > 0,
             "compact seeding with a straggler must trigger steals"
         );
+    }
+
+    #[test]
+    fn scratch_arena_reuses_allocations() {
+        let first_ptr;
+        {
+            let mut g = scratch_f64(1024);
+            g[0] = 1.0;
+            g[1023] = 2.0;
+            assert_eq!(g.len(), 1024);
+            first_ptr = g.as_ptr();
+        }
+        // same thread, same size: the pooled Vec (and its allocation) is
+        // handed back out
+        let g2 = scratch_f64(1024);
+        assert_eq!(g2.len(), 1024);
+        assert_eq!(g2.as_ptr(), first_ptr);
+    }
+
+    #[test]
+    fn scratch_leases_nest_without_aliasing() {
+        let mut a = scratch_f64(64);
+        let mut b = scratch_f64(128);
+        a[0] = 1.0;
+        b[0] = 2.0;
+        assert_ne!(a.as_ptr(), b.as_ptr());
+        assert_eq!(a.len(), 64);
+        assert_eq!(b.len(), 128);
+        assert_eq!((a[0], b[0]), (1.0, 2.0));
+    }
+
+    #[test]
+    fn scratch_grows_and_shrinks_to_requested_len() {
+        {
+            let g = scratch_f64(256);
+            assert_eq!(g.len(), 256);
+        }
+        let g = scratch_f64(16);
+        assert_eq!(g.len(), 16);
+        let g2 = scratch_f64(0);
+        assert!(g2.is_empty());
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Cross-kernel GEMM conformance (ISSUE 9 satellite).
+//!
+//! Pits the packed GEMM — public `dgemm`, the forced-portable reference
+//! kernel, and the runtime-selected SIMD kernel — against an in-test naive
+//! triple loop across shapes (tiny/odd/prime edges through 257), all four
+//! `Trans` combinations, alpha/beta in {0, 1, -1, 0.3} and `lda > m`
+//! padding (NaN-poisoned, so any out-of-window read detonates).  Also pins
+//! bitwise determinism across thread budgets 1/2/8 and the ISSUE-9
+//! regression that every `Trans` combination takes the packed parallel
+//! path (the legacy code left `(N,T)`/`(T,T)` on serial naive loops).
+//!
+//! Tolerance model: a dot of length k accumulates rounding error below
+//! `~k·eps·Σ|a||b|`, so we use `C·eps·(k·|alpha|·‖A‖max·‖B‖max +
+//! |beta|·‖C0‖max)` with a comfortable constant — tight enough that a
+//! wrong packing index (picking up a neighbour or a padding zero) fails by
+//! many orders of magnitude.
+
+use gsyeig::blas::microkernel::{self, KernelKind};
+use gsyeig::blas::{dgemm, dgemm_with_kernel, gemm_stats, Trans};
+use gsyeig::util::parallel::with_threads;
+use gsyeig::util::rng::Rng;
+
+const EPS: f64 = f64::EPSILON;
+const COMBOS: [(Trans, Trans); 4] = [
+    (Trans::N, Trans::N),
+    (Trans::T, Trans::N),
+    (Trans::N, Trans::T),
+    (Trans::T, Trans::T),
+];
+
+/// Stored (rows, cols) of an operand whose op() shape is rows_op x cols_op.
+fn stored_dims(trans: Trans, rows_op: usize, cols_op: usize) -> (usize, usize) {
+    match trans {
+        Trans::N => (rows_op, cols_op),
+        Trans::T => (cols_op, rows_op),
+    }
+}
+
+/// Column-major rows x cols window inside an ld-padded buffer; the padding
+/// rows are NaN so an out-of-window read poisons the result immediately.
+fn padded(rows: usize, cols: usize, ld: usize, rng: &mut Rng) -> Vec<f64> {
+    assert!(ld >= rows);
+    let mut m = vec![f64::NAN; ld * cols];
+    for j in 0..cols {
+        for i in 0..rows {
+            m[i + j * ld] = rng.normal();
+        }
+    }
+    m
+}
+
+fn window_max_abs(rows: usize, cols: usize, ld: usize, m: &[f64]) -> f64 {
+    let mut mx = 0.0f64;
+    for j in 0..cols {
+        for i in 0..rows {
+            mx = mx.max(m[i + j * ld].abs());
+        }
+    }
+    mx
+}
+
+/// Naive reference: C = alpha op(A) op(B) + beta C.
+#[allow(clippy::too_many_arguments)]
+fn gemm_ref(
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    for j in 0..n {
+        for i in 0..m {
+            let mut s = 0.0;
+            for p in 0..k {
+                let av = match transa {
+                    Trans::N => a[i + p * lda],
+                    Trans::T => a[p + i * lda],
+                };
+                let bv = match transb {
+                    Trans::N => b[p + j * ldb],
+                    Trans::T => b[j + p * ldb],
+                };
+                s += av * bv;
+            }
+            let c0 = if beta == 0.0 { 0.0 } else { beta * c[i + j * ldc] };
+            c[i + j * ldc] = alpha * s + c0;
+        }
+    }
+}
+
+fn window_diff(rows: usize, cols: usize, ld: usize, x: &[f64], y: &[f64]) -> f64 {
+    let mut mx = 0.0f64;
+    for j in 0..cols {
+        for i in 0..rows {
+            mx = mx.max((x[i + j * ld] - y[i + j * ld]).abs());
+        }
+    }
+    mx
+}
+
+/// Run one (shape, combo, alpha, beta) case through every kernel route and
+/// compare each against the naive reference.
+#[allow(clippy::too_many_arguments)]
+fn check_case(
+    rng: &mut Rng,
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    beta: f64,
+) {
+    let (ar, ac) = stored_dims(transa, m, k);
+    let (br, bc) = stored_dims(transb, k, n);
+    let (lda, ldb, ldc) = (ar + 3, br + 3, m + 3);
+    let a = padded(ar, ac, lda, rng);
+    let b = padded(br, bc, ldb, rng);
+    let c0 = padded(m, n, ldc, rng);
+
+    let mut want = c0.clone();
+    gemm_ref(transa, transb, m, n, k, alpha, &a, lda, &b, ldb, beta, &mut want, ldc);
+
+    let anorm = window_max_abs(ar, ac, lda, &a);
+    let bnorm = window_max_abs(br, bc, ldb, &b);
+    let cnorm = window_max_abs(m, n, ldc, &c0);
+    let tol =
+        40.0 * EPS * ((k.max(1) as f64) * alpha.abs() * anorm * bnorm + beta.abs() * cnorm + 1.0);
+
+    let routes: [(&str, Option<KernelKind>); 3] = [
+        ("dgemm", None),
+        ("portable", Some(KernelKind::Portable)),
+        ("selected", Some(microkernel::selected())),
+    ];
+    for (label, kind) in routes {
+        let mut got = c0.clone();
+        match kind {
+            None => dgemm(transa, transb, m, n, k, alpha, &a, lda, &b, ldb, beta, &mut got, ldc),
+            Some(kind) => dgemm_with_kernel(
+                kind, transa, transb, m, n, k, alpha, &a, lda, &b, ldb, beta, &mut got, ldc,
+            ),
+        }
+        let d = window_diff(m, n, ldc, &got, &want);
+        assert!(
+            d <= tol,
+            "{label} {transa:?}{transb:?} m={m} n={n} k={k} alpha={alpha} beta={beta}: \
+             diff {d:.3e} > tol {tol:.3e}"
+        );
+        // The ldc padding rows must be untouched (still NaN).
+        for j in 0..n {
+            for i in m..ldc {
+                assert!(got[i + j * ldc].is_nan(), "{label}: wrote into ldc padding at ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn small_shapes_all_combos_match_reference() {
+    let mut rng = Rng::new(0x9e11);
+    let dims = [1usize, 2, 3, 5, 8, 13, 17];
+    let ab = [(1.0, 0.0), (0.3, 1.0), (-1.0, 0.3), (1.0, -1.0), (0.0, 0.3)];
+    let mut case = 0usize;
+    for &m in &dims {
+        for &n in &dims {
+            for &k in &dims {
+                for &(ta, tb) in &COMBOS {
+                    let (alpha, beta) = ab[case % ab.len()];
+                    case += 1;
+                    check_case(&mut rng, ta, tb, m, n, k, alpha, beta);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn large_and_prime_shapes_all_combos_match_reference() {
+    let mut rng = Rng::new(0x9e12);
+    let shapes =
+        [(64, 64, 64), (257, 64, 33), (64, 257, 64), (96, 96, 257), (257, 257, 17), (160, 160, 160)];
+    let ab = [(1.0, 0.0), (0.3, -1.0), (-1.0, 0.3)];
+    for (si, &(m, n, k)) in shapes.iter().enumerate() {
+        for (ci, &(ta, tb)) in COMBOS.iter().enumerate() {
+            let (alpha, beta) = ab[(si + ci) % ab.len()];
+            check_case(&mut rng, ta, tb, m, n, k, alpha, beta);
+        }
+    }
+}
+
+#[test]
+fn results_bitwise_identical_across_thread_counts() {
+    let mut rng = Rng::new(0x9e13);
+    let (m, n, k) = (160, 160, 160); // above PAR_MIN_WORK: packed + parallel
+    for &(ta, tb) in &COMBOS {
+        let (ar, ac) = stored_dims(ta, m, k);
+        let (br, bc) = stored_dims(tb, k, n);
+        let a = padded(ar, ac, ar, &mut rng);
+        let b = padded(br, bc, br, &mut rng);
+        let mut outs: Vec<Vec<f64>> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let mut c = vec![0.0; m * n];
+            with_threads(threads, || {
+                dgemm(ta, tb, m, n, k, 0.7, &a, ar, &b, br, 0.0, &mut c, m);
+            });
+            outs.push(c);
+        }
+        for (i, o) in outs.iter().enumerate().skip(1) {
+            assert!(
+                o.iter().zip(&outs[0]).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{ta:?}{tb:?}: thread budget {} not bitwise equal to 1 thread",
+                [1, 2, 8][i]
+            );
+        }
+    }
+}
+
+#[test]
+fn all_four_combos_take_packed_parallel_path() {
+    let mut rng = Rng::new(0x9e14);
+    let (m, n, k) = (160, 160, 160);
+    for &(ta, tb) in &COMBOS {
+        let (ar, ac) = stored_dims(ta, m, k);
+        let (br, bc) = stored_dims(tb, k, n);
+        let a = padded(ar, ac, ar, &mut rng);
+        let b = padded(br, bc, br, &mut rng);
+        let mut c = vec![0.0; m * n];
+        let (packed0, par0) = gemm_stats();
+        with_threads(4, || {
+            dgemm(ta, tb, m, n, k, 1.0, &a, ar, &b, br, 0.0, &mut c, m);
+        });
+        let (packed1, par1) = gemm_stats();
+        assert!(packed1 > packed0, "{ta:?}{tb:?}: call did not take the packed path");
+        assert!(par1 > par0, "{ta:?}{tb:?}: packed call did not fork the jr loop");
+    }
+}
+
+#[test]
+fn env_forced_kernel_is_respected() {
+    // CI runs one leg with GSYEIG_GEMM_KERNEL=portable; under it the
+    // process-wide selection must resolve to the portable reference.
+    if std::env::var("GSYEIG_GEMM_KERNEL").as_deref() == Ok("portable") {
+        assert_eq!(microkernel::selected(), KernelKind::Portable);
+    }
+    // Whatever was selected must be runnable on this host: a 1-tile smoke
+    // multiply through the public path must produce finite output.
+    let mut rng = Rng::new(0x9e15);
+    let (m, n, k) = (32, 32, 32);
+    let a = padded(m, k, m, &mut rng);
+    let b = padded(k, n, k, &mut rng);
+    let mut c = vec![0.0; m * n];
+    dgemm_with_kernel(
+        microkernel::selected(),
+        Trans::N,
+        Trans::N,
+        m,
+        n,
+        k,
+        1.0,
+        &a,
+        m,
+        &b,
+        k,
+        0.0,
+        &mut c,
+        m,
+    );
+    assert!(c.iter().all(|v| v.is_finite()));
+}
