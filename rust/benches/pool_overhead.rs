@@ -1,0 +1,139 @@
+//! Region-entry tax: persistent pool vs per-region scoped spawning
+//! (DESIGN.md §10).  The persistent pool exists to kill the thread-spawn
+//! cost that every `parallel_for`/`parallel_items` region used to pay, so
+//! this driver measures exactly that margin:
+//!
+//!  1. region-entry latency — a 4-lane region doing no work, so the
+//!     timing is pure dispatch + latch (plus, in scoped mode, spawn/join);
+//!  2. small-n TT solves (n = 64/128/256), where spawn tax is the largest
+//!     relative slice of the wall time.
+//!
+//!   cargo bench --bench pool_overhead
+//!
+//! `GSYEIG_SCALE=quick` shrinks rep counts for CI smoke runs.  Setting
+//! `GSYEIG_BENCH_JSON` drops a `BENCH_pool.json` (schema v2) next to the
+//! human table.
+
+use gsyeig::bench::json::{self, JsonObject, JsonValue};
+use gsyeig::solver::gsyeig::{GsyeigSolver, SolverConfig, Variant};
+use gsyeig::util::parallel::{self, PoolMode};
+use gsyeig::util::pool::Pool;
+use gsyeig::workloads::MdWorkload;
+
+const LANES: usize = 4;
+const SMALL_NS: [usize; 3] = [64, 128, 256];
+
+fn quick() -> bool {
+    matches!(std::env::var("GSYEIG_SCALE").as_deref(), Ok("quick"))
+}
+
+fn best_of(reps: usize, mut f: impl FnMut() -> f64) -> f64 {
+    (0..reps).map(|_| f()).fold(f64::INFINITY, f64::min)
+}
+
+/// Mean nanoseconds to enter + leave one `LANES`-lane no-op region under
+/// the currently selected pool mode.
+fn region_entry_ns(iters: usize) -> f64 {
+    let sink = std::sync::atomic::AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+    parallel::with_threads(LANES, || {
+        for _ in 0..iters {
+            parallel::parallel_for(LANES, |i| {
+                sink.fetch_add(i + 1, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+    });
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    assert_eq!(sink.load(std::sync::atomic::Ordering::Relaxed), iters * LANES * (LANES + 1) / 2);
+    ns
+}
+
+/// Best-of-`reps` wall seconds for an MD-shaped TT solve at dimension `n`
+/// under the currently selected pool mode.
+fn solve_seconds(n: usize, reps: usize) -> f64 {
+    let mut w = MdWorkload::with_n(n);
+    w.s = 4.min(n / 16).max(1);
+    let (problem, which, _) = w.solver_problem();
+    let cfg = SolverConfig::new(Variant::TT, w.s, which);
+    let solver = GsyeigSolver::native(cfg);
+    parallel::with_threads(LANES, || {
+        // warm-up rep faults in pages (and, persistent, grows the pool)
+        solver.solve(problem.clone());
+        best_of(reps, || {
+            let t0 = std::time::Instant::now();
+            solver.solve(problem.clone());
+            t0.elapsed().as_secs_f64()
+        })
+    })
+}
+
+fn main() {
+    let (entry_iters, solve_reps) = if quick() { (50, 1) } else { (2000, 3) };
+
+    // scoped first: its numbers must not benefit from pool residency, and
+    // the persistent leg is happy to reuse workers grown by earlier runs
+    parallel::set_pool_mode(Some(PoolMode::Scoped));
+    let scoped_entry = region_entry_ns(entry_iters);
+    let scoped_solve: Vec<f64> = SMALL_NS.iter().map(|&n| solve_seconds(n, solve_reps)).collect();
+
+    parallel::set_pool_mode(Some(PoolMode::Persistent));
+    let pool_entry = region_entry_ns(entry_iters);
+    let pool_solve: Vec<f64> = SMALL_NS.iter().map(|&n| solve_seconds(n, solve_reps)).collect();
+    let stats = Pool::global().stats();
+    parallel::set_pool_mode(None);
+
+    println!("pool overhead: {LANES}-lane regions, best of {solve_reps}, TT route");
+    println!(
+        "  region entry  scoped {scoped_entry:9.0} ns   persistent {pool_entry:9.0} ns   ({:.2}x)",
+        scoped_entry / pool_entry
+    );
+    for (i, &n) in SMALL_NS.iter().enumerate() {
+        println!(
+            "  solve n={n:4}  scoped {:9.6} s    persistent {:9.6} s    ({:.2}x)",
+            scoped_solve[i],
+            pool_solve[i],
+            scoped_solve[i] / pool_solve[i]
+        );
+    }
+    println!(
+        "  pool: {} resident ({} pinned), {} regions, {} fallbacks, {} steals",
+        stats.resident, stats.pinned, stats.regions, stats.scoped_fallbacks, stats.steals
+    );
+
+    let mut entry = JsonObject::new();
+    entry.num("scoped_ns", scoped_entry);
+    entry.num("persistent_ns", pool_entry);
+    entry.num("speedup", scoped_entry / pool_entry);
+
+    let solves = SMALL_NS
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let mut row = JsonObject::new();
+            row.num("n", n as f64);
+            row.num("scoped_s", scoped_solve[i]);
+            row.num("persistent_s", pool_solve[i]);
+            row.num("speedup", scoped_solve[i] / pool_solve[i]);
+            JsonValue::Obj(row)
+        })
+        .collect();
+
+    let mut pool = JsonObject::new();
+    pool.num("resident_workers", stats.resident as f64);
+    pool.num("pinned_workers", stats.pinned as f64);
+    pool.num("regions", stats.regions as f64);
+    pool.num("scoped_fallbacks", stats.scoped_fallbacks as f64);
+    pool.num("parks", stats.parks as f64);
+    pool.num("unparks", stats.unparks as f64);
+    pool.num("steals", stats.steals as f64);
+
+    let mut obj = JsonObject::new();
+    obj.str("bench", "pool_overhead");
+    obj.num("lanes", LANES as f64);
+    obj.num("entry_iters", entry_iters as f64);
+    obj.num("solve_reps", solve_reps as f64);
+    obj.set("region_entry", JsonValue::Obj(entry));
+    obj.set("solves", JsonValue::Arr(solves));
+    obj.set("pool", JsonValue::Obj(pool));
+    json::maybe_emit("pool", &obj);
+}

@@ -187,43 +187,49 @@ impl Coordinator {
         let total_threads = parallel::current_threads();
         let lanes_in_use = std::sync::atomic::AtomicUsize::new(0);
         let lanes_in_use = &lanes_in_use;
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let queue = Arc::clone(&self.queue);
-                let results = Arc::clone(&self.results);
-                let metrics = Arc::clone(&self.metrics);
-                let cache = Arc::clone(&factor_cache);
-                let router_cfg = self.config.router;
-                scope.spawn(move || {
-                    while let Some(job) = queue.pop() {
-                        // per-job ctx sized by problem dimension (caller
-                        // override wins) — not the uniform workers split
-                        let wish = job
-                            .spec
-                            .exec_threads
-                            .unwrap_or_else(|| {
-                                job_thread_budget(total_threads, workers, job.spec.workload.n())
-                            })
-                            .max(1);
-                        // claim the wish, then give back what exceeds the
-                        // free lanes (fetch_add serializes the claims, so
-                        // concurrent grants never double-spend a lane)
-                        let prev = lanes_in_use.fetch_add(wish, Ordering::SeqCst);
-                        let budget = wish.min(total_threads.saturating_sub(prev).max(1));
-                        if budget < wish {
-                            lanes_in_use.fetch_sub(wish - budget, Ordering::SeqCst);
-                        }
-                        let ctx = ExecCtx::with_threads(budget);
-                        let outcome = ctx
-                            .install(|| execute_job(job, &cache, &router_cfg, &ctx, &metrics));
-                        lanes_in_use.fetch_sub(budget, Ordering::SeqCst);
-                        metrics.record(outcome.total_seconds, outcome.gs1_cached, outcome.matvecs);
-                        metrics.record_fallbacks(outcome.report.events.len());
-                        results.lock().unwrap().push(outcome);
-                    }
-                });
+        // workers are persistent-pool clients: each lane of this region
+        // loops popping jobs until the queue closes and drains.  Lanes
+        // never wait on each other (only on the queue), so the region is
+        // Independent; the caller itself runs lane 0, keeping the
+        // consumer count at exactly `workers` as before.
+        let queue = &self.queue;
+        let results = &self.results;
+        let metrics = &self.metrics;
+        let cache = &factor_cache;
+        let router_cfg = self.config.router;
+        let worker_lane = |_w: usize| {
+            while let Some(job) = queue.pop() {
+                // per-job ctx sized by problem dimension (caller
+                // override wins) — not the uniform workers split
+                let wish = job
+                    .spec
+                    .exec_threads
+                    .unwrap_or_else(|| {
+                        job_thread_budget(total_threads, workers, job.spec.workload.n())
+                    })
+                    .max(1);
+                // claim the wish, then give back what exceeds the
+                // free lanes (fetch_add serializes the claims, so
+                // concurrent grants never double-spend a lane)
+                let prev = lanes_in_use.fetch_add(wish, Ordering::SeqCst);
+                let budget = wish.min(total_threads.saturating_sub(prev).max(1));
+                if budget < wish {
+                    lanes_in_use.fetch_sub(wish - budget, Ordering::SeqCst);
+                }
+                let ctx = ExecCtx::with_threads(budget);
+                let outcome = ctx.install(|| execute_job(job, cache, &router_cfg, &ctx, metrics));
+                lanes_in_use.fetch_sub(budget, Ordering::SeqCst);
+                metrics.record(outcome.total_seconds, outcome.gs1_cached, outcome.matvecs);
+                metrics.record_fallbacks(outcome.report.events.len());
+                results.lock().unwrap().push(outcome);
             }
-        });
+        };
+        parallel::run_region(
+            workers,
+            parallel::Placement::Spread,
+            parallel::RegionKind::Independent,
+            &worker_lane,
+        );
         let mut out = self.results.lock().unwrap().clone();
         out.sort_by_key(|o| o.id);
         out

@@ -261,6 +261,43 @@ pub fn record_gemm(mflops: u64, pack_bytes: u64) {
     ctr.add(pack_bytes);
 }
 
+/// Cached handles for the persistent worker-pool metrics (`pool.*`), so
+/// park/unpark/steal accounting on the region hot path never touches the
+/// registry's `RwLock` after first use (same pattern as [`record_gemm`]).
+pub struct PoolMetrics {
+    /// Regions dispatched through the resident pool.
+    pub regions: Arc<Counter>,
+    /// Lock-step regions that fell back to scoped spawning.
+    pub scoped_fallbacks: Arc<Counter>,
+    /// Worker park events.
+    pub parks: Arc<Counter>,
+    /// Worker unpark (wakeup) events.
+    pub unparks: Arc<Counter>,
+    /// Lane tasks stolen from a sibling worker's deque.
+    pub steals: Arc<Counter>,
+    /// Workers currently resident in the global pool.
+    pub resident_workers: Arc<Gauge>,
+    /// Workers that successfully pinned to a core at spawn.
+    pub pinned_workers: Arc<Gauge>,
+}
+
+/// The global pool's registry mirror (`pool.*`).
+pub fn pool_metrics() -> &'static PoolMetrics {
+    static HANDLES: OnceLock<PoolMetrics> = OnceLock::new();
+    HANDLES.get_or_init(|| {
+        let reg = Registry::global();
+        PoolMetrics {
+            regions: reg.counter("pool.regions"),
+            scoped_fallbacks: reg.counter("pool.scoped_fallbacks"),
+            parks: reg.counter("pool.parks"),
+            unparks: reg.counter("pool.unparks"),
+            steals: reg.counter("pool.steals"),
+            resident_workers: reg.gauge("pool.resident_workers"),
+            pinned_workers: reg.gauge("pool.pinned_workers"),
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

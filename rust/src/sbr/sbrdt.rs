@@ -35,7 +35,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::matrix::{Matrix, SymTridiag};
-use crate::util::parallel::ExecCtx;
+use crate::util::parallel::{ExecCtx, Placement};
 
 /// Below this matrix order the whole chase is microseconds of work and the
 /// per-diagonal thread spawns would dominate: stay serial.
@@ -228,7 +228,13 @@ fn chase_serial(a: &mut Matrix, b: usize, mut q: Option<&mut Matrix>) -> usize {
 /// below.  (Both the ordering protocol and this break handling were
 /// validated by exhaustive precedence simulation and randomized
 /// float64 interleaving simulation with injected breaks.)
-fn chase_wavefront(a: &mut Matrix, b: usize, mut q: Option<&mut Matrix>, workers: usize) -> usize {
+fn chase_wavefront(
+    a: &mut Matrix,
+    b: usize,
+    mut q: Option<&mut Matrix>,
+    workers: usize,
+    placement: Placement,
+) -> usize {
     let n = a.rows();
     let sweeps = n - b; // guaranteed ≥ 1 by the caller
     let lag = 2 + 4 / b;
@@ -243,70 +249,34 @@ fn chase_wavefront(a: &mut Matrix, b: usize, mut q: Option<&mut Matrix>, workers
     });
     let progress = &progress;
     let nrot_ref = &nrot;
-    std::thread::scope(|s| {
-        for wk in 0..workers {
-            s.spawn(move || {
-                let mut local = 0usize;
-                let mut c = wk;
-                while c < sweeps {
-                    // SAFETY: the wait closure enforces the pipeline
-                    // ordering proven above before every rotation, and
-                    // progress is published with Release after each one —
-                    // no two threads ever touch an element concurrently.
-                    let (done, broke) = unsafe {
-                        run_sweep(
-                            a_raw,
-                            n,
-                            b,
-                            c,
-                            q_raw,
-                            |j| {
-                                if c == 0 {
-                                    return;
-                                }
-                                let need = j + lag;
-                                let mut spins = 0u32;
-                                loop {
-                                    let p = progress[c - 1].load(Ordering::Acquire);
-                                    if p == usize::MAX || p >= need {
-                                        break;
-                                    }
-                                    spins = spins.wrapping_add(1);
-                                    if spins % 64 == 0 {
-                                        std::thread::yield_now();
-                                    } else {
-                                        std::hint::spin_loop();
-                                    }
-                                }
-                            },
-                            |done| progress[c].store(done, Ordering::Release),
-                        )
-                    };
-                    local += done;
-                    if broke && c > 0 {
-                        // Early zero-bulge exit: this sweep verified its
-                        // predecessor only up to the break point, so a
-                        // blanket MAX here would let successors race
-                        // sweeps further back (the transitive-lag chain
-                        // would be severed).  Instead, keep the chain
-                        // invariant — "progress[c] = P implies sweep c-1
-                        // completed ≥ P+lag-1 rotations" — by mirroring
-                        // the predecessor's progress until it finishes.
-                        // A sweep that ran its chase to the bottom needs
-                        // none of this: its last rotation's wait already
-                        // covered every successor index (len(c+1) ≤
-                        // len(c)), so MAX is immediately sound there.
-                        let mut published = done;
+    // Lanes spin-wait on their predecessor sweep's progress, so every
+    // lane must run on its own thread at once: RegionKind::LockStep (a
+    // serialized lane would spin forever on a lane that never started).
+    let lane = move |wk: usize| {
+        let mut local = 0usize;
+        let mut c = wk;
+        while c < sweeps {
+            // SAFETY: the wait closure enforces the pipeline
+            // ordering proven above before every rotation, and
+            // progress is published with Release after each one —
+            // no two threads ever touch an element concurrently.
+            let (done, broke) = unsafe {
+                run_sweep(
+                    a_raw,
+                    n,
+                    b,
+                    c,
+                    q_raw,
+                    |j| {
+                        if c == 0 {
+                            return;
+                        }
+                        let need = j + lag;
                         let mut spins = 0u32;
                         loop {
                             let p = progress[c - 1].load(Ordering::Acquire);
-                            if p == usize::MAX {
+                            if p == usize::MAX || p >= need {
                                 break;
-                            }
-                            let can = p.saturating_sub(lag - 1);
-                            if can > published {
-                                published = can;
-                                progress[c].store(can, Ordering::Release);
                             }
                             spins = spins.wrapping_add(1);
                             if spins % 64 == 0 {
@@ -315,14 +285,55 @@ fn chase_wavefront(a: &mut Matrix, b: usize, mut q: Option<&mut Matrix>, workers
                                 std::hint::spin_loop();
                             }
                         }
+                    },
+                    |done| progress[c].store(done, Ordering::Release),
+                )
+            };
+            local += done;
+            if broke && c > 0 {
+                // Early zero-bulge exit: this sweep verified its
+                // predecessor only up to the break point, so a
+                // blanket MAX here would let successors race
+                // sweeps further back (the transitive-lag chain
+                // would be severed).  Instead, keep the chain
+                // invariant — "progress[c] = P implies sweep c-1
+                // completed ≥ P+lag-1 rotations" — by mirroring
+                // the predecessor's progress until it finishes.
+                // A sweep that ran its chase to the bottom needs
+                // none of this: its last rotation's wait already
+                // covered every successor index (len(c+1) ≤
+                // len(c)), so MAX is immediately sound there.
+                let mut published = done;
+                let mut spins = 0u32;
+                loop {
+                    let p = progress[c - 1].load(Ordering::Acquire);
+                    if p == usize::MAX {
+                        break;
                     }
-                    progress[c].store(usize::MAX, Ordering::Release);
-                    c += workers;
+                    let can = p.saturating_sub(lag - 1);
+                    if can > published {
+                        published = can;
+                        progress[c].store(can, Ordering::Release);
+                    }
+                    spins = spins.wrapping_add(1);
+                    if spins % 64 == 0 {
+                        std::thread::yield_now();
+                    } else {
+                        std::hint::spin_loop();
+                    }
                 }
-                nrot_ref.fetch_add(local, Ordering::Relaxed);
-            });
+            }
+            progress[c].store(usize::MAX, Ordering::Release);
+            c += workers;
         }
-    });
+        nrot_ref.fetch_add(local, Ordering::Relaxed);
+    };
+    crate::util::parallel::run_region(
+        workers,
+        placement,
+        crate::util::parallel::RegionKind::LockStep,
+        &lane,
+    );
     nrot.into_inner()
 }
 
@@ -360,7 +371,7 @@ pub fn sbrdt_ctx(
             format!("b={b} wavefront={wavefront}")
         });
         nrot += if wavefront {
-            chase_wavefront(a, b, q.as_deref_mut(), threads)
+            chase_wavefront(a, b, q.as_deref_mut(), threads, ctx.placement())
         } else {
             chase_serial(a, b, q.as_deref_mut())
         };

@@ -84,7 +84,10 @@ pub struct SolverConfig {
     /// Execution context for the solve: thread budget + pool + placement.
     /// Defaults to [`ExecCtx::global`] (inherit the ambient budget at
     /// solve time); the coordinator swaps in a per-job ctx sized by
-    /// problem dimension (DESIGN.md §3).
+    /// problem dimension (DESIGN.md §3).  Parallel regions opened under
+    /// this ctx dispatch into the process-lifetime worker pool
+    /// (DESIGN.md §10) unless `GSYEIG_POOL=scoped` reverts them to
+    /// per-region spawned threads.
     pub exec: ExecCtx,
     /// Deterministic fault-injection schedule (DESIGN.md §7).  Disarmed by
     /// default; the test harness arms specific sites to exercise the

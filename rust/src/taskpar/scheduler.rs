@@ -144,14 +144,18 @@ pub fn run_graph_ctx(graph: TaskGraph, workers: usize, ctx: &ExecCtx) -> ExecSta
     let child = ctx.split(workers);
 
     let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for w in 0..workers {
-            let worker_ctx = child.clone();
-            scope.spawn(move || {
-                worker_ctx.install(|| worker_loop(w, shared, tasks, dependents, &worker_ctx))
-            });
-        }
-    });
+    // worker lanes never wait on each other (a lane that finds every
+    // deque empty after done_count reaches total just exits), so the
+    // region is Independent and dispatches into the persistent pool
+    let lane = |w: usize| {
+        child.install(|| worker_loop(w, shared, tasks, dependents, &child));
+    };
+    crate::util::parallel::run_region(
+        workers,
+        ctx.placement(),
+        crate::util::parallel::RegionKind::Independent,
+        &lane,
+    );
     let stats = ExecStats {
         workers,
         max_ready_depth: shared.max_depth.load(Ordering::SeqCst),

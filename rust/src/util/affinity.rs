@@ -1,0 +1,221 @@
+//! Core-affinity shim: a vendored raw-syscall binding for Linux
+//! `sched_setaffinity(2)` / `sched_getaffinity(2)` (DESIGN.md §10).
+//!
+//! std has no portable thread-affinity API and this workspace is std-only,
+//! so on Linux (x86_64 / aarch64) the two syscalls are issued directly via
+//! inline asm — pid 0 targets the *calling thread*, which is exactly the
+//! granularity the persistent pool wants (each resident worker pins
+//! itself once at spawn).  Everywhere else every function is a no-op that
+//! reports "unsupported", so the pool runs unpinned but otherwise
+//! identically; arithmetic never depends on placement.
+//!
+//! `GSYEIG_PIN=0` disables pinning even where supported (shared CI boxes,
+//! oversubscribed containers).  The allowed-CPU list is snapshotted once
+//! per process from the inherited affinity mask, so a taskset/cgroup
+//! restriction is respected: workers only ever pin to CPUs the process
+//! already owns.
+
+use std::sync::OnceLock;
+
+/// Width of the CPU mask handed to the kernel: 16 × 64 = 1024 CPUs, the
+/// kernel's own default `CONFIG_NR_CPUS` ceiling on common distros.
+const MASK_WORDS: usize = 16;
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use super::MASK_WORDS;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SCHED_SETAFFINITY: usize = 203;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SCHED_GETAFFINITY: usize = 204;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SCHED_SETAFFINITY: usize = 122;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SCHED_GETAFFINITY: usize = 123;
+
+    /// Raw 3-argument syscall.  x86_64: `syscall` clobbers rcx/r11 and
+    /// returns in rax.  aarch64: `svc 0` with the number in x8, return in
+    /// x0.  Negative return = -errno.
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// `sched_setaffinity(0, …)`: restrict the calling thread to `mask`.
+    pub fn set_thread_affinity(mask: &[u64; MASK_WORDS]) -> bool {
+        let r = unsafe {
+            syscall3(
+                SYS_SCHED_SETAFFINITY,
+                0,
+                std::mem::size_of_val(mask),
+                mask.as_ptr() as usize,
+            )
+        };
+        r == 0
+    }
+
+    /// `sched_getaffinity(0, …)`: the calling thread's current mask.
+    pub fn get_thread_affinity(mask: &mut [u64; MASK_WORDS]) -> bool {
+        let r = unsafe {
+            syscall3(
+                SYS_SCHED_GETAFFINITY,
+                0,
+                std::mem::size_of_val(mask),
+                mask.as_mut_ptr() as usize,
+            )
+        };
+        // success returns the number of bytes the kernel wrote (> 0)
+        r > 0
+    }
+}
+
+/// Whether this build can issue affinity syscalls at all (Linux on
+/// x86_64/aarch64).  Orthogonal to the `GSYEIG_PIN` knob.
+pub fn pinning_supported() -> bool {
+    cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))
+}
+
+/// Whether pool workers should pin: supported platform *and* `GSYEIG_PIN`
+/// not set to `0`/`off`/`false` (read once per process).
+pub fn pinning_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        if !pinning_supported() {
+            return false;
+        }
+        match std::env::var("GSYEIG_PIN") {
+            Ok(v) => !matches!(v.trim().to_ascii_lowercase().as_str(), "0" | "off" | "false"),
+            Err(_) => true,
+        }
+    })
+}
+
+/// The CPUs this process may run on, in ascending order — the inherited
+/// affinity mask where the syscall is available, else `0..n` from
+/// [`std::thread::available_parallelism`].  Never empty.
+pub fn allowed_cpus() -> Vec<usize> {
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let mut mask = [0u64; MASK_WORDS];
+        if sys::get_thread_affinity(&mut mask) {
+            let cpus: Vec<usize> = (0..MASK_WORDS * 64)
+                .filter(|&c| mask[c / 64] & (1u64 << (c % 64)) != 0)
+                .collect();
+            if !cpus.is_empty() {
+                return cpus;
+            }
+        }
+    }
+    let n = std::thread::available_parallelism().map_or(1, |n| n.get());
+    (0..n).collect()
+}
+
+/// Pin the calling thread to a single CPU.  Returns whether the kernel
+/// accepted the mask; always `false` where unsupported or when `cpu`
+/// exceeds the mask width.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    if cpu >= MASK_WORDS * 64 {
+        return false;
+    }
+    pin_impl(cpu)
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn pin_impl(cpu: usize) -> bool {
+    let mut mask = [0u64; MASK_WORDS];
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    sys::set_thread_affinity(&mask)
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn pin_impl(_cpu: usize) -> bool {
+    false
+}
+
+/// Restore the calling thread's mask to an explicit CPU list (used by
+/// tests to undo a pin; silently a no-op where unsupported).
+pub fn set_current_thread_cpus(cpus: &[usize]) -> bool {
+    set_cpus_impl(cpus)
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn set_cpus_impl(cpus: &[usize]) -> bool {
+    let mut mask = [0u64; MASK_WORDS];
+    let mut any = false;
+    for &c in cpus {
+        if c < MASK_WORDS * 64 {
+            mask[c / 64] |= 1u64 << (c % 64);
+            any = true;
+        }
+    }
+    any && sys::set_thread_affinity(&mask)
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn set_cpus_impl(_cpus: &[usize]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowed_cpus_is_never_empty_and_sorted() {
+        let cpus = allowed_cpus();
+        assert!(!cpus.is_empty());
+        assert!(cpus.windows(2).all(|w| w[0] < w[1]), "ascending: {cpus:?}");
+    }
+
+    #[test]
+    fn out_of_range_cpu_is_rejected() {
+        assert!(!pin_current_thread(MASK_WORDS * 64));
+        assert!(!pin_current_thread(usize::MAX));
+    }
+
+    #[test]
+    fn pin_and_restore_roundtrip() {
+        // run on a dedicated thread so a failed restore cannot leak a
+        // 1-CPU mask into other tests sharing this thread
+        std::thread::spawn(|| {
+            let before = allowed_cpus();
+            let pinned = pin_current_thread(before[0]);
+            if pinning_supported() {
+                assert!(pinned, "pin to an allowed CPU must succeed");
+                assert_eq!(allowed_cpus(), vec![before[0]]);
+                assert!(set_current_thread_cpus(&before));
+                assert_eq!(allowed_cpus(), before);
+            } else {
+                assert!(!pinned);
+            }
+        })
+        .join()
+        .unwrap();
+    }
+}

@@ -1,12 +1,14 @@
-//! Shared infrastructure: PRNG, timers, table formatting, the
-//! scoped-thread parallel substrate (`ExecCtx`: explicit execution
-//! contexts with a work-stealing pool — DESIGN.md §3), cooperative
-//! cancellation tokens, and the deterministic fault-injection plans
-//! (DESIGN.md §7).
+//! Shared infrastructure: PRNG, timers, table formatting, the parallel
+//! substrate (`ExecCtx`: explicit execution contexts dispatching into the
+//! persistent work-stealing pool — DESIGN.md §3 and §10), the Linux
+//! core-affinity shim, cooperative cancellation tokens, and the
+//! deterministic fault-injection plans (DESIGN.md §7).
 
+pub mod affinity;
 pub mod cancel;
 pub mod faults;
 pub mod parallel;
+pub mod pool;
 pub mod rng;
 pub mod table;
 pub mod timer;

@@ -1,14 +1,21 @@
-//! Scoped-thread parallel infrastructure — the multi-threading substrate
-//! of the whole stack (DESIGN.md §3 Threading-Model).
+//! Parallel infrastructure — the multi-threading substrate of the whole
+//! stack (DESIGN.md §3 Threading-Model, §10 Persistent pool).
 //!
 //! The paper's platform is an 8-core machine running multi-threaded BLAS, a
 //! SuperMatrix-style task runtime, and a parallel tridiagonal eigensolver.
 //! This module is the std-only substitute for the thread-pool layer those
 //! libraries bring along (GotoBLAS threads, SuperMatrix workers, MR³-SMP's
-//! pthreads): data-parallel helpers built on [`std::thread::scope`] plus an
-//! explicit **execution context** ([`ExecCtx`]) that carries a thread
-//! budget, a work-stealing pool handle, and placement hints from the
-//! coordinator down through the solvers to the kernels.
+//! pthreads): data-parallel helpers dispatching into a **persistent
+//! work-stealing worker pool** ([`crate::util::pool`] — resident, core-pinned
+//! workers; `GSYEIG_POOL=scoped` falls back to per-region
+//! [`std::thread::scope`] spawning as an escape hatch and differential-
+//! testing oracle), plus an explicit **execution context** ([`ExecCtx`])
+//! that carries a thread budget, a work-stealing pool handle, and placement
+//! hints from the coordinator down through the solvers to the kernels.
+//!
+//! Every region runs its lane 0 on the calling thread in *both* pool
+//! modes, so a region's lane count — and therefore its arithmetic — is
+//! bitwise identical whichever mode executes it.
 //!
 //! ## ExecCtx
 //!
@@ -44,6 +51,10 @@
 //! * [`set_global_threads`] — programmatic override (takes precedence).
 //! * [`with_threads`] — scoped, thread-local budget for one region; this is
 //!   what [`ExecCtx::install`] uses under the hood.
+//! * `GSYEIG_POOL=persistent|scoped` — region execution mode (default
+//!   `persistent`); [`set_pool_mode`] is the programmatic override.
+//! * `GSYEIG_PIN=0` — disable worker core pinning (see
+//!   [`crate::util::affinity`]).
 //!
 //! ## Offload interplay
 //!
@@ -60,6 +71,8 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::cancel::{CancelStatus, CancelToken};
+use super::pool::Pool;
+pub use super::pool::RegionKind;
 
 static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
 static OVERRIDE_THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -91,6 +104,75 @@ pub fn configured_threads() -> usize {
 /// Override the global thread count (0 clears the override).
 pub fn set_global_threads(n: usize) {
     OVERRIDE_THREADS.store(n, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Region execution mode (persistent pool vs scoped spawn)
+// ---------------------------------------------------------------------------
+
+/// How parallel regions obtain their worker threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Dispatch lanes into the process-lifetime worker pool
+    /// ([`crate::util::pool::Pool::global`]) — the default.
+    Persistent,
+    /// Spawn scoped threads per region (`std::thread::scope`), the
+    /// pre-pool behaviour: escape hatch and differential-testing oracle.
+    Scoped,
+}
+
+static DEFAULT_POOL_MODE: OnceLock<PoolMode> = OnceLock::new();
+/// 0 = no override, 1 = Persistent, 2 = Scoped.
+static OVERRIDE_POOL_MODE: AtomicUsize = AtomicUsize::new(0);
+
+/// The effective region execution mode: [`set_pool_mode`] override if
+/// any, else `GSYEIG_POOL` (`scoped`/`0`/`off` select scoped spawning;
+/// anything else — including unset — selects the persistent pool).
+pub fn pool_mode() -> PoolMode {
+    match OVERRIDE_POOL_MODE.load(Ordering::Relaxed) {
+        1 => PoolMode::Persistent,
+        2 => PoolMode::Scoped,
+        _ => *DEFAULT_POOL_MODE.get_or_init(|| {
+            match std::env::var("GSYEIG_POOL").as_deref().map(str::trim) {
+                Ok("scoped") | Ok("0") | Ok("off") => PoolMode::Scoped,
+                _ => PoolMode::Persistent,
+            }
+        }),
+    }
+}
+
+/// Programmatic override of the region execution mode (`None` restores
+/// the `GSYEIG_POOL` default).  Process-global — benches and the
+/// differential tests use it to exercise both modes in one process.
+pub fn set_pool_mode(mode: Option<PoolMode>) {
+    let v = match mode {
+        None => 0,
+        Some(PoolMode::Persistent) => 1,
+        Some(PoolMode::Scoped) => 2,
+    };
+    OVERRIDE_POOL_MODE.store(v, Ordering::Relaxed);
+}
+
+/// Run `f(0)..f(lanes-1)` as one parallel region under the effective
+/// [`pool_mode`], lane 0 always on the calling thread.  The single entry
+/// point every data-parallel helper, the DAG scheduler, the wavefront
+/// chase and the coordinator worker loop funnel through.
+pub(crate) fn run_region(
+    lanes: usize,
+    placement: Placement,
+    kind: RegionKind,
+    f: &(dyn Fn(usize) + Sync),
+) {
+    if lanes <= 1 {
+        if lanes == 1 {
+            f(0);
+        }
+        return;
+    }
+    match pool_mode() {
+        PoolMode::Persistent => Pool::global().run_region(lanes, placement, kind, f),
+        PoolMode::Scoped => super::pool::scoped_region(lanes, f),
+    }
 }
 
 /// The thread budget effective on the *current* thread: the innermost
@@ -225,8 +307,11 @@ pub fn scratch_f64(len: usize) -> ScratchGuard {
 
 /// Placement hint for distributing work across a ctx's workers.
 ///
-/// A *hint*, not a binding (std has no portable thread-affinity API):
-/// it picks the initial distribution of items over the per-worker deques.
+/// Picks the initial distribution of items over the per-worker deques,
+/// and — under the persistent pool — which *pinned* workers a region
+/// reserves: `Compact` takes the lowest-indexed free workers (adjacent
+/// cores, shared cache), `Spread` takes evenly spaced ones (DESIGN.md
+/// §10; [`crate::util::affinity`] does the core binding).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Placement {
     /// Round-robin items over all workers (default: balances homogeneous
@@ -469,6 +554,11 @@ impl ExecCtx {
         T: Send,
         F: Fn(T) + Sync,
     {
+        if items.is_empty() {
+            // skip the region machinery entirely: no install, no counter
+            // traffic, no pool reservation for zero items
+            return;
+        }
         let len = items.len();
         let t = self.threads().min(len);
         if t <= 1 {
@@ -487,24 +577,20 @@ impl ExecCtx {
         let queues = &queues;
         let f = &f;
         let pool = &self.pool;
-        std::thread::scope(|s| {
-            for w in 0..t {
-                let worker_ctx = self.child(child_budget);
-                s.spawn(move || {
-                    worker_ctx.install(|| {
-                        // every deque empty and no new work is ever
-                        // produced: done
-                        while let Some((item, stolen)) = steal_claim(queues, w) {
-                            if stolen {
-                                pool.steals.fetch_add(1, Ordering::Relaxed);
-                            }
-                            f(item);
-                            pool.executed.fetch_add(1, Ordering::Relaxed);
-                        }
-                    });
-                });
-            }
-        });
+        let worker_ctx = self.child(child_budget);
+        let lane = |w: usize| {
+            worker_ctx.install(|| {
+                // every deque empty and no new work is ever produced: done
+                while let Some((item, stolen)) = steal_claim(queues, w) {
+                    if stolen {
+                        pool.steals.fetch_add(1, Ordering::Relaxed);
+                    }
+                    f(item);
+                    pool.executed.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        };
+        run_region(t, self.placement, RegionKind::Independent, &lane);
     }
 }
 
@@ -565,7 +651,7 @@ pub(crate) fn steal_claim<T>(queues: &[Mutex<VecDeque<T>>], w: usize) -> Option<
 // ---------------------------------------------------------------------------
 
 /// Run `f(i)` for every `i in 0..n`, work-sharing indices over up to
-/// `current_threads()` scoped workers.  Each worker installs a child of
+/// `current_threads()` region lanes.  Each lane installs a child of
 /// the ambient [`ExecCtx`] holding the parent's share of the budget, so
 /// nested parallel calls degrade to serial instead of multiplying threads
 /// and nested stealing activity keeps charging the ambient ctx's pool.
@@ -580,30 +666,25 @@ where
         }
         return;
     }
-    let worker_ctx = ExecCtx::current().split(t);
+    let parent = ExecCtx::current();
+    let worker_ctx = parent.split(t);
     let next = AtomicUsize::new(0);
-    let f = &f;
-    let next = &next;
-    std::thread::scope(|s| {
-        for _ in 0..t {
-            let wctx = worker_ctx.clone();
-            s.spawn(move || {
-                wctx.install(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    f(i);
-                })
-            });
-        }
-    });
+    let lane = |_w: usize| {
+        worker_ctx.install(|| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        });
+    };
+    run_region(t, parent.placement(), RegionKind::Independent, &lane);
 }
 
 /// Consume `items`, calling `f` on each from up to `current_threads()`
-/// scoped workers (static round-robin assignment — deterministic, no
-/// locking).  For ragged task sets prefer [`ExecCtx::parallel_items`],
-/// which work-steals.
+/// region lanes (static round-robin assignment — deterministic, no
+/// cross-lane traffic).  For ragged task sets prefer
+/// [`ExecCtx::parallel_items`], which work-steals.
 pub fn parallel_items<T, F>(items: Vec<T>, f: F)
 where
     T: Send,
@@ -617,34 +698,26 @@ where
         }
         return;
     }
-    let worker_ctx = ExecCtx::current().split(t);
-    let mut buckets: Vec<Vec<T>> = Vec::with_capacity(t);
+    let parent = ExecCtx::current();
+    let worker_ctx = parent.split(t);
+    let mut buckets: Vec<Mutex<Vec<T>>> = Vec::with_capacity(t);
     for _ in 0..t {
-        buckets.push(Vec::with_capacity(len.div_ceil(t)));
+        buckets.push(Mutex::new(Vec::with_capacity(len.div_ceil(t))));
     }
     for (i, it) in items.into_iter().enumerate() {
-        buckets[i % t].push(it);
+        buckets[i % t].get_mut().unwrap().push(it);
     }
-    let f = &f;
-    let worker_ctx = &worker_ctx;
-    std::thread::scope(|s| {
-        for bucket in buckets {
-            if bucket.is_empty() {
-                // defensive: unreachable while t = min(threads, len) (every
-                // round-robin bucket then gets ≥ 1 item), but a future
-                // placement-driven worker count must not spawn for nothing
-                continue;
+    let lane = |w: usize| {
+        // lane w owns bucket w outright; the mutex only ferries the
+        // bucket into the lane (taken exactly once, uncontended)
+        let bucket = std::mem::take(&mut *buckets[w].lock().unwrap());
+        worker_ctx.install(|| {
+            for it in bucket {
+                f(it);
             }
-            let wctx = worker_ctx.clone();
-            s.spawn(move || {
-                wctx.install(|| {
-                    for it in bucket {
-                        f(it);
-                    }
-                })
-            });
-        }
-    });
+        });
+    };
+    run_region(t, parent.placement(), RegionKind::Independent, &lane);
 }
 
 /// Split `data` into contiguous chunks of `chunk` elements (last one
@@ -775,6 +848,31 @@ mod tests {
         let mut empty: Vec<f64> = vec![];
         parallel_chunks(&mut empty, 4, |_, _| panic!("must not run"));
         ExecCtx::with_threads(4).parallel_items(Vec::<usize>::new(), |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn empty_items_skip_region_machinery_entirely() {
+        // zero items must not install a ctx, reserve workers, or touch
+        // the executed counter (the old path still charged the install)
+        let ctx = ExecCtx::with_threads(4);
+        ctx.parallel_items(Vec::<usize>::new(), |_| panic!("must not run"));
+        assert_eq!(ctx.steal_stats(), StealStats::default());
+    }
+
+    #[test]
+    fn pool_mode_override_and_differential_agreement() {
+        // single test owns OVERRIDE_POOL_MODE (process-global) so the
+        // override/assert pairs cannot race a sibling test
+        let run = |mode: PoolMode| {
+            set_pool_mode(Some(mode));
+            assert_eq!(pool_mode(), mode);
+            let bits = with_threads(4, || parallel_map(37, |i| (i as f64).sqrt().to_bits()));
+            set_pool_mode(None);
+            bits
+        };
+        let persistent = run(PoolMode::Persistent);
+        let scoped = run(PoolMode::Scoped);
+        assert_eq!(persistent, scoped, "both modes must produce identical bits");
     }
 
     #[test]

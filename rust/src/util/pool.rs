@@ -1,0 +1,762 @@
+//! Process-lifetime work-stealing worker pool (DESIGN.md §10).
+//!
+//! Every parallel region used to pay `std::thread::scope` spawn/join on
+//! entry — a fixed tax that dominates exactly the small/medium stages
+//! (TT3, TD2 subproblems, SCF-loop jobs) where the paper's Table 4 shows
+//! multi-threading must still win.  This module keeps workers resident:
+//! each has a deque (`Mutex<VecDeque<LaneTask>>` + condvar) it parks on,
+//! and a region entry *reserves* parked workers, pushes one lane task per
+//! worker, runs lane 0 on the calling thread, and blocks on a completion
+//! latch until every lane has finished.  Workers pin themselves to cores
+//! from the process's inherited affinity mask at spawn
+//! ([`crate::util::affinity`], `GSYEIG_PIN=0` disables), and because they
+//! are process-lifetime threads, the thread-local `scratch_f64` arenas
+//! they carry (GEMM pack panels) live for the process instead of being
+//! re-faulted every region.
+//!
+//! ## Region protocol
+//!
+//! * **Reserve**: pop `lanes-1` worker ids from the free list, growing the
+//!   pool on demand up to [`MAX_RESIDENT`].  [`Placement::Compact`] takes
+//!   the lowest-indexed free workers (adjacent pinned cores, cache-warm);
+//!   [`Placement::Spread`] takes evenly spaced ones (spreads memory
+//!   traffic across the allowed cores).
+//! * **Dispatch**: push lane tasks round-robin over the reserved workers
+//!   and run lane 0 inline on the caller — the caller participates in
+//!   *both* pool modes, so lane counts (and therefore arithmetic) are
+//!   identical under `GSYEIG_POOL=persistent` and `=scoped`.
+//! * **Complete**: every lane decrements the region latch under the
+//!   region's own mutex as its very last touch of region memory, so the
+//!   caller's wakeup doubles as the proof that no lane still borrows the
+//!   region (see the `envelope` module for the full invariant list).
+//! * **Free**: a worker that drains its deque makes one steal sweep over
+//!   sibling deques (picks up co-queued lanes when the pool is at its
+//!   resident cap), then re-registers in the free list and parks.
+//!
+//! ## RegionKind
+//!
+//! [`RegionKind::Independent`] lanes tolerate serialization — any lane
+//! may run to completion before another starts (self-scheduling loops,
+//! steal-claim loops, DAG worker loops).  [`RegionKind::LockStep`] lanes
+//! spin-wait on each other (the TT2 wavefront chase) and therefore
+//! *deadlock* if serialized: such a region demands one dedicated worker
+//! per lane and falls back to scoped spawning whenever the pool cannot
+//! dedicate that many, so the lock-step contract never meets a shared
+//! queue.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::thread::JoinHandle;
+
+use super::affinity;
+use super::parallel::Placement;
+use crate::obs::metrics;
+
+use envelope::LaneTask;
+
+/// Hard ceiling on resident workers, process-wide — a backstop against
+/// runaway nested growth, far above any sane `GSYEIG_THREADS`.  Regions
+/// that reserve beyond it share workers (Independent) or fall back to
+/// scoped spawning (LockStep).
+pub const MAX_RESIDENT: usize = 256;
+
+/// How a region's lanes may be scheduled relative to each other.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegionKind {
+    /// Lanes never wait on each other: safe to serialize, share workers,
+    /// or steal between deques.
+    Independent,
+    /// Lanes spin-wait on sibling progress (wavefront pipelines): every
+    /// lane needs its own concurrently running worker, or the region must
+    /// use scoped threads.
+    LockStep,
+}
+
+/// The sealed lifetime-erasure layer: a borrowing `&dyn Fn(usize)` region
+/// body is erased to `'static` so lane tasks can sit in process-lifetime
+/// deques, and a latch protocol re-bounds that lifetime in reality.
+///
+/// # Invariants (DESIGN.md §10)
+///
+/// 1. **The region outlives every lane.**  [`enter`] keeps the
+///    [`RegionCore`] on the entering thread's stack and only returns
+///    after `remaining` hits zero; a lane's decrement is performed while
+///    holding `core.lock` *after* the lane body has returned, and the
+///    waiting caller re-acquires that same mutex before re-checking — so
+///    when the caller proceeds, every lane has already released its last
+///    reference into region memory.  No lane touches the core after its
+///    decrement's unlock.
+/// 2. **The erased closure is only called between `enter`'s transmute and
+///    its return**, which is inside the caller's borrow of `f` — the
+///    public `Fn(usize) + Sync` bound (with ordinary lifetimes) is what
+///    makes the borrows inside `f` valid for that window.
+/// 3. **Lane bodies never unwind into the pool**: `run` catches panics,
+///    parks the first payload in the core, and the caller re-raises it
+///    after the latch — matching `std::thread::scope` semantics while the
+///    worker thread survives.
+mod envelope {
+    use std::any::Any;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Condvar, Mutex};
+
+    /// Shared state of one in-flight region; lives on the entering
+    /// thread's stack for exactly the duration of [`enter`].
+    pub(super) struct RegionCore {
+        /// The region body, lifetime-erased (invariant 2).
+        f: &'static (dyn Fn(usize) + Sync),
+        /// Lanes that have not yet performed their final decrement.
+        remaining: AtomicUsize,
+        /// The latch mutex: lanes decrement under it, the caller waits
+        /// under it (invariant 1).
+        lock: Mutex<()>,
+        cv: Condvar,
+        /// First panic payload out of any lane (invariant 3).
+        panic: Mutex<Option<Box<dyn Any + Send>>>,
+    }
+
+    /// One dispatched lane of a region, safe to move into a worker deque.
+    pub(super) struct LaneTask {
+        core: &'static RegionCore,
+        lane: usize,
+    }
+
+    impl LaneTask {
+        /// Execute the lane body, park any panic, then perform the final
+        /// latch decrement — the lane's last touch of region memory.
+        pub(super) fn run(self) {
+            let core = self.core;
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (core.f)(self.lane))) {
+                let mut slot = core.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let _held = core.lock.lock().unwrap();
+            core.remaining.fetch_sub(1, Ordering::Release);
+            core.cv.notify_all();
+        }
+    }
+
+    /// Run `f(0)..f(lanes-1)` with lane 0 on the calling thread and lanes
+    /// `1..` handed to `dispatch`, which must arrange for each task to be
+    /// executed exactly once (and must not panic).  Blocks until every
+    /// lane has finished; re-raises the first lane panic.
+    pub(super) fn enter(
+        lanes: usize,
+        f: &(dyn Fn(usize) + Sync),
+        dispatch: impl FnOnce(Vec<LaneTask>),
+    ) {
+        // SAFETY: lifetime erasure per invariants 1 and 2 above — the
+        // wait below re-bounds the fake 'static to this stack frame.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let core = RegionCore {
+            f: f_static,
+            remaining: AtomicUsize::new(lanes),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            panic: Mutex::new(None),
+        };
+        // SAFETY: unbounded-lifetime reborrow of a stack value; bounded
+        // in reality by the latch wait below (invariant 1).
+        let core_ref: &'static RegionCore = unsafe { &*std::ptr::addr_of!(core) };
+        let tasks: Vec<LaneTask> =
+            (1..lanes).map(|lane| LaneTask { core: core_ref, lane }).collect();
+        dispatch(tasks);
+        // the region caller is always lane 0, in both pool modes
+        LaneTask { core: core_ref, lane: 0 }.run();
+        let mut held = core.lock.lock().unwrap();
+        while core.remaining.load(Ordering::Acquire) != 0 {
+            held = core.cv.wait(held).unwrap();
+        }
+        drop(held);
+        if let Some(payload) = core.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// One resident worker's mailbox.
+struct WorkerSlot {
+    deque: Mutex<VecDeque<LaneTask>>,
+    cv: Condvar,
+    /// Parked *and* registered in the pool free list.  `false` while
+    /// reserved or running; flipped by whoever performs the matching free
+    /// list insert, so a worker id is registered at most once.
+    free: AtomicBool,
+}
+
+impl WorkerSlot {
+    fn new() -> Arc<WorkerSlot> {
+        Arc::new(WorkerSlot {
+            deque: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            free: AtomicBool::new(false),
+        })
+    }
+}
+
+struct PoolShared {
+    /// All resident workers, index-stable (grow-only until shutdown).
+    slots: RwLock<Vec<Arc<WorkerSlot>>>,
+    /// Ids of parked workers available for reservation.
+    freelist: Mutex<Vec<usize>>,
+    shutdown: AtomicBool,
+    /// Mirror counters into the global metrics registry (`pool.*`)?
+    /// True only for the process-global pool, so test-local pools do not
+    /// pollute process metrics.
+    mirror: bool,
+    /// Pin workers to cores from this (sorted) allowed-CPU snapshot.
+    pin: bool,
+    cores: Vec<usize>,
+    regions: AtomicU64,
+    scoped_fallbacks: AtomicU64,
+    parks: AtomicU64,
+    unparks: AtomicU64,
+    steals: AtomicU64,
+    pinned: AtomicU64,
+}
+
+impl PoolShared {
+    /// One sweep over sibling deques, stealing from the back of the first
+    /// non-empty one — same victim order as `steal_claim`.
+    fn steal_from_siblings(&self, thief: usize) -> Option<LaneTask> {
+        let slots: Vec<Arc<WorkerSlot>> = self.slots.read().unwrap().to_vec();
+        let n = slots.len();
+        for off in 1..n {
+            let victim = (thief + off) % n;
+            if let Some(task) = slots[victim].deque.lock().unwrap().pop_back() {
+                return Some(task);
+            }
+        }
+        None
+    }
+}
+
+/// Counter snapshot of a [`Pool`] (authoritative per-pool values; the
+/// global pool additionally mirrors them as `pool.*` registry metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Workers currently resident (spawned and not shut down).
+    pub resident: usize,
+    /// Workers that successfully pinned to a core at spawn.
+    pub pinned: u64,
+    /// Regions dispatched through the resident pool.
+    pub regions: u64,
+    /// Lock-step regions that fell back to scoped spawning.
+    pub scoped_fallbacks: u64,
+    /// Times a worker parked on its deque.
+    pub parks: u64,
+    /// Times a parked worker was woken for work (or shutdown).
+    pub unparks: u64,
+    /// Lane tasks stolen from a sibling worker's deque.
+    pub steals: u64,
+}
+
+/// A persistent worker pool.  [`Pool::global`] is the process-wide
+/// instance every region dispatches into by default; tests build private
+/// pools to exercise growth, panics and shutdown in isolation.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    max_resident: usize,
+}
+
+impl Pool {
+    /// A private pool with the default resident cap (no metrics mirror).
+    pub fn new() -> Pool {
+        Pool::with_config(MAX_RESIDENT, false)
+    }
+
+    /// A private pool holding at most `max_resident` workers.
+    pub fn with_capacity(max_resident: usize) -> Pool {
+        Pool::with_config(max_resident, false)
+    }
+
+    fn with_config(max_resident: usize, mirror: bool) -> Pool {
+        Pool {
+            shared: Arc::new(PoolShared {
+                slots: RwLock::new(Vec::new()),
+                freelist: Mutex::new(Vec::new()),
+                shutdown: AtomicBool::new(false),
+                mirror,
+                pin: affinity::pinning_enabled(),
+                cores: affinity::allowed_cpus(),
+                regions: AtomicU64::new(0),
+                scoped_fallbacks: AtomicU64::new(0),
+                parks: AtomicU64::new(0),
+                unparks: AtomicU64::new(0),
+                steals: AtomicU64::new(0),
+                pinned: AtomicU64::new(0),
+            }),
+            handles: Mutex::new(Vec::new()),
+            max_resident,
+        }
+    }
+
+    /// The process-global pool.  Never dropped: its workers (and their
+    /// thread-local scratch arenas) live until process exit, which is
+    /// precisely the point.
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(|| Pool::with_config(MAX_RESIDENT, true))
+    }
+
+    /// Workers currently resident.
+    pub fn resident_workers(&self) -> usize {
+        self.shared.slots.read().unwrap().len()
+    }
+
+    /// Authoritative counter snapshot.
+    pub fn stats(&self) -> PoolStats {
+        let s = &self.shared;
+        PoolStats {
+            resident: self.resident_workers(),
+            pinned: s.pinned.load(Ordering::Relaxed),
+            regions: s.regions.load(Ordering::Relaxed),
+            scoped_fallbacks: s.scoped_fallbacks.load(Ordering::Relaxed),
+            parks: s.parks.load(Ordering::Relaxed),
+            unparks: s.unparks.load(Ordering::Relaxed),
+            steals: s.steals.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `f(0)..f(lanes-1)` concurrently, lane 0 on the calling thread
+    /// (the [`RegionKind::Independent`] contract — lanes must not wait on
+    /// each other).  Blocks until all lanes finish; re-raises the first
+    /// lane panic on the caller while the workers survive.
+    pub fn run(&self, lanes: usize, f: impl Fn(usize) + Sync) {
+        self.run_region(lanes, Placement::Spread, RegionKind::Independent, &f);
+    }
+
+    /// Full-control region entry; see the module docs for the protocol.
+    pub fn run_region(
+        &self,
+        lanes: usize,
+        placement: Placement,
+        kind: RegionKind,
+        f: &(dyn Fn(usize) + Sync),
+    ) {
+        if lanes <= 1 {
+            if lanes == 1 {
+                f(0);
+            }
+            return;
+        }
+        let want = lanes - 1;
+        let picked = self.reserve(want, placement);
+        if kind == RegionKind::LockStep && picked.len() < want {
+            // a shared or serialized lane would deadlock the lock-step
+            // spin-waits: give the workers back and spawn scoped threads
+            self.release(&picked);
+            self.shared.scoped_fallbacks.fetch_add(1, Ordering::Relaxed);
+            if self.shared.mirror {
+                metrics::pool_metrics().scoped_fallbacks.incr();
+            }
+            scoped_region(lanes, f);
+            return;
+        }
+        self.shared.regions.fetch_add(1, Ordering::Relaxed);
+        if self.shared.mirror {
+            metrics::pool_metrics().regions.incr();
+        }
+        if picked.is_empty() {
+            // resident cap exhausted: Independent lanes tolerate full
+            // serialization, so run them in lane order on the caller
+            for lane in 0..lanes {
+                f(lane);
+            }
+            return;
+        }
+        let slots: Vec<Arc<WorkerSlot>> = {
+            let all = self.shared.slots.read().unwrap();
+            picked.iter().map(|&i| Arc::clone(&all[i])).collect()
+        };
+        envelope::enter(lanes, f, |tasks| {
+            for (k, task) in tasks.into_iter().enumerate() {
+                let slot = &slots[k % slots.len()];
+                let mut q = slot.deque.lock().unwrap();
+                q.push_back(task);
+                slot.cv.notify_one();
+            }
+        });
+    }
+
+    /// Pop up to `want` parked workers from the free list (placement
+    /// orders the choice), growing the pool for any deficit up to the
+    /// resident cap.  Returned workers have `free == false` and are
+    /// guaranteed not to re-register until they have drained a pushed
+    /// batch — freshly grown workers park *without* registering until
+    /// their first task arrives.
+    fn reserve(&self, want: usize, placement: Placement) -> Vec<usize> {
+        let mut picked = {
+            let mut fl = self.shared.freelist.lock().unwrap();
+            fl.sort_unstable();
+            let take = want.min(fl.len());
+            let chosen: Vec<usize> = match placement {
+                // lowest-indexed workers = adjacent pinned cores
+                Placement::Compact => fl.drain(..take).collect(),
+                // evenly spaced over the sorted free list; drain from the
+                // highest position down so earlier indices stay valid
+                Placement::Spread => {
+                    let len = fl.len();
+                    let mut out = Vec::with_capacity(take);
+                    for j in (0..take).rev() {
+                        out.push(fl.remove(j * len / take.max(1)));
+                    }
+                    out.reverse();
+                    out
+                }
+            };
+            let all = self.shared.slots.read().unwrap();
+            for &i in &chosen {
+                all[i].free.store(false, Ordering::Release);
+            }
+            chosen
+        };
+        if picked.len() < want {
+            picked.extend(self.grow(want - picked.len()));
+        }
+        picked
+    }
+
+    /// Spawn up to `deficit` new workers (bounded by the resident cap) and
+    /// return their ids, already reserved.
+    fn grow(&self, deficit: usize) -> Vec<usize> {
+        let mut spawned = Vec::new();
+        let mut all = self.shared.slots.write().unwrap();
+        let room = self.max_resident.saturating_sub(all.len());
+        let mut handles = self.handles.lock().unwrap();
+        for _ in 0..deficit.min(room) {
+            let idx = all.len();
+            let slot = WorkerSlot::new();
+            all.push(Arc::clone(&slot));
+            let shared = Arc::clone(&self.shared);
+            let spawn = std::thread::Builder::new()
+                .name(format!("gsyeig-pool-{idx}"))
+                .spawn(move || worker_loop(shared, slot, idx));
+            match spawn {
+                Ok(h) => {
+                    handles.push(h);
+                    spawned.push(idx);
+                }
+                Err(_) => {
+                    // keep the slot (index stability) but let it idle
+                    // forever un-reserved; extremely rare (EAGAIN)
+                    all.pop();
+                    break;
+                }
+            }
+        }
+        let resident = all.len();
+        drop(all);
+        drop(handles);
+        if self.shared.mirror {
+            metrics::pool_metrics().resident_workers.set(resident as i64);
+        }
+        spawned
+    }
+
+    /// Return reserved-but-unused workers to the free list (the lock-step
+    /// fallback path).  Whoever flips `free` false→true does the insert.
+    fn release(&self, picked: &[usize]) {
+        if picked.is_empty() {
+            return;
+        }
+        let mut fl = self.shared.freelist.lock().unwrap();
+        let all = self.shared.slots.read().unwrap();
+        for &i in picked {
+            if !all[i].free.swap(true, Ordering::AcqRel) {
+                fl.push(i);
+            }
+        }
+    }
+
+    /// Stop and join every worker.  Queued lanes still drain first (a
+    /// worker re-checks its deque before exiting).
+    fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        let slots: Vec<Arc<WorkerSlot>> = self.shared.slots.read().unwrap().to_vec();
+        for slot in &slots {
+            // take the deque lock so the store above cannot land between
+            // a worker's emptiness check and its wait (no lost wakeup)
+            let _held = slot.deque.lock().unwrap();
+            slot.cv.notify_all();
+        }
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Pool::new()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Block on `slot.cv` until the deque is non-empty or the pool shuts
+/// down.  The caller must *not* hold the deque lock.
+fn wait_for_work(shared: &PoolShared, slot: &WorkerSlot) {
+    let mut q = slot.deque.lock().unwrap();
+    while q.is_empty() && !shared.shutdown.load(Ordering::Acquire) {
+        q = slot.cv.wait(q).unwrap();
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, slot: Arc<WorkerSlot>, idx: usize) {
+    if shared.pin && !shared.cores.is_empty() {
+        let core = shared.cores[idx % shared.cores.len()];
+        if affinity::pin_current_thread(core) {
+            shared.pinned.fetch_add(1, Ordering::Relaxed);
+            if shared.mirror {
+                metrics::pool_metrics().pinned_workers.add(1);
+            }
+        }
+    }
+    // Born reserved: the grower already handed this id to a region, so
+    // park for the first push (or an early release / shutdown) WITHOUT
+    // self-registering — registering here could hand this worker to a
+    // second region before the first one's lane arrives, which would
+    // queue a foreign lane ahead of a lock-step lane.
+    wait_for_work(&shared, &slot);
+    loop {
+        // drain own deque (front = FIFO lane order)
+        loop {
+            let task = slot.deque.lock().unwrap().pop_front();
+            match task {
+                Some(task) => task.run(),
+                None => break,
+            }
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // help siblings before parking: when the pool is at its cap,
+        // regions queue several lanes per worker, and a worker that
+        // finishes early picks the extras up here
+        if let Some(task) = shared.steal_from_siblings(idx) {
+            shared.steals.fetch_add(1, Ordering::Relaxed);
+            if shared.mirror {
+                metrics::pool_metrics().steals.incr();
+            }
+            task.run();
+            continue;
+        }
+        // park: register in the free list exactly once, then wait.  A
+        // reservation popping this id flips `free` back before pushing,
+        // and pushes happen under the deque lock this thread waits on,
+        // so a wakeup with an empty deque just re-parks harmlessly.
+        {
+            let mut fl = shared.freelist.lock().unwrap();
+            if !slot.free.swap(true, Ordering::AcqRel) {
+                fl.push(idx);
+            }
+        }
+        shared.parks.fetch_add(1, Ordering::Relaxed);
+        if shared.mirror {
+            metrics::pool_metrics().parks.incr();
+        }
+        wait_for_work(&shared, &slot);
+        shared.unparks.fetch_add(1, Ordering::Relaxed);
+        if shared.mirror {
+            metrics::pool_metrics().unparks.incr();
+        }
+    }
+}
+
+/// The `GSYEIG_POOL=scoped` escape hatch and lock-step fallback: plain
+/// `std::thread::scope` spawn/join, with the caller running lane 0 so
+/// lane counts match the persistent path exactly.
+pub(crate) fn scoped_region(lanes: usize, f: &(dyn Fn(usize) + Sync)) {
+    if lanes <= 1 {
+        if lanes == 1 {
+            f(0);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for lane in 1..lanes {
+            scope.spawn(move || f(lane));
+        }
+        f(0);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn region_runs_every_lane_once_with_lane0_on_caller() {
+        let pool = Pool::new();
+        let hits: Vec<AtomicUsize> = (0..6).map(|_| AtomicUsize::new(0)).collect();
+        let caller = std::thread::current().id();
+        let lane0_thread = Mutex::new(None);
+        pool.run(6, |lane| {
+            hits[lane].fetch_add(1, Ordering::SeqCst);
+            if lane == 0 {
+                *lane0_thread.lock().unwrap() = Some(std::thread::current().id());
+            }
+        });
+        for (lane, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "lane {lane}");
+        }
+        assert_eq!(*lane0_thread.lock().unwrap(), Some(caller));
+        assert_eq!(pool.resident_workers(), 5, "lanes-1 workers grown on demand");
+    }
+
+    #[test]
+    fn workers_are_reused_across_regions() {
+        let pool = Pool::new();
+        for _ in 0..10 {
+            let sum = AtomicUsize::new(0);
+            pool.run(4, |lane| {
+                sum.fetch_add(lane + 1, Ordering::SeqCst);
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), 10);
+        }
+        assert_eq!(pool.resident_workers(), 3, "no new workers after the first region");
+        assert_eq!(pool.stats().regions, 10);
+    }
+
+    #[test]
+    fn borrowed_stack_state_is_visible_after_the_region() {
+        // the whole point of the envelope: lanes mutate caller-stack data
+        let pool = Pool::new();
+        let mut out = vec![0usize; 64];
+        {
+            let slots: Vec<Mutex<&mut usize>> = out.iter_mut().map(Mutex::new).collect();
+            pool.run(4, |lane| {
+                for (i, slot) in slots.iter().enumerate() {
+                    if i % 4 == lane {
+                        **slot.lock().unwrap() = i * i;
+                    }
+                }
+            });
+        }
+        let expect: Vec<usize> = (0..64).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn panic_propagates_but_pool_survives() {
+        let pool = Pool::new();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, |lane| {
+                if lane == 2 {
+                    panic!("lane 2 exploded");
+                }
+            });
+        }));
+        assert!(err.is_err(), "the lane panic must reach the region caller");
+        let resident = pool.resident_workers();
+        // the pool still works afterwards, with the same workers
+        let sum = AtomicUsize::new(0);
+        pool.run(4, |lane| {
+            sum.fetch_add(lane, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 6);
+        assert_eq!(pool.resident_workers(), resident);
+    }
+
+    #[test]
+    fn lockstep_lanes_really_run_concurrently() {
+        // a 3-lane rendezvous barrier: completes only if all lanes run at
+        // once — exactly what RegionKind::LockStep must guarantee
+        let pool = Pool::new();
+        let arrived = AtomicUsize::new(0);
+        let body = |_lane: usize| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            while arrived.load(Ordering::SeqCst) < 3 {
+                std::thread::yield_now();
+            }
+        };
+        pool.run_region(3, Placement::Spread, RegionKind::LockStep, &body);
+        assert_eq!(arrived.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn lockstep_falls_back_to_scoped_when_pool_cannot_dedicate() {
+        let pool = Pool::with_capacity(1);
+        let arrived = AtomicUsize::new(0);
+        let body = |_lane: usize| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            while arrived.load(Ordering::SeqCst) < 4 {
+                std::thread::yield_now();
+            }
+        };
+        pool.run_region(4, Placement::Spread, RegionKind::LockStep, &body);
+        assert_eq!(arrived.load(Ordering::SeqCst), 4);
+        assert!(pool.stats().scoped_fallbacks >= 1);
+        assert!(pool.resident_workers() <= 1);
+    }
+
+    #[test]
+    fn capped_pool_still_completes_independent_regions() {
+        let pool = Pool::with_capacity(2);
+        let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        let body = |lane: usize| {
+            hits[lane].fetch_add(1, Ordering::SeqCst);
+        };
+        // 8 lanes over ≤2 workers + the caller: lanes co-queue and drain
+        pool.run_region(8, Placement::Compact, RegionKind::Independent, &body);
+        for (lane, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "lane {lane}");
+        }
+        assert!(pool.resident_workers() <= 2);
+    }
+
+    #[test]
+    fn zero_capacity_pool_serializes_in_lane_order() {
+        let pool = Pool::with_capacity(0);
+        let log = Mutex::new(Vec::new());
+        pool.run(4, |lane| log.lock().unwrap().push(lane));
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(pool.resident_workers(), 0);
+    }
+
+    #[test]
+    fn drop_joins_workers_without_hanging() {
+        let pool = Pool::new();
+        pool.run(6, |_| {});
+        assert_eq!(pool.resident_workers(), 5);
+        drop(pool); // must join five parked workers promptly
+    }
+
+    #[test]
+    fn scoped_region_matches_lane_contract() {
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        let caller = std::thread::current().id();
+        let lane0 = Mutex::new(None);
+        let body = |lane: usize| {
+            hits[lane].fetch_add(1, Ordering::SeqCst);
+            if lane == 0 {
+                *lane0.lock().unwrap() = Some(std::thread::current().id());
+            }
+        };
+        scoped_region(5, &body);
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+        assert_eq!(*lane0.lock().unwrap(), Some(caller));
+    }
+
+    #[test]
+    fn global_pool_exists_and_mirrors_residency() {
+        let pool = Pool::global();
+        pool.run(2, |_| {});
+        assert!(pool.resident_workers() >= 1);
+        let reg = metrics::Registry::global();
+        assert!(reg.gauge_value("pool.resident_workers") >= 1);
+    }
+}

@@ -17,6 +17,10 @@
 //! * `run_graph` — a ragged DAG under the work-stealing scheduler reports
 //!   nonzero steals and beats the wall-clock of the old static round-robin
 //!   assignment (modelled from the same per-task durations).
+//! * persistent pool (DESIGN.md §10) — `GSYEIG_POOL=persistent|scoped`
+//!   produce **bitwise** identical results at 1, 2, 8 threads, nested
+//!   regions split budgets the same way, a worker panic leaves the pool
+//!   serviceable, and dropping a pool joins its workers without hanging.
 
 use gsyeig::lapack::potrf::dpotrf_upper;
 use gsyeig::lapack::stebz::dstebz;
@@ -274,6 +278,103 @@ fn ragged_dag_steals_and_beats_round_robin() {
         stats.parallel_efficiency(),
         rr_efficiency
     );
+}
+
+#[test]
+fn pool_modes_agree_bitwise_and_split_nested_budgets() {
+    use gsyeig::util::parallel::{current_threads, parallel_for, set_pool_mode, PoolMode};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // This test owns the process-global pool-mode override for this test
+    // binary (no sibling touches it).  Flipping the mode while siblings
+    // run is harmless: both modes run lane 0 on the caller, so lane
+    // counts — and therefore arithmetic — are identical either way.
+    let n = 64;
+    let w = 4;
+    let mut rng = Rng::new(0x9D0C);
+    let a0 = Matrix::randn_sym(n, &mut rng);
+    let mut band = a0.clone();
+    let mut q0 = Matrix::identity(n);
+    syrdb(&mut band, w, Some(&mut q0));
+    let tri = random_tridiag(&mut rng, 48);
+
+    // digest = bisection eigenvalue bits (Independent regions) + wavefront
+    // chase d/e bits and rotation count (LockStep regions)
+    let digest = |threads: usize| -> (Vec<u64>, Vec<u64>, usize) {
+        let evs: Vec<u64> =
+            with_threads(threads, || dstebz(&tri, 0, 20)).iter().map(|v| v.to_bits()).collect();
+        let mut a = band.clone();
+        let mut q = q0.clone();
+        let (t, rot) = sbrdt_ctx(&mut a, w, Some(&mut q), &ExecCtx::with_threads(threads));
+        let mut chase: Vec<u64> = t.d.iter().map(|v| v.to_bits()).collect();
+        chase.extend(t.e.iter().map(|v| v.to_bits()));
+        (evs, chase, rot)
+    };
+
+    set_pool_mode(Some(PoolMode::Scoped));
+    let base = digest(1);
+    for mode in [PoolMode::Scoped, PoolMode::Persistent] {
+        set_pool_mode(Some(mode));
+        for threads in THREAD_COUNTS {
+            assert_eq!(digest(threads), base, "{mode:?} at {threads} threads");
+        }
+    }
+
+    // nested regions under the persistent pool split — not multiply — the
+    // budget: 8 threads over a 2-lane region leaves each lane exactly 4
+    set_pool_mode(Some(PoolMode::Persistent));
+    let seen = AtomicUsize::new(0);
+    with_threads(8, || {
+        parallel_for(2, |_| {
+            seen.fetch_max(current_threads(), Ordering::Relaxed);
+        });
+    });
+    set_pool_mode(None);
+    assert_eq!(seen.load(Ordering::Relaxed), 4, "nested budget under persistent pool");
+}
+
+#[test]
+fn private_pool_survives_a_panicking_lane() {
+    use gsyeig::util::pool::Pool;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let pool = Pool::with_capacity(4);
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(4, |lane| {
+            if lane == 2 {
+                panic!("lane 2 detonates");
+            }
+        });
+    }))
+    .expect_err("lane panic must propagate to the region caller");
+    let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+    assert_eq!(msg, "lane 2 detonates");
+
+    // the pool stays serviceable: same workers, full region completes
+    let resident = pool.resident_workers();
+    let hits = AtomicUsize::new(0);
+    pool.run(4, |_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 4);
+    assert_eq!(pool.resident_workers(), resident, "panic must not kill workers");
+}
+
+#[test]
+fn dropping_a_private_pool_joins_without_hanging() {
+    use gsyeig::util::pool::Pool;
+
+    // run the drop on a helper thread so a regression (hung join) fails
+    // the test via the timeout instead of wedging the whole test binary
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let pool = Pool::with_capacity(3);
+        pool.run(3, |_| {});
+        drop(pool);
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(std::time::Duration::from_secs(60))
+        .expect("pool drop did not join its workers within 60s");
 }
 
 #[test]
